@@ -1,0 +1,69 @@
+"""Assemble the EXPERIMENTS.md roofline table from experiments/dryrun/*.json.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report [--mesh 16x16] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ORDER_SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh_filter=None):
+    recs = []
+    base = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+    for fn in glob.glob(os.path.join(base, "*.json")):
+        with open(fn) as f:
+            r = json.load(f)
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        recs.append(r)
+    recs.sort(key=lambda r: (r["arch"], ORDER_SHAPES.index(r["shape"])
+                             if r["shape"] in ORDER_SHAPES else 9, r["mesh"]))
+    return recs
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    recs = load(args.mesh)
+    if args.md:
+        print("| arch | shape | mesh | t_compute | t_memory | t_collective |"
+              " bottleneck | useful | HBM/chip |")
+        print("|---|---|---|---|---|---|---|---|---|")
+    else:
+        print("arch,shape,mesh,t_compute_s,t_memory_s,t_collective_s,"
+              "bottleneck,useful_ratio,hbm_per_chip_gb,flops_per_chip,"
+              "coll_bytes_per_chip")
+    for r in recs:
+        ro = r["roofline"]
+        hbm = (r["memory_analysis"].get("argument_size_in_bytes", 0)
+               + r["memory_analysis"].get("temp_size_in_bytes", 0)) / 2**30
+        if args.md:
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} |"
+                  f" {fmt_s(ro['t_compute'])} | {fmt_s(ro['t_memory'])} |"
+                  f" {fmt_s(ro['t_collective'])} | {ro['bottleneck']} |"
+                  f" {ro['useful_ratio']:.2f} | {hbm:.1f}GiB |")
+        else:
+            print(f"{r['arch']},{r['shape']},{r['mesh']},"
+                  f"{ro['t_compute']:.4e},{ro['t_memory']:.4e},"
+                  f"{ro['t_collective']:.4e},{ro['bottleneck']},"
+                  f"{ro['useful_ratio']:.3f},{hbm:.1f},"
+                  f"{ro['hlo_flops']:.3e},{ro['collective_bytes']:.3e}")
+
+
+if __name__ == "__main__":
+    main()

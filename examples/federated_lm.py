@@ -1,0 +1,72 @@
+"""End-to-end driver: federated training of a transformer LM with the
+pod-native FL train step (Alg. 2 + Eq. 2 as ONE jitted program).
+
+Trains a ~10M-param qwen-family model for a few hundred FedAvg rounds on
+synthetic federated token shards, with a stale participant in every round —
+exercising the same code path the multi-pod dry-run lowers at scale.
+
+  PYTHONPATH=src python examples/federated_lm.py [--rounds 200]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_pytree
+from repro.data import federated_token_shards
+from repro.launch.train import make_fl_train_step
+from repro.models import ModelConfig, init_params
+from repro.models.transformer import lm_loss
+
+CFG = ModelConfig(arch_id="fed-lm-10m", n_layers=4, d_model=256, n_heads=8,
+                  n_kv_heads=4, d_ff=1024, vocab_size=2048, qkv_bias=True,
+                  param_dtype=jnp.float32)
+P_COHORT, LOCAL_B, SEQ = 8, 4, 64
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=200)
+    ap.add_argument("--stale-every", type=int, default=3,
+                    help="every k-th round, 2 participants report stale")
+    args = ap.parse_args()
+
+    key = jax.random.PRNGKey(0)
+    params = init_params(CFG, key)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"model: {n_params/1e6:.1f}M params, cohort={P_COHORT}x{LOCAL_B}x{SEQ}")
+
+    shards = federated_token_shards(CFG.vocab_size, 64, 128, SEQ, skew=0.3)
+    rng = np.random.default_rng(0)
+    step = jax.jit(make_fl_train_step(CFG, local_lr=0.05, rule="relay",
+                                      local_steps=2))
+    eval_batch = {"tokens": shards[0]["tokens"][:16],
+                  "labels": shards[0]["labels"][:16]}
+
+    t0 = time.time()
+    for r in range(args.rounds):
+        lids = rng.choice(len(shards), P_COHORT, replace=False)
+        toks = np.stack([shards[l]["tokens"][
+            rng.integers(0, len(shards[l]["tokens"]), LOCAL_B)] for l in lids])
+        labs = np.stack([shards[l]["labels"][
+            rng.integers(0, len(shards[l]["labels"]), LOCAL_B)] for l in lids])
+        batch = {"tokens": toks, "labels": labs}
+        stale = (r % args.stale_every == 0)
+        fresh = np.ones(P_COHORT, bool)
+        tau = np.zeros(P_COHORT, np.int32)
+        if stale:
+            fresh[-2:] = False
+            tau[-2:] = rng.integers(1, 4, 2)
+        params, m = step(params, batch, jnp.asarray(fresh), jnp.asarray(tau))
+        if (r + 1) % 25 == 0:
+            ev = float(lm_loss(CFG, params, eval_batch))
+            print(f"round {r+1:4d}  train_loss={float(m['loss']):.3f} "
+                  f"eval_loss={ev:.3f}  ({time.time()-t0:.0f}s)")
+    save_pytree("experiments/fed_lm_final.npz", params)
+    print("saved checkpoint to experiments/fed_lm_final.npz")
+
+
+if __name__ == "__main__":
+    main()

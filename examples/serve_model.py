@@ -1,0 +1,54 @@
+"""Serve a (reduced) assigned architecture with batched greedy decoding.
+
+Demonstrates the serve path the decode_32k / long_500k dry-run shapes lower:
+prefill a batch of prompts, then step the ring-buffered KV/state caches.
+
+  PYTHONPATH=src python examples/serve_model.py --arch deepseek-v2-lite-16b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced
+from repro.launch.serve import greedy_generate, make_decode_step
+from repro.models import init_decode_state, init_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-v2-lite-16b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--gen-len", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    B = args.batch
+    max_seq = args.prompt_len + args.gen_len + 1
+    state = init_decode_state(cfg, B, max_seq)
+    step = jax.jit(make_decode_step(cfg))
+
+    # feed the prompt token-by-token through the decode path (cache warmup)
+    prompt = jax.random.randint(key, (B, args.prompt_len), 0, cfg.vocab_size)
+    t0 = time.time()
+    for t in range(args.prompt_len):
+        logits, state = step(params, state, prompt[:, t],
+                             jnp.full((B,), t, jnp.int32))
+    next_tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    toks, state = greedy_generate(cfg, params, state, next_tok,
+                                  jnp.full((B,), args.prompt_len, jnp.int32),
+                                  args.gen_len)
+    dt = time.time() - t0
+    total = B * (args.prompt_len + args.gen_len)
+    print(f"arch={cfg.arch_id} ({cfg.family})  batch={B}")
+    print(f"generated {toks.shape[1]} tokens/seq in {dt:.1f}s "
+          f"({total/dt:.0f} tok/s on CPU, reduced config)")
+    print("sample:", toks[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

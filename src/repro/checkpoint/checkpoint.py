@@ -1,0 +1,45 @@
+"""Minimal npz pytree checkpointing (no orbax offline).
+
+Leaves are keyed by their flattened key-path; restore requires a template tree
+(the usual init_params output) so structure round-trips exactly. Device arrays
+are gathered to host; bf16 is stored via uint16 view (npz has no bf16).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _keystr(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def save_pytree(path: str, tree) -> None:
+    flat = {}
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        arr = np.asarray(jax.device_get(leaf))
+        key = _keystr(kp)
+        if arr.dtype == jnp.bfloat16:
+            flat[key + "::bf16"] = arr.view(np.uint16)
+        else:
+            flat[key] = arr
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **flat)
+
+
+def load_pytree(path: str, template):
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for kp, leaf in leaves_with_paths:
+        key = _keystr(kp)
+        if key + "::bf16" in data:
+            arr = data[key + "::bf16"].view(jnp.bfloat16)
+        else:
+            arr = data[key]
+        assert arr.shape == leaf.shape, f"{key}: {arr.shape} != {leaf.shape}"
+        out.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

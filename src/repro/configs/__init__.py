@@ -1,0 +1,13 @@
+"""Architecture registry: one module per assigned architecture.
+
+Each module exports CONFIG (the exact assigned spec) and REDUCED (a 2-layer,
+d_model<=512, <=4-expert variant of the same family for CPU smoke tests).
+"""
+from repro.configs.base import (  # noqa: F401
+    ARCH_IDS,
+    get_config,
+    get_reduced,
+    INPUT_SHAPES,
+    shape_for,
+    adapt_for_shape,
+)

@@ -1,0 +1,27 @@
+"""RELAY core: the paper's contribution.
+
+- ``selection``: Random / Oort / SAFA baselines + RELAY's IPS (Alg. 1)
+- ``apt``: Adaptive Participant Target
+- ``staleness``: SAA weight-scaling rules (Equal / DynSGD / AdaSGD / RELAY Eq. 2)
+- ``aggregation``: stale-synchronous weighted aggregation (Alg. 2) over pytrees
+- ``availability``: learner-side availability forecasting
+"""
+from repro.core.staleness import (  # noqa: F401
+    staleness_weights,
+    deviation_scores,
+    SCALING_RULES,
+)
+from repro.core.aggregation import (  # noqa: F401
+    flatten_update,
+    unflatten_update,
+    aggregate_updates,
+    stale_synchronous_aggregate,
+)
+from repro.core.selection import (  # noqa: F401
+    RandomSelector,
+    OortSelector,
+    PrioritySelector,
+    SafaSelector,
+)
+from repro.core.apt import AdaptiveParticipantTarget  # noqa: F401
+from repro.core.availability import AvailabilityForecaster  # noqa: F401

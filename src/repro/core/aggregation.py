@@ -1,0 +1,112 @@
+"""Stale-Synchronous FedAvg aggregation (paper Alg. 2) over parameter pytrees.
+
+The server receives participant deltas (possibly delayed by tau rounds),
+computes SAA coefficients (``repro.core.staleness``), and produces the weighted
+aggregate that the server optimizer applies to the global model.
+
+Two code paths:
+- pytree path (host-side FL simulation; arbitrary structures),
+- stacked-flat path (on-mesh training; feeds the fused Pallas kernel).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.staleness import staleness_weights
+
+
+# ---------------------------------------------------------------------------
+# Flatten helpers
+# ---------------------------------------------------------------------------
+
+
+def flatten_update(tree):
+    """Pytree -> (flat fp32 vector, treedef+shapes for unflatten)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = [l.shape for l in leaves]
+    flat = jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in leaves])
+    return flat, (treedef, shapes, [l.dtype for l in leaves])
+
+
+def unflatten_update(flat, spec):
+    treedef, shapes, dtypes = spec
+    leaves, off = [], 0
+    for shp, dt in zip(shapes, dtypes):
+        n = int(np.prod(shp)) if shp else 1
+        leaves.append(flat[off:off + n].reshape(shp).astype(dt))
+        off += n
+    return jax.tree.unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Aggregation
+# ---------------------------------------------------------------------------
+
+
+def aggregate_updates(stacked: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """stacked: (n, D), weights: (n,) normalized -> (D,)."""
+    return jnp.einsum("n,nd->d", weights, stacked)
+
+
+def stale_synchronous_aggregate(update_trees: Sequence, fresh: Sequence[bool],
+                                tau: Sequence[int], *, rule: str = "relay",
+                                beta: float = 0.35, use_kernel: bool = False):
+    """Aggregate a round's fresh + stale update pytrees into a single delta tree.
+
+    Returns (aggregate_tree, weights) — weights exposed for accounting/tests.
+    """
+    assert len(update_trees) > 0
+    flats, spec = [], None
+    for t in update_trees:
+        f, spec = flatten_update(t)
+        flats.append(f)
+    stacked = jnp.stack(flats)  # (n, D)
+    fresh_arr = jnp.asarray(fresh, bool)
+    tau_arr = jnp.asarray(tau, jnp.int32)
+    if use_kernel:
+        from repro.kernels.staleness_agg import ops as agg_ops
+        agg, weights = agg_ops.staleness_aggregate(stacked, fresh_arr, tau_arr,
+                                                   rule=rule, beta=beta)
+    else:
+        weights = staleness_weights(stacked, fresh_arr, tau_arr, rule=rule, beta=beta)
+        agg = aggregate_updates(stacked, weights)
+    return unflatten_update(agg, spec), weights
+
+
+# ---------------------------------------------------------------------------
+# Server optimizers (operate on the aggregated delta)
+# ---------------------------------------------------------------------------
+
+
+def fedavg_apply(params, delta, server_lr: float = 1.0):
+    """x_{t+1} = x_t + lr * Delta  (McMahan et al., 2017)."""
+    return jax.tree.map(lambda p, d: (p.astype(jnp.float32)
+                                      + server_lr * d.astype(jnp.float32)
+                                      ).astype(p.dtype), params, delta)
+
+
+def yogi_init(params):
+    z = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"m": z, "v": jax.tree.map(lambda p: jnp.full(p.shape, 1e-6, jnp.float32), params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def yogi_apply(params, delta, state, *, lr=1e-2, b1=0.9, b2=0.99, eps=1e-3):
+    """Federated YoGi (Reddi et al. / Ramaswamy et al., 2020).
+
+    v <- v - (1-b2) * d^2 * sign(v - d^2)   (YoGi's additive variant of Adam)
+    """
+    m = jax.tree.map(lambda m_, d: b1 * m_ + (1 - b1) * d.astype(jnp.float32),
+                     state["m"], delta)
+    v = jax.tree.map(
+        lambda v_, d: v_ - (1 - b2) * jnp.square(d.astype(jnp.float32))
+        * jnp.sign(v_ - jnp.square(d.astype(jnp.float32))), state["v"], delta)
+    new_params = jax.tree.map(
+        lambda p, m_, v_: (p.astype(jnp.float32)
+                           + lr * m_ / (jnp.sqrt(v_) + eps)).astype(p.dtype),
+        params, m, v)
+    return new_params, {"m": m, "v": v, "t": state["t"] + 1}

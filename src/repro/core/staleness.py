@@ -1,0 +1,87 @@
+"""SAA weight-scaling rules (paper §4.2.4, Eq. 2).
+
+Given a round's fresh updates F and stale updates S (delayed tau_s rounds):
+
+  Equal :  w_s = 1
+  DynSGD:  w_s = 1 / (tau_s + 1)                    (Jiang et al., 2017)
+  AdaSGD:  w_s = exp(-(tau_s + 1))                  (Damaskinos et al., 2020)
+  RELAY :  w_s = (1-beta)/(tau_s+1) + beta * (1 - exp(-Lam_s / Lam_max))   (Eq. 2)
+
+with the privacy-preserving deviation score
+  Lam_s = || u_hat_F - (u_s + n_F u_hat_F) / (n_F + 1) ||^2 / || u_hat_F ||^2.
+
+Fresh updates always get w_f = 1; the final coefficients are w_i / sum_j w_j.
+
+All functions are jittable over *stacked flat* updates ``U (n, D)`` with a
+boolean ``fresh`` mask — this is the oracle for the fused Pallas kernel in
+``repro.kernels.staleness_agg``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-12
+
+
+def fresh_average(updates: jnp.ndarray, fresh: jnp.ndarray) -> jnp.ndarray:
+    """updates: (n, D); fresh: (n,) bool. Returns u_hat_F (D,) (zeros if no fresh)."""
+    n_f = fresh.sum()
+    s = jnp.where(fresh[:, None], updates, 0.0).sum(axis=0)
+    return s / jnp.maximum(n_f, 1)
+
+
+def deviation_scores(updates: jnp.ndarray, fresh: jnp.ndarray) -> jnp.ndarray:
+    """Lam_s per update (Eq. 2 numerator/denominator); 0 for fresh entries."""
+    u_hat = fresh_average(updates, fresh)
+    n_f = fresh.sum().astype(updates.dtype)
+    mixed = (updates + n_f * u_hat[None, :]) / (n_f + 1.0)
+    num = jnp.sum((u_hat[None, :] - mixed) ** 2, axis=-1)
+    den = jnp.sum(u_hat ** 2) + EPS
+    lam = num / den
+    return jnp.where(fresh, 0.0, lam)
+
+
+def _rule_equal(tau, lam, lam_max, beta):
+    return jnp.ones_like(tau, dtype=jnp.float32)
+
+
+def _rule_dynsgd(tau, lam, lam_max, beta):
+    return 1.0 / (tau.astype(jnp.float32) + 1.0)
+
+
+def _rule_adasgd(tau, lam, lam_max, beta):
+    return jnp.exp(-(tau.astype(jnp.float32) + 1.0))
+
+
+def _rule_relay(tau, lam, lam_max, beta):
+    damp = 1.0 / (tau.astype(jnp.float32) + 1.0)
+    boost = 1.0 - jnp.exp(-lam / jnp.maximum(lam_max, EPS))
+    return (1.0 - beta) * damp + beta * boost
+
+
+SCALING_RULES = {
+    "equal": _rule_equal,
+    "dynsgd": _rule_dynsgd,
+    "adasgd": _rule_adasgd,
+    "relay": _rule_relay,
+}
+
+
+def staleness_weights(updates: jnp.ndarray, fresh: jnp.ndarray, tau: jnp.ndarray,
+                      *, rule: str = "relay", beta: float = 0.35,
+                      valid: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Normalized aggregation coefficients w_hat (n,).
+
+    updates: (n, D) flat updates; fresh: (n,) bool; tau: (n,) staleness in rounds
+    (0 for fresh); valid: optional (n,) mask for padded slots.
+    """
+    if valid is None:
+        valid = jnp.ones_like(fresh)
+    lam = deviation_scores(updates, fresh & valid)
+    stale_mask = (~fresh) & valid
+    lam_max = jnp.max(jnp.where(stale_mask, lam, 0.0))
+    w_stale = SCALING_RULES[rule](tau, lam, lam_max, beta)
+    w = jnp.where(fresh, 1.0, w_stale)
+    w = jnp.where(valid, w, 0.0)
+    return w / jnp.maximum(w.sum(), EPS)

@@ -1,0 +1,1 @@
+from repro.data.synthetic import token_batches, federated_token_shards  # noqa: F401

@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the compute hot-spots this system adds or relies on:
+#   staleness_agg  — fused SAA deviation + weighted aggregation (server side)
+#   swa_attention  — sliding-window flash attention (long-context serve path)
+#   wkv6           — RWKV6 data-dependent-decay recurrence (chunked scan)
+# Each package: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper),
+# ref.py (pure-jnp oracle).  Validated in interpret mode on CPU; TPU is the
+# compile target.

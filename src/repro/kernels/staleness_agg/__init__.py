@@ -1,0 +1,1 @@
+from repro.kernels.staleness_agg import ops, ref  # noqa: F401

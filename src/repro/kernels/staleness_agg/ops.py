@@ -1,0 +1,36 @@
+"""Jit wrapper: full SAA aggregation through the Pallas kernels.
+
+Handles D padding to the 2048-lane block, computes the (n)-sized weight vector
+on-host from the kernel's deviation partials (O(n) work), then runs the fused
+weighted aggregate.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.staleness import EPS, SCALING_RULES
+from repro.kernels.staleness_agg.staleness_agg import (D_BLK, deviation_partials,
+                                                       weighted_aggregate)
+
+
+@functools.partial(jax.jit, static_argnames=("rule", "interpret"))
+def staleness_aggregate(updates, fresh, tau, *, rule: str = "relay",
+                        beta: float = 0.35, interpret: bool = True):
+    """updates: (n, D) any-D fp32; fresh: (n,) bool; tau: (n,) int.
+
+    Returns (aggregate (D,), weights (n,)).
+    """
+    n, D = updates.shape
+    pad = (-D) % D_BLK
+    u = jnp.pad(updates.astype(jnp.float32), ((0, 0), (0, pad)))
+    num, den = deviation_partials(u, fresh, interpret=interpret)
+    lam = jnp.where(fresh, 0.0, num / (den + EPS))
+    lam_max = jnp.max(jnp.where(~fresh, lam, 0.0))
+    w_stale = SCALING_RULES[rule](tau, lam, lam_max, beta)
+    w = jnp.where(fresh, 1.0, w_stale)
+    w = w / jnp.maximum(w.sum(), EPS)
+    agg = weighted_aggregate(w, u, interpret=interpret)
+    return agg[:D], w

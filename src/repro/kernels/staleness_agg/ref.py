@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the fused SAA kernels — delegates to the core module
+(the core implementation IS the reference semantics)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.staleness import EPS, deviation_scores, fresh_average, staleness_weights
+
+
+def deviation_partials_ref(updates, fresh):
+    u_hat = fresh_average(updates, fresh)
+    n_f = fresh.sum().astype(updates.dtype)
+    mixed = (updates + n_f * u_hat[None, :]) / (n_f + 1.0)
+    num = jnp.sum((u_hat[None, :] - mixed) ** 2, axis=-1)
+    den = jnp.sum(u_hat ** 2)
+    return num, den
+
+
+def staleness_aggregate_ref(updates, fresh, tau, *, rule="relay", beta=0.35):
+    w = staleness_weights(updates, fresh, tau, rule=rule, beta=beta)
+    return jnp.einsum("n,nd->d", w, updates), w

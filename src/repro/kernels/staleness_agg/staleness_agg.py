@@ -1,0 +1,102 @@
+"""Fused staleness-aware aggregation (SAA, Eq. 2) Pallas TPU kernels.
+
+Aggregating n participant updates of D parameters (D ~ 1e8+) is the server-side
+hot-spot RELAY adds: a naive implementation materializes the mixed update
+``(u_s + n_F u_hat)/(n_F+1)`` per straggler (n x D extra bytes).  The fused
+kernels stream U through VMEM in (n, D_BLK) tiles exactly twice:
+
+  pass 1 (deviation): per tile, compute the fresh mean and accumulate each
+      update's deviation numerator and the ||u_hat||^2 denominator — no mixed
+      tensor is ever materialized;
+  pass 2 (aggregate): weighted matvec w @ U per tile.
+
+Both passes are grid-sequential over D/D_BLK with accumulator outputs, the
+TPU-idiomatic replacement for the GPU's atomics-based reductions.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+D_BLK = 2048  # lane-aligned (16 x 128); (n<=64) x 2048 fp32 = 512 KB per operand
+
+
+def _deviation_kernel(u_ref, fresh_ref, num_ref, den_ref):
+    """Accumulate per-update deviation partials over D blocks.
+
+    u_ref: (n, D_BLK) fp32; fresh_ref: (n, 1) fp32 {0,1}
+    num_ref: (n, 1) accumulator; den_ref: (1, 1) accumulator.
+    """
+    i = pl.program_id(0)
+    u = u_ref[...]
+    fresh = fresh_ref[...]                       # (n, 1)
+    n_f = jnp.maximum(fresh.sum(), 1.0)
+    u_hat = (u * fresh).sum(axis=0, keepdims=True) / n_f      # (1, D_BLK)
+    mixed = (u + n_f * u_hat) / (n_f + 1.0)
+    num = ((u_hat - mixed) ** 2).sum(axis=1, keepdims=True)   # (n, 1)
+    den = (u_hat ** 2).sum().reshape(1, 1)
+
+    @pl.when(i == 0)
+    def _init():
+        num_ref[...] = jnp.zeros_like(num_ref)
+        den_ref[...] = jnp.zeros_like(den_ref)
+
+    num_ref[...] += num
+    den_ref[...] += den
+
+
+def _aggregate_kernel(w_ref, u_ref, out_ref):
+    """out[D_BLK] = w (1, n) @ U (n, D_BLK)."""
+    out_ref[...] = jnp.dot(w_ref[...], u_ref[...],
+                           preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def deviation_partials(updates, fresh, *, interpret=True):
+    """updates: (n, D) fp32, D % D_BLK == 0; fresh: (n,) bool.
+
+    Returns (num (n,), den ()) such that Lam = num / (den + eps).
+    """
+    n, D = updates.shape
+    assert D % D_BLK == 0
+    grid = (D // D_BLK,)
+    num, den = pl.pallas_call(
+        _deviation_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, D_BLK), lambda i: (0, i)),
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(updates, fresh.astype(jnp.float32)[:, None])
+    return num[:, 0], den[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def weighted_aggregate(weights, updates, *, interpret=True):
+    """weights: (n,) fp32; updates: (n, D) -> (D,)."""
+    n, D = updates.shape
+    assert D % D_BLK == 0
+    out = pl.pallas_call(
+        _aggregate_kernel,
+        grid=(D // D_BLK,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((n, D_BLK), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, D_BLK), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, D), jnp.float32),
+        interpret=interpret,
+    )(weights[None, :], updates)
+    return out[0]

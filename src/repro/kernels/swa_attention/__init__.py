@@ -1,0 +1,1 @@
+from repro.kernels.swa_attention import ops, ref  # noqa: F401

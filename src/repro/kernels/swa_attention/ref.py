@@ -1,0 +1,17 @@
+"""Oracle: the model substrate's blocked online-softmax attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import blocked_attention
+
+
+def swa_attention_ref(q, k, v, *, window: int):
+    """q: (B, S, H, Dh); k, v: (B, S, Hkv, Dh) -> (B, S, H, Dh)."""
+    B, S, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    out = blocked_attention(q.reshape(B, S, Hkv, G, Dh), k, v, pos, pos,
+                            window=window)
+    return out.reshape(B, S, H, Dh)

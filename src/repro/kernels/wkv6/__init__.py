@@ -1,0 +1,1 @@
+from repro.kernels.wkv6 import ops, ref  # noqa: F401

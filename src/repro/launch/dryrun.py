@@ -1,0 +1,216 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: prove every (arch x input shape x mesh) lowers+compiles.
+
+For each combination this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. constructs ShapeDtypeStruct inputs (repro.launch.shardings.input_specs),
+  3. jit(...).lower(...).compile() the train / prefill / decode step,
+  4. records memory_analysis(), cost_analysis(), and the parsed collective
+     bytes into experiments/dryrun/<arch>__<shape>__<mesh>.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import dataclasses
+import json
+import math
+import time
+
+import jax
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, adapt_for_shape, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shardings import input_specs, named, param_pspecs
+from repro.launch.train import default_cohort, make_fl_train_step
+from repro.launch.serve import make_decode_step, make_prefill_step
+from repro.launch.mesh import batch_axes as mesh_batch_axes
+from repro.models import init_params, shard_hints
+from repro.roofline.analysis import (active_params, collective_bytes_from_hlo,
+                                     model_flops, roofline_terms)
+from repro.roofline.hlo_cost import analyze_hlo
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+              cohort: str = "auto", save: bool = True, verbose: bool = True,
+              overrides: dict | None = None, variant: str = "",
+              stream_participants: int = 8):
+    shape = INPUT_SHAPES[shape_name]
+    base_cfg = get_config(arch)
+    arch = base_cfg.arch_id  # canonical hyphenated id for records
+    cfg = adapt_for_shape(base_cfg, shape)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    if variant:
+        arch = f"{arch}@{variant}"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    chips = mesh.devices.size
+
+    key = jax.random.PRNGKey(0)
+    params_shape = jax.eval_shape(lambda k: init_params(cfg, k), key)
+    pspecs = param_pspecs(cfg, params_shape, mesh)
+    chosen_cohort = (default_cohort(cfg, params_shape)
+                     if cohort == "auto" else cohort)
+    spec = input_specs(cfg, shape, mesh, cohort=chosen_cohort,
+                       stream_participants=stream_participants)
+
+    if shape.kind == "train":
+        step = make_fl_train_step(cfg, cohort=chosen_cohort,
+                                  param_specs=pspecs)
+        in_shardings = (named(mesh, pspecs),
+                        named(mesh, spec.arg_specs["batch"]),
+                        named(mesh, spec.arg_specs["fresh"]),
+                        named(mesh, spec.arg_specs["tau"]))
+        args = (params_shape, spec.args["batch"], spec.args["fresh"],
+                spec.args["tau"])
+    elif shape.kind == "prefill":
+        chosen_cohort = "-"
+        step = make_prefill_step(cfg)
+        in_shardings = (named(mesh, pspecs), named(mesh, spec.arg_specs["batch"]))
+        args = (params_shape, spec.args["batch"])
+    else:
+        chosen_cohort = "-"
+        step = make_decode_step(cfg)
+        in_shardings = (named(mesh, pspecs), named(mesh, spec.arg_specs["state"]),
+                        named(mesh, spec.arg_specs["tokens"]),
+                        named(mesh, spec.arg_specs["position"]))
+        args = (params_shape, spec.args["state"], spec.args["tokens"],
+                spec.args["position"])
+
+    # activation/expert layout pins (see repro.models.shard_hints):
+    # - stream cohort & serve paths: batch dim rides the batch axes
+    # - vmap cohort: participants consume the batch axes, inner batch unsharded
+    baxes = mesh_batch_axes(mesh)
+    if shape.kind == "train":
+        hint_batch = baxes if chosen_cohort == "stream" else None
+    else:
+        n_shards = math.prod(mesh.shape[a] for a in baxes)
+        hint_batch = baxes if shape.global_batch % n_shards == 0 else None
+
+    t0 = time.time()
+    with shard_hints.hints(batch_axes=hint_batch, model_axis="model"):
+        with mesh:
+            lowered = jax.jit(step, in_shardings=in_shardings).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {k: getattr(mem, k) for k in
+                 ("temp_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "generated_code_size_in_bytes")
+                 if hasattr(mem, k)}
+    except Exception:
+        mem_d = {}
+    hlo = compiled.as_text()
+    # trip-count-aware accounting (XLA's cost_analysis counts scan bodies once)
+    walked = analyze_hlo(hlo)
+    cost = {"flops": walked.get("flops", 0.0),
+            "bytes accessed": walked.get("bytes", 0.0),
+            "xla_flops_raw": cost.get("flops", 0.0),
+            "xla_bytes_raw": cost.get("bytes accessed", 0.0)}
+    coll = {k.replace("coll_", ""): v for k, v in walked.items()
+            if k.startswith("coll_")}
+    coll.setdefault("total", walked.get("coll_total", 0.0))
+    coll["counts"] = {}
+
+    n_active = active_params(cfg, params_shape)
+    n_total = sum(math.prod(l.shape) for l in jax.tree.leaves(params_shape))
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mf = model_flops(n_active, tokens, "train")
+    elif shape.kind == "prefill":
+        mf = model_flops(n_active, shape.global_batch * shape.seq_len, "infer")
+    else:
+        mf = model_flops(n_active, shape.global_batch, "infer")
+
+    arg_bytes = mem_d.get("argument_size_in_bytes", float("nan"))
+    report = roofline_terms(
+        arch=arch, shape=shape_name, mesh_name=mesh_name, chips=chips,
+        cost=cost, coll_bytes=coll["total"], model_flops_val=mf,
+        per_device_hbm=arg_bytes + mem_d.get("temp_size_in_bytes", 0))
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "chips": chips,
+        "kind": shape.kind, "cohort": chosen_cohort,
+        "n_params": n_total, "n_active_params": n_active,
+        "cost_analysis": {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float))},
+        "memory_analysis": mem_d,
+        "collectives": {k: v for k, v in coll.items() if k != "counts"},
+        "collective_counts": coll["counts"],
+        "roofline": dataclasses.asdict(report),
+        "lower_s": t_lower, "compile_s": t_compile,
+    }
+    if save:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        fn = os.path.join(OUT_DIR, f"{arch}__{shape_name}__{mesh_name}.json")
+        with open(fn, "w") as f:
+            json.dump(rec, f, indent=1)
+    if verbose:
+        print(f"[OK] {arch:22s} {shape_name:12s} mesh={mesh_name:8s} "
+              f"cohort={chosen_cohort:6s} "
+              f"flops/chip={report.hlo_flops:.2e} coll={coll['total']:.2e}B "
+              f"bottleneck={report.bottleneck:10s} "
+              f"useful={report.useful_ratio:.2f} "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        print(f"     memory_analysis: {mem_d}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--cohort", default="auto")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (int/float/bool literal)")
+    ap.add_argument("--variant", default="", help="label for override records")
+    ap.add_argument("--stream-participants", type=int, default=8)
+    args = ap.parse_args()
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            overrides[k] = eval(v, {}, {})  # noqa: S307 - CLI literals
+        except Exception:
+            overrides[k] = v
+
+    archs = ([a.replace("_", "-").replace("-", "-") for a in ARCH_IDS]
+             if args.arch == "all" else [args.arch])
+    if args.arch == "all":
+        archs = [a for a in ARCH_IDS]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    lower_one(arch, shape, multi_pod=mp, cohort=args.cohort,
+                              overrides=overrides, variant=args.variant,
+                              stream_participants=args.stream_participants)
+                except Exception as e:  # noqa: BLE001 - report and continue
+                    failures.append((arch, shape, mp, repr(e)[:300]))
+                    print(f"[FAIL] {arch} {shape} multi_pod={mp}: {e!r}"[:500])
+    if failures:
+        print(f"\n{len(failures)} FAILURES")
+        raise SystemExit(1)
+    print("\nALL DRY-RUNS PASSED")
+
+
+if __name__ == "__main__":
+    main()

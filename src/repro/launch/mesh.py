@@ -1,0 +1,29 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis carries
+pure data/cohort parallelism (params replicated per pod, deltas all-reduced
+across pods), matching the FL-cohort mapping in DESIGN.md §3.
+
+Defined as functions so importing this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh with the production axis names — lets the same sharded
+    programs run on this CPU container for smoke tests."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes that carry the batch / participant-cohort dimension."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,49 @@
+"""Serve-path steps: prefill (full prompt) and single-token decode.
+
+In the FL system these serve the *global* model (e.g. server-side eval or
+deployment of the trained model); they are also the lowered programs for the
+``prefill_32k`` / ``decode_32k`` / ``long_500k`` input shapes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, decode_step, prefill
+from repro.models.transformer import forward, _logits
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def step(params, batch):
+        logits, states = prefill(cfg, params, batch)
+        return logits, states
+    return step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def step(params, state, tokens, position):
+        return decode_step(cfg, params, state, tokens, position)
+    return step
+
+
+def make_logits_fn(cfg: ModelConfig):
+    """Full-sequence logits (eval/perplexity path)."""
+    def fn(params, batch):
+        x, aux, _ = forward(cfg, params, batch)
+        return _logits(cfg, params, x)
+    return fn
+
+
+def greedy_generate(cfg: ModelConfig, params, state, first_token, start_pos,
+                    n_tokens: int):
+    """Host-loop greedy decoding used by the serving example."""
+    toks = [first_token]
+    pos = start_pos
+    step = jax.jit(make_decode_step(cfg))
+    cur = first_token
+    for _ in range(n_tokens):
+        logits, state = step(params, state, cur, pos)
+        cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        toks.append(cur)
+        pos = pos + 1
+    return jnp.stack(toks, axis=1), state

@@ -1,0 +1,211 @@
+"""Sharding rules: parameter partitioning + input specs per (arch x shape).
+
+Logical plan (DESIGN.md §6):
+- batch / participant cohort -> ("pod", "data") mesh axes;
+- tensor parallelism -> "model": attention q/o heads, FFN hidden, MoE experts,
+  vocab;
+- FSDP for >8B-param archs: the non-"model" matrix dim additionally sharded on
+  "data" (within a pod);
+- decode KV caches are sharded over the *sequence* dim on "model" — kv-head
+  counts (2..36) do not generally divide the 16-way axis, sequence always does;
+- stacked super-block params carry a leading scan dim that is never sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape
+from repro.launch.mesh import batch_axes
+from repro.models import ModelConfig, init_params, init_decode_state
+
+FSDP_THRESHOLD = 8e9  # params; above this the "data" axis also shards weights
+
+
+# ---------------------------------------------------------------------------
+# Parameter partitioning
+# ---------------------------------------------------------------------------
+
+# leaf-name -> (spec for 2-D (in, out) matrices): "col" = out on model,
+# "row" = in on model, "rep" = replicated
+_MATRIX_RULE = {
+    "w_q": "col", "w_k": "col", "w_v": "col", "w_gate": "col", "w_up": "col",
+    "w_in": "col", "w_dt": "col", "w_r": "col", "w_g": "col", "w_out": "col",
+    "lora_b": "col", "w_uk": "col", "w_uv": "col", "proj": "col",
+    "w_o": "row", "w_down": "row",
+    "w_dkv": "rep", "w_kr": "rep", "w_x": "row", "router": "rep",
+    "lora_a": "rep",
+    # rwkv w_k/w_v collide with attention names — both are (d, d) col. fine.
+}
+
+_VEC_MODEL = {"b_q", "b_k", "b_v", "conv_b", "dt_bias", "D"}
+
+
+def _leaf_spec(name: str, shape, fsdp: bool, model_divides) -> P:
+    nd = len(shape)
+    f = "data" if fsdp else None
+    if name == "embedding":                      # (V, d)
+        return P("model", f)
+    if name in ("A_log",):                       # (d_inner, N)
+        return P("model", None)
+    if name == "conv_w":                         # (W, d_inner)
+        return P(None, "model")
+    if name in _VEC_MODEL and nd == 1:
+        return P("model") if model_divides(shape[0]) else P(None)
+    if nd == 1 or name in ("w0", "u", "mu_x", "scale", "ln_x_scale") \
+            or name.startswith("mu_"):
+        return P(*([None] * nd))
+    rule = _MATRIX_RULE.get(name)
+    if rule == "col":
+        if nd == 3:                              # MoE experts (E, d, f)
+            return P("model", f, None)
+        return P(f, "model") if model_divides(shape[-1]) else P(f, None)
+    if rule == "row":
+        if nd == 3:                              # MoE (E, f, d)
+            return P("model", None, f)
+        return P("model", f) if model_divides(shape[0]) else P(None, f)
+    return P(*([None] * nd))
+
+
+def param_pspecs(cfg: ModelConfig, params_shape, mesh) -> Any:
+    """PartitionSpec pytree matching ``init_params`` structure.
+
+    ``params_shape``: eval_shape of init_params (leaves have .shape).
+    """
+    n_params = sum(math.prod(l.shape) for l in jax.tree.leaves(params_shape))
+    fsdp = n_params > FSDP_THRESHOLD and "data" in mesh.axis_names
+    m_size = mesh.shape["model"]
+    d_size = mesh.shape["data"]
+
+    def divides(n):
+        return n % m_size == 0
+
+    def spec_for(path, leaf):
+        names = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        name = names[-1]
+        stacked = "stack" in names
+        base = _leaf_spec(name, leaf.shape[1:] if stacked else leaf.shape,
+                          fsdp, divides)
+        # FSDP sanity: drop "data" from dims it doesn't divide
+        dims = (leaf.shape[1:] if stacked else leaf.shape)
+        fixed = []
+        for ax, d in zip(base, dims):
+            if ax == "data" and d % d_size != 0:
+                ax = None
+            if ax == "model" and d % m_size != 0:
+                ax = None
+            fixed.append(ax)
+        base = P(*fixed)
+        return P(None, *base) if stacked else base
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StepSpec:
+    """Everything dryrun/train/serve need to lower one step."""
+    kind: str                  # train | prefill | decode
+    args: dict                 # name -> ShapeDtypeStruct pytree
+    arg_specs: dict            # name -> PartitionSpec pytree
+    n_participants: int = 0
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _token_batch(cfg: ModelConfig, B: int, S: int, lead=()):
+    """Token batch struct (+frontend embeds for VLM; text seq shrinks)."""
+    s_text = S - (cfg.n_frontend_tokens if cfg.frontend == "vision" else 0)
+    b = {"tokens": _sds(lead + (B, s_text), jnp.int32),
+         "labels": _sds(lead + (B, s_text), jnp.int32)}
+    if cfg.frontend == "vision":
+        b["frontend_embeds"] = _sds(lead + (B, cfg.n_frontend_tokens,
+                                            cfg.d_frontend), jnp.bfloat16)
+    return b
+
+
+def _batch_pspec(batch_struct, baxes):
+    def spec(leaf):
+        return P(baxes, *([None] * (len(leaf.shape) - 1)))
+    return jax.tree.map(spec, batch_struct)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, mesh,
+                cohort: str = "vmap", stream_participants: int = 8) -> StepSpec:
+    baxes = batch_axes(mesh)
+    n_batch_shards = math.prod(mesh.shape[a] for a in baxes)
+
+    if shape.kind == "train":
+        if cohort == "stream":
+            # participants are scanned in time; each participant's LOCAL batch
+            # rides the ("pod","data") axes so no chip idles during the scan
+            p = stream_participants
+            local_b = shape.global_batch // p
+            assert local_b % n_batch_shards == 0, (local_b, n_batch_shards)
+            def bspec(leaf):
+                return P(None, baxes, *([None] * (len(leaf.shape) - 2)))
+        else:
+            # whole cohort in flight: the participant axis IS the batch axis
+            p = max(16, n_batch_shards)
+            local_b = shape.global_batch // p
+            def bspec(leaf):
+                return P(baxes, *([None] * (len(leaf.shape) - 1)))
+        batch = _token_batch(cfg, local_b, shape.seq_len, lead=(p,))
+        args = {"batch": batch,
+                "fresh": _sds((p,), jnp.bool_),
+                "tau": _sds((p,), jnp.int32)}
+        arg_specs = {"batch": jax.tree.map(bspec, batch),
+                     "fresh": P(None), "tau": P(None)}
+        return StepSpec("train", args, arg_specs, n_participants=p)
+
+    if shape.kind == "prefill":
+        B = shape.global_batch
+        batch = _token_batch(cfg, B, shape.seq_len)
+        bspec = _batch_pspec(batch, baxes)
+        return StepSpec("prefill", {"batch": batch}, {"batch": bspec})
+
+    # decode: one new token against a seq_len cache
+    B = shape.global_batch
+    state = jax.eval_shape(lambda: init_decode_state(cfg, B, shape.seq_len))
+    shard_batch = B % n_batch_shards == 0
+
+    m_size = mesh.shape["model"]
+
+    def state_spec(path, leaf):
+        # caches: (B, Sc, ...) -> batch on baxes (if divisible), Sc on "model";
+        # stacked super-block states carry a leading unsharded scan dim.
+        names = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        stacked = "stack" in names
+        dims = list(leaf.shape[1:] if stacked else leaf.shape)
+        spec = [baxes if shard_batch else None]
+        if len(dims) >= 2:
+            seq_ok = dims[1] >= 1024 and dims[1] % m_size == 0
+            spec.append("model" if seq_ok else None)
+        spec += [None] * (len(dims) - len(spec))
+        spec = spec[:len(dims)]
+        return P(None, *spec) if stacked else P(*spec)
+
+    sspec = jax.tree_util.tree_map_with_path(state_spec, state)
+    args = {"state": state,
+            "tokens": _sds((B,), jnp.int32),
+            "position": _sds((B,), jnp.int32)}
+    arg_specs = {"state": sspec,
+                 "tokens": P(baxes) if shard_batch else P(None),
+                 "position": P(baxes) if shard_batch else P(None)}
+    return StepSpec("decode", args, arg_specs)

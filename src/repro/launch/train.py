@@ -1,0 +1,281 @@
+"""The FL round as ONE distributed step (paper Alg. 2 on a TPU pod).
+
+``fl_train_step(params, batch, fresh, tau)`` runs a cohort of P participants:
+each takes K local SGD steps on its own shard (participants ride the
+("pod","data") mesh axes), produces a delta, and the server applies the
+staleness-aware (Eq. 2) weighted aggregate — all inside one jitted program.
+
+Two cohort strategies:
+
+- ``vmap`` (paper-naive): all P deltas materialize simultaneously (P x params
+  memory). Fine for <8B-param models; the faithful baseline.
+- ``stream`` (beyond-paper, memory-optimal): three scans over participants with
+  delta recomputation (the FL analogue of gradient checkpointing) —
+    pass 1: accumulate the fresh-average and per-participant ||u||^2;
+    pass 2: recompute deltas, collect <u_hat, u_s> -> exact Lam_s, Eq. 2 weights;
+    pass 3: recompute deltas, accumulate the weighted aggregate.
+  Memory is O(1) in P (2 param-sized accumulators); compute is 3x. Which side
+  of that trade wins is a §Perf question (see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.staleness import EPS, SCALING_RULES
+from repro.models import ModelConfig
+from repro.models.transformer import lm_loss
+
+
+# ---------------------------------------------------------------------------
+# Pytree helpers (no giant concat — norms/inner products leaf-wise)
+# ---------------------------------------------------------------------------
+
+
+def _tree_dot(a, b):
+    # NOTE: jnp.vdot ravels its operands — a flat reshape of a sharded tensor
+    # forces an all-gather under SPMD. sum(x*y) keeps the layout sharded.
+    return sum(jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _tree_sq(a):
+    return sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+               for x in jax.tree.leaves(a))
+
+
+def _tree_axpy(alpha, x, y):
+    """alpha * x + y over pytrees (fp32 accumulate)."""
+    return jax.tree.map(lambda a, b: alpha * a.astype(jnp.float32) + b, x, y)
+
+
+def _zeros_like_f32(tree, specs=None):
+    z = jax.tree.map(lambda l: jnp.zeros(l.shape, jnp.float32), tree)
+    return _constrain_like(z, specs)
+
+
+def _constrain_like(tree, specs):
+    """Pin a param-shaped intermediate (accumulator/aggregate) to the param
+    partition specs — freshly-created buffers are otherwise unconstrained and
+    the partitioner happily replicates 50B-param fp32 accumulators."""
+    if specs is None:
+        return tree
+    return jax.tree.map(
+        lambda l, s: jax.lax.with_sharding_constraint(l, s), tree, specs)
+
+
+def _relay_weights(fresh, tau, lam, *, rule, beta):
+    lam_max = jnp.max(jnp.where(~fresh, lam, 0.0))
+    w = jnp.where(fresh, 1.0, SCALING_RULES[rule](tau, lam, lam_max, beta))
+    return w / jnp.maximum(w.sum(), EPS)
+
+
+# ---------------------------------------------------------------------------
+# Participant-local update (K local SGD steps; Alg. 2 inner loop)
+# ---------------------------------------------------------------------------
+
+
+def _participant_delta_fn(cfg: ModelConfig, local_lr: float, local_steps: int,
+                          param_specs=None):
+    def delta_fn(params, pbatch):
+        def one_step(p, _):
+            loss, grads = jax.value_and_grad(
+                lambda q: lm_loss(cfg, q, pbatch))(p)
+            # pin grads to the param layout: nudges XLA to reduce-scatter the
+            # token-sharded partial grads instead of all-reducing full tensors
+            grads = _constrain_like(grads, param_specs)
+            p = jax.tree.map(
+                lambda w, g: (w.astype(jnp.float32)
+                              - local_lr * g.astype(jnp.float32)).astype(w.dtype),
+                p, grads)
+            return p, loss
+        final, losses = jax.lax.scan(one_step, params, None, length=local_steps)
+        delta = jax.tree.map(lambda a, b: (a - b).astype(jnp.float32),
+                             final, params)
+        return delta, losses.mean()
+    return delta_fn
+
+
+# ---------------------------------------------------------------------------
+# Cohort strategies
+# ---------------------------------------------------------------------------
+
+
+def make_fl_aggregate_step(cfg: ModelConfig, *, local_lr: float = 1e-2,
+                           rule: str = "relay", beta: float = 0.35,
+                           local_steps: int = 1, cohort: str = "vmap",
+                           param_specs=None) -> Callable:
+    """Returns agg_step(params, batch, fresh, tau) -> (agg_delta, metrics) —
+    the SAA-weighted cohort aggregate, before any server optimizer."""
+    return _make_step_impl(cfg, local_lr=local_lr, rule=rule, beta=beta,
+                           local_steps=local_steps, cohort=cohort,
+                           param_specs=param_specs)
+
+
+def make_fl_train_step(cfg: ModelConfig, *, local_lr: float = 1e-2,
+                       server_lr: float = 1.0, rule: str = "relay",
+                       beta: float = 0.35, local_steps: int = 1,
+                       cohort: str = "vmap", param_specs=None) -> Callable:
+    """FedAvg-server step (Alg. 2): step(params, batch, fresh, tau)
+    -> (params, metrics). batch leaves have leading participant axis P."""
+    impl = make_fl_aggregate_step(cfg, local_lr=local_lr, rule=rule, beta=beta,
+                                  local_steps=local_steps, cohort=cohort,
+                                  param_specs=param_specs)
+
+    def step(params, batch, fresh, tau):
+        agg, metrics = impl(params, batch, fresh, tau)
+        new = jax.tree.map(
+            lambda p, d: (p.astype(jnp.float32) + server_lr * d
+                          ).astype(p.dtype), params, agg)
+        return new, metrics
+    return step
+
+
+def make_fl_train_step_yogi(cfg: ModelConfig, *, yogi_lr: float = 1e-2,
+                            **kw) -> Callable:
+    """YoGi-server step (the paper's aggregator for the non-CIFAR benchmarks):
+    step(params, opt_state, batch, fresh, tau) -> (params, opt_state, metrics).
+    opt_state from ``repro.core.aggregation.yogi_init``."""
+    from repro.core.aggregation import yogi_apply
+    impl = make_fl_aggregate_step(cfg, **kw)
+
+    def step(params, opt_state, batch, fresh, tau):
+        agg, metrics = impl(params, batch, fresh, tau)
+        new, new_state = yogi_apply(params, agg, opt_state, lr=yogi_lr)
+        return new, new_state, metrics
+    return step
+
+
+def _make_step_impl(cfg: ModelConfig, *, local_lr, rule, beta, local_steps,
+                    cohort, param_specs) -> Callable:
+    delta_fn = _participant_delta_fn(cfg, local_lr, local_steps, param_specs)
+
+    def finish(params, agg, loss, weights):
+        return agg, {"loss": loss, "weights": weights}
+
+    if cohort == "vmap":
+        def step(params, batch, fresh, tau):
+            deltas, losses = jax.vmap(delta_fn, in_axes=(None, 0))(params, batch)
+            fresh_f = fresh.astype(jnp.float32)
+            n_f = jnp.maximum(fresh_f.sum(), 1.0)
+            u_hat = _constrain_like(jax.tree.map(
+                lambda d: jnp.einsum("p,p...->...", fresh_f, d) / n_f, deltas),
+                param_specs)
+            # Lam_s = ||u_hat - (u_s + n_F u_hat)/(n_F+1)||^2 / ||u_hat||^2
+            #       = ||u_hat - u_s||^2 / ((n_F+1)^2 ||u_hat||^2)
+            diff_sq = sum(
+                jnp.sum((h[None] - d) ** 2, axis=tuple(range(1, d.ndim)))
+                for h, d in zip(jax.tree.leaves(u_hat), jax.tree.leaves(deltas)))
+            lam = diff_sq / ((n_f + 1.0) ** 2 * (_tree_sq(u_hat) + EPS))
+            lam = jnp.where(fresh, 0.0, lam)
+            w = _relay_weights(fresh, tau, lam, rule=rule, beta=beta)
+            agg = _constrain_like(
+                jax.tree.map(lambda d: jnp.einsum("p,p...->...", w, d), deltas),
+                param_specs)
+            return finish(params, agg, losses.mean(), w)
+        return step
+
+    if cohort == "stream":
+        def step(params, batch, fresh, tau):
+            fresh_f = fresh.astype(jnp.float32)
+            n_f = jnp.maximum(fresh_f.sum(), 1.0)
+
+            # pass 1: fresh average + per-participant squared norms
+            def p1(carry, inp):
+                acc, loss_acc = carry
+                pbatch, is_fresh = inp
+                delta, loss = delta_fn(params, pbatch)
+                acc = _constrain_like(_tree_axpy(is_fresh, delta, acc),
+                                      param_specs)
+                return (acc, loss_acc + loss), _tree_sq(delta)
+            (fresh_sum, loss_sum), sq = jax.lax.scan(
+                p1, (_zeros_like_f32(params, param_specs), 0.0),
+                (batch, fresh_f))
+            u_hat = jax.tree.map(lambda a: a / n_f, fresh_sum)
+            uhat_sq = _tree_sq(u_hat)
+
+            # pass 2: exact deviations via <u_hat, u_s> (recompute deltas)
+            def p2(carry, pbatch):
+                delta, _loss = delta_fn(params, pbatch)
+                return carry, _tree_dot(u_hat, delta)
+            _, dots = jax.lax.scan(p2, None, batch)
+            diff_sq = uhat_sq - 2.0 * dots + sq
+            lam = jnp.where(fresh, 0.0,
+                            diff_sq / ((n_f + 1.0) ** 2 * (uhat_sq + EPS)))
+            w = _relay_weights(fresh, tau, lam, rule=rule, beta=beta)
+
+            # pass 3: weighted aggregate (recompute deltas)
+            def p3(acc, inp):
+                pbatch, wi = inp
+                delta, _ = delta_fn(params, pbatch)
+                return _constrain_like(_tree_axpy(wi, delta, acc),
+                                       param_specs), None
+            agg, _ = jax.lax.scan(p3, _zeros_like_f32(params, param_specs),
+                                  (batch, w))
+            p_count = fresh.shape[0]
+            return finish(params, agg, loss_sum / p_count, w)
+        return step
+
+    raise ValueError(cohort)
+
+
+STREAM_THRESHOLD = 8e9
+# §Perf iteration 8 (EXPERIMENTS.md): tried raising this to 20e9 so deepseek
+# (15.7B) uses the vmap cohort — compute dropped 1.8x and collectives 2.3x but
+# per-chip temp memory exploded 8 GB -> 171 GB (P x fp32 deltas). Net refuted;
+# the 3x-recompute stream cohort is the right trade above ~8B params.
+
+
+def default_cohort(cfg: ModelConfig, params_shape) -> str:
+    import math
+    n = sum(math.prod(l.shape) for l in jax.tree.leaves(params_shape))
+    return "stream" if n > STREAM_THRESHOLD else "vmap"
+
+
+# ---------------------------------------------------------------------------
+# CLI driver: host-scale federated training of a reduced assigned arch
+# ---------------------------------------------------------------------------
+
+
+def _main():
+    import argparse
+    import numpy as np
+    from repro.configs import get_reduced
+    from repro.data import federated_token_shards
+    from repro.models import init_params
+
+    ap = argparse.ArgumentParser(description="FL-cohort training (reduced arch)")
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--rounds", type=int, default=50)
+    ap.add_argument("--participants", type=int, default=4)
+    ap.add_argument("--local-batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--rule", default="relay")
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    shards = federated_token_shards(cfg.vocab_size, 32, 64, args.seq, skew=0.3)
+    rng = np.random.default_rng(0)
+    step = jax.jit(make_fl_train_step(cfg, local_lr=0.05, rule=args.rule))
+    for r in range(args.rounds):
+        lids = rng.choice(len(shards), args.participants, replace=False)
+        sel = lambda k: np.stack([shards[l][k][rng.integers(
+            0, len(shards[l][k]), args.local_batch)] for l in lids])
+        fresh = np.ones(args.participants, bool)
+        tau = np.zeros(args.participants, np.int32)
+        if r % 3 == 0 and args.participants > 1:
+            fresh[-1] = False
+            tau[-1] = 2
+        params, m = step(params, {"tokens": sel("tokens"), "labels": sel("labels")},
+                         jnp.asarray(fresh), jnp.asarray(tau))
+        if (r + 1) % 10 == 0:
+            print(f"round {r+1:4d} loss={float(m['loss']):.4f}")
+    print("done")
+
+
+if __name__ == "__main__":
+    _main()

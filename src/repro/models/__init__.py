@@ -1,0 +1,14 @@
+"""Model zoo: composable decoder-only stacks covering the assigned architectures.
+
+All models are functional JAX: ``init(cfg, key) -> params`` pytrees and pure
+``forward / prefill / decode`` functions.  Layer stacks are ``lax.scan``-ed over
+stacked per-layer parameters so HLO size is depth-independent.
+"""
+from repro.models.transformer import (  # noqa: F401
+    ModelConfig,
+    init_params,
+    forward,
+    init_decode_state,
+    decode_step,
+    prefill,
+)

@@ -1,0 +1,21 @@
+"""Modality frontend stubs (harness carve-out).
+
+The VLM vision encoder (InternViT) and audio codec (EnCodec) are NOT implemented;
+``input_specs()`` supplies precomputed patch embeddings / discrete codec tokens of
+the right shape.  This module only provides the projector that maps frontend
+embeddings into the decoder's d_model.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def frontend_init(key, d_frontend: int, d_model: int, dtype):
+    return {"proj": dense_init(key, (d_frontend, d_model), dtype)}
+
+
+def project_frontend(params, embeds):
+    """embeds: (B, P, d_frontend) -> (B, P, d_model)."""
+    return embeds.astype(params["proj"].dtype) @ params["proj"]

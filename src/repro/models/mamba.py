@@ -1,0 +1,109 @@
+"""Mamba (S6) selective-state-space block, used by the Jamba hybrid layers.
+
+h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t ;  y_t = C_t . h_t + D * x_t
+with (dt, B, C) data-dependent.  Sequential scan form; O(1) decode state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def mamba_init(key, d_model: int, *, d_state: int = 16, expand: int = 2,
+               dt_rank: int | None = None, conv_width: int = 4, dtype=jnp.bfloat16):
+    d_inner = expand * d_model
+    dt_rank = dt_rank or max(1, d_model // 16)
+    ks = iter(jax.random.split(key, 8))
+    A = jnp.broadcast_to(jnp.arange(1, d_state + 1, dtype=jnp.float32),
+                         (d_inner, d_state))
+    return {
+        "w_in": dense_init(next(ks), (d_model, 2 * d_inner), dtype),
+        "conv_w": dense_init(next(ks), (conv_width, d_inner), dtype, scale=0.5),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "w_x": dense_init(next(ks), (d_inner, dt_rank + 2 * d_state), dtype),
+        "w_dt": dense_init(next(ks), (dt_rank, d_inner), dtype),
+        "dt_bias": jnp.zeros((d_inner,), jnp.float32),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "w_out": dense_init(next(ks), (d_inner, d_model), dtype),
+    }
+
+
+SCAN_CHUNK = 256  # remat granularity of the time scan (bounds bwd residuals)
+
+
+def _chunked_scan(step, h0, xs_t, S):
+    """scan over time in rematerialized chunks: backward residuals are O(chunk)
+    instead of O(S) — the recurrent-layer analogue of per-layer remat."""
+    if S % SCAN_CHUNK != 0 or S <= SCAN_CHUNK:
+        return jax.lax.scan(step, h0, xs_t)
+    n_ch = S // SCAN_CHUNK
+
+    def chunk_body(h, chunk_xs):
+        return jax.lax.scan(step, h, chunk_xs)
+
+    chunked = tuple(t.reshape((n_ch, SCAN_CHUNK) + t.shape[1:]) for t in xs_t)
+    h_fin, ys = jax.lax.scan(jax.checkpoint(chunk_body), h0, chunked)
+    return h_fin, ys.reshape((S,) + ys.shape[2:])
+
+
+def _conv_step_weights(params):
+    return params["conv_w"], params["conv_b"]
+
+
+def _ssm_inputs(params, xs, dt_rank, d_state):
+    """xs: (B, S, d_inner) post-conv activations -> (dt, Bmat, Cmat)."""
+    xdb = xs @ params["w_x"]
+    dt_low, Bm, Cm = jnp.split(xdb, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus((dt_low @ params["w_dt"]).astype(jnp.float32)
+                         + params["dt_bias"])  # (B,S,d_inner)
+    return dt, Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+
+def mamba_forward(params, x, *, d_state: int = 16, expand: int = 2,
+                  dt_rank: int | None = None, conv_width: int = 4, state=None):
+    """x: (B, S, d). state: {"conv": (B, W-1, d_inner), "ssm": (B, d_inner, N)} | None.
+
+    Returns (out, new_state).
+    """
+    B, S, d = x.shape
+    d_inner = expand * d
+    dt_rank = dt_rank or max(1, d // 16)
+    xz = x @ params["w_in"]
+    xs, z = jnp.split(xz, 2, axis=-1)  # (B, S, d_inner) each
+
+    # causal conv1d over time
+    conv_prev = (state["conv"] if state is not None
+                 else jnp.zeros((B, conv_width - 1, d_inner), xs.dtype))
+    xpad = jnp.concatenate([conv_prev, xs], axis=1)  # (B, S+W-1, d_inner)
+    cw, cb = _conv_step_weights(params)
+    xc = sum(xpad[:, i:i + S] * cw[i] for i in range(conv_width)) + cb
+    xc = jax.nn.silu(xc)
+    new_conv = xpad[:, S:S + conv_width - 1] if S >= conv_width - 1 else xpad[:, -(conv_width - 1):]
+
+    dt, Bm, Cm = _ssm_inputs(params, xc, dt_rank, d_state)
+    A = -jnp.exp(params["A_log"])  # (d_inner, N)
+    h0 = (state["ssm"] if state is not None
+          else jnp.zeros((B, d_inner, d_state), jnp.float32))
+    xcf = xc.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp  # (B,d_inner), (B,d_inner), (B,N), (B,N)
+        dA = jnp.exp(dt_t[..., None] * A)                       # (B,d_inner,N)
+        dBx = dt_t[..., None] * B_t[:, None, :] * x_t[..., None]
+        h_new = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h_new, C_t)
+        return h_new, y
+
+    xs_t = (xcf.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+            Bm.transpose(1, 0, 2), Cm.transpose(1, 0, 2))
+    h_fin, ys = _chunked_scan(step, h0, xs_t, S)
+    y = ys.transpose(1, 0, 2) + params["D"] * xcf
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ params["w_out"]
+    return out, {"conv": new_conv, "ssm": h_fin}
+
+
+def mamba_decode(params, x, state, **kw):
+    return mamba_forward(params, x, state=state, **kw)

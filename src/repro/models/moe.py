@@ -1,0 +1,106 @@
+"""Mixture-of-Experts layer: shared + routed experts, top-k, capacity dispatch.
+
+Dispatch is scatter/gather-based (sort-free GShard-style position assignment)
+so HLO FLOPs stay proportional to *active* expert compute — important for the
+roofline utility ratio.  Experts are sharded on the ``model`` mesh axis
+(expert parallelism); the dispatch buffers carry explicit sharding constraints
+(repro.models.shard_hints) so the partitioner routes tokens with an
+all-to-all instead of gathering expert weights.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import shard_hints
+from repro.models.layers import dense_init
+
+
+def moe_init(key, d_model: int, moe_d_ff: int, n_experts: int,
+             n_shared_experts: int, shared_d_ff: int, dtype):
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d_model, n_experts), jnp.float32),
+        "w_gate": dense_init(ks[1], (n_experts, d_model, moe_d_ff), dtype),
+        "w_up": dense_init(ks[2], (n_experts, d_model, moe_d_ff), dtype),
+        "w_down": dense_init(ks[3], (n_experts, moe_d_ff, d_model), dtype),
+    }
+    if n_shared_experts > 0:
+        from repro.models.layers import mlp_init
+        p["shared"] = mlp_init(ks[4], d_model, shared_d_ff, dtype)
+    return p
+
+
+def router_topk(logits, top_k: int):
+    """Top-k routing with softmax-renormalized gates. logits: (..., E) fp32."""
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(gates, top_k)
+    top_vals = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+    return top_vals, top_idx
+
+
+def load_balance_loss(logits, top_idx, n_experts: int):
+    """Switch-style auxiliary loss: E * sum_e f_e * p_e."""
+    gates = jax.nn.softmax(logits, axis=-1)
+    p_e = gates.mean(axis=0)
+    assign = jax.nn.one_hot(top_idx, n_experts, dtype=jnp.float32).sum(axis=1)
+    f_e = assign.mean(axis=0) / max(top_idx.shape[-1], 1)
+    return n_experts * jnp.sum(f_e * p_e)
+
+
+def moe_forward(params, x, *, n_experts: int, top_k: int,
+                capacity_factor: float = 1.25, group_size: int = 4096):
+    """x: (B, S, d). Returns (out, aux_loss).
+
+    Tokens are processed in G groups of g so per-expert capacity buffers stay
+    small; one batched scatter dispatches all groups at once (no vmap — the
+    buffer keeps an explicit (G, E, C, d) layout the partitioner can shard).
+    """
+    B, S, d = x.shape
+    xf = x.reshape(B * S, d)
+    N = B * S
+    g = min(group_size, N)
+    pad = (-N) % g
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    G = xf.shape[0] // g
+    xg = xf.reshape(G, g, d)
+    cap = int(max(top_k, g * top_k * capacity_factor / n_experts))
+
+    logits = xg.astype(jnp.float32) @ params["router"]        # (G, g, E)
+    gates, idx = router_topk(logits, top_k)                   # (G, g, k)
+
+    k = top_k
+    flat_idx = idx.reshape(G, g * k)                          # (G, g*k)
+    onehot = jax.nn.one_hot(flat_idx, n_experts, dtype=jnp.int32)
+    # log-depth prefix sum (TPU-idiomatic; a sequential cumsum lowers to a
+    # g*k-trip while loop on some backends)
+    pos = jax.lax.associative_scan(jnp.add, onehot, axis=1) - 1  # (G, g*k, E)
+    pos_in_expert = jnp.take_along_axis(pos, flat_idx[..., None], axis=2)[..., 0]
+    keep = pos_in_expert < cap
+    slot = jnp.where(keep, pos_in_expert, cap)                # overflow row
+
+    tok_rep = jnp.repeat(jnp.arange(g), k)                    # (g*k,)
+    g_idx = jnp.arange(G)[:, None]                            # (G, 1)
+    buf = jnp.zeros((G, n_experts, cap + 1, d), xg.dtype)
+    buf = buf.at[g_idx, flat_idx, slot].add(xg[:, tok_rep])
+    expert_in = shard_hints.constrain_expert_dim(buf[:, :, :cap], 1)  # (G,E,C,d)
+
+    gate = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, params["w_gate"]))
+    up = jnp.einsum("gecd,edf->gecf", expert_in, params["w_up"])
+    expert_out = jnp.einsum("gecf,efd->gecd", gate * up, params["w_down"])
+    expert_out = shard_hints.constrain_expert_dim(expert_out, 1)
+
+    out_tok = expert_out[g_idx, flat_idx, jnp.minimum(slot, cap - 1)]  # (G,g*k,d)
+    out_tok = out_tok * (keep[..., None] * gates.reshape(G, g * k, 1)
+                         ).astype(expert_out.dtype)
+    out = jnp.zeros((G, g, d), expert_out.dtype)
+    out = out.at[g_idx, jnp.broadcast_to(tok_rep, (G, g * k))].add(out_tok)
+    out = out.reshape(-1, d)[:N].reshape(B, S, d)
+
+    aux = load_balance_loss(logits.reshape(-1, n_experts),
+                            idx.reshape(-1, k), n_experts)
+    if "shared" in params:
+        from repro.models.layers import mlp
+        out = out + mlp(params["shared"], x)
+    return out, aux

@@ -1,0 +1,125 @@
+"""RWKV6 "Finch" block: attention-free time mixing with data-dependent decay.
+
+Recurrence (per head, head dim N, state S in R^{N x N}):
+    y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+with w_t = exp(-exp(w0 + lora_w(ddlerp(x)))) data-dependent per channel.
+
+The sequential form here is the oracle for the chunked Pallas kernel in
+``repro.kernels.wkv6``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+DDLERP_COMPONENTS = ("r", "k", "v", "w", "g")
+
+
+def rwkv6_init(key, d_model: int, n_heads: int, *, lora_rank: int = 32,
+               w_lora_rank: int = 64, dtype=jnp.bfloat16):
+    N = d_model // n_heads
+    ks = iter(jax.random.split(key, 24))
+    p = {
+        "mu_x": jnp.zeros((d_model,), dtype),
+        "w0": jnp.full((d_model,), -6.0, jnp.float32),
+        "u": jnp.zeros((n_heads, N), jnp.float32),
+        "ln_x_scale": jnp.ones((d_model,), jnp.float32),
+    }
+    for c in DDLERP_COMPONENTS:
+        p[f"mu_{c}"] = jnp.zeros((d_model,), dtype)
+        rank = w_lora_rank if c == "w" else lora_rank
+        p[f"lora_{c}_a"] = dense_init(next(ks), (d_model, rank), dtype)
+        p[f"lora_{c}_b"] = dense_init(next(ks), (rank, d_model), dtype)
+    for c in ("r", "k", "v", "g", "o"):
+        p[f"w_{c}"] = dense_init(next(ks), (d_model, d_model), dtype)
+    return p
+
+
+def _ddlerp(params, x, x_prev):
+    """Data-dependent lerp producing the 5 mixed inputs (r, k, v, w, g)."""
+    xx = x_prev - x
+    base = x + xx * params["mu_x"]
+    outs = {}
+    for c in DDLERP_COMPONENTS:
+        lo = jnp.tanh(base @ params[f"lora_{c}_a"]) @ params[f"lora_{c}_b"]
+        outs[c] = x + xx * (params[f"mu_{c}"] + lo)
+    return outs
+
+
+def _project(params, mixed, n_heads):
+    d = mixed["r"].shape[-1]
+    N = d // n_heads
+    shp = mixed["r"].shape[:-1] + (n_heads, N)
+    r = (mixed["r"] @ params["w_r"]).reshape(shp)
+    k = (mixed["k"] @ params["w_k"]).reshape(shp)
+    v = (mixed["v"] @ params["w_v"]).reshape(shp)
+    g = jax.nn.silu(mixed["g"] @ params["w_g"])
+    w_log = params["w0"] + (jnp.tanh(mixed["w"] @ params[f"lora_w_a"])
+                            @ params["lora_w_b"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_log)).reshape(shp)  # decay in (0, 1)
+    return r, k, v, w, g
+
+
+def _group_norm(x, scale, n_heads, eps=1e-5):
+    # per-head LayerNorm on the flattened (H*N) output, as in RWKV6
+    shp = x.shape
+    xh = x.reshape(shp[:-1] + (n_heads, shp[-1] // n_heads)).astype(jnp.float32)
+    mean = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mean) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(shp) * scale).astype(x.dtype)
+
+
+def wkv6_scan(r, k, v, w, u, state0=None):
+    """Sequential WKV6 recurrence. r,k,v,w: (B, S, H, N); u: (H, N).
+
+    Returns (y: (B, S, H, N), final_state: (B, H, N, N)).
+    """
+    B, S, H, N = r.shape
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    s0 = jnp.zeros((B, H, N, N), jnp.float32) if state0 is None else state0
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp  # (B, H, N)
+        kv = k_t[..., :, None] * v_t[..., None, :]        # (B, H, N, N)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[..., :, None] * kv)
+        s_new = w_t[..., :, None] * s + kv
+        return s_new, y
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (rf, kf, vf, wf))
+    from repro.models.mamba import _chunked_scan
+    s_fin, ys = _chunked_scan(step, s0, xs, S)
+    return ys.transpose(1, 0, 2, 3).astype(v.dtype), s_fin
+
+
+def rwkv6_forward(params, x, *, n_heads, state=None, use_kernel=False):
+    """Full-sequence RWKV6 time mixing. x: (B, S, d).
+
+    state (decode continuation): {"x_prev": (B, d), "wkv": (B, H, N, N)} or None.
+    Returns (out, new_state).
+    """
+    B, S, d = x.shape
+    x_prev_tok = x[:, :-1]
+    first = state["x_prev"][:, None] if state is not None else jnp.zeros_like(x[:, :1])
+    x_prev = jnp.concatenate([first, x_prev_tok], axis=1)
+    mixed = _ddlerp(params, x, x_prev)
+    r, k, v, w, g = _project(params, mixed, n_heads)
+    u = params["u"]
+    s0 = state["wkv"] if state is not None else None
+    if use_kernel:
+        from repro.kernels.wkv6 import ops as wkv_ops
+        y, s_fin = wkv_ops.wkv6(r, k, v, w, u, state0=s0)
+    else:
+        y, s_fin = wkv6_scan(r, k, v, w, u, state0=s0)
+    y = _group_norm(y.reshape(B, S, d), params["ln_x_scale"], n_heads)
+    out = (y * g) @ params["w_o"]
+    new_state = {"x_prev": x[:, -1], "wkv": s_fin}
+    return out, new_state
+
+
+def rwkv6_decode(params, x, state, *, n_heads):
+    """Single-token step; x: (B, 1, d), state as above."""
+    return rwkv6_forward(params, x, n_heads=n_heads, state=state)

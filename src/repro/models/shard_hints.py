@@ -1,0 +1,63 @@
+"""Sharding-constraint hints for model internals.
+
+The SPMD partitioner propagates input shardings well through simple stacks but
+loses them across deep scan+remat+vmap nests (observed: replicated activations
+and fully-gathered expert weights).  The launch layer registers the mesh axes
+here; model code drops ``with_sharding_constraint`` pins at the few places that
+anchor the layout:
+
+- activations after embedding and between super-blocks: batch dim -> batch axes
+- MoE dispatch buffers: expert dim -> "model" (expert parallelism)
+
+On hosts without a mesh (unit tests, simulation) hints are disabled and all
+helpers are no-ops.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_STATE = {"batch_axes": None, "model_axis": None}
+
+
+def configure(*, batch_axes: Optional[Tuple[str, ...]] = None,
+              model_axis: Optional[str] = None):
+    _STATE["batch_axes"] = batch_axes
+    _STATE["model_axis"] = model_axis
+
+
+def reset():
+    configure()
+
+
+@contextlib.contextmanager
+def hints(*, batch_axes=None, model_axis=None):
+    old = dict(_STATE)
+    configure(batch_axes=batch_axes, model_axis=model_axis)
+    try:
+        yield
+    finally:
+        _STATE.update(old)
+
+
+def constrain_activations(x):
+    """x: (..., B, S, d) — pin the batch dim (3rd from the end)."""
+    ba = _STATE["batch_axes"]
+    if ba is None:
+        return x
+    spec = [None] * x.ndim
+    spec[-3] = ba
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def constrain_expert_dim(t, expert_axis_index: int):
+    """Pin dim ``expert_axis_index`` of t to the model axis (expert parallel)."""
+    ma = _STATE["model_axis"]
+    if ma is None:
+        return t
+    spec = [None] * t.ndim
+    spec[expert_axis_index] = ma
+    return jax.lax.with_sharding_constraint(t, P(*spec))

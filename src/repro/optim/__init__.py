@@ -1,0 +1,2 @@
+from repro.optim.sgd import sgd_init, sgd_apply, clip_by_global_norm  # noqa: F401
+from repro.optim.schedules import wsd_schedule, cosine_schedule  # noqa: F401

@@ -1,0 +1,23 @@
+"""LR schedules. WSD (warmup-stable-decay) is MiniCPM's contribution
+(arXiv:2404.06395) and ships with that assigned architecture."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd_schedule(step, *, peak_lr, warmup_steps, stable_steps, decay_steps,
+                 final_ratio=0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    decay_frac = (step - warmup_steps - stable_steps) / jnp.maximum(decay_steps, 1)
+    decayed = peak_lr * jnp.exp(jnp.log(final_ratio) * jnp.clip(decay_frac, 0, 1))
+    return jnp.where(step < warmup_steps, warm,
+                     jnp.where(step < warmup_steps + stable_steps, peak_lr, decayed))
+
+
+def cosine_schedule(step, *, peak_lr, warmup_steps, total_steps, final_ratio=0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    t = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+    cos = final_ratio + (1 - final_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup_steps, warm, peak_lr * cos)

@@ -1,0 +1,33 @@
+"""Client-side optimizers. FedAvg participants run plain SGD (Alg. 2);
+momentum is available for the centralized-baseline comparisons."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_init(params, momentum: float = 0.0):
+    if momentum == 0.0:
+        return {}
+    return {"mom": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+
+def sgd_apply(params, grads, state, *, lr, momentum: float = 0.0):
+    if momentum == 0.0:
+        new = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)
+                          ).astype(p.dtype), params, grads)
+        return new, state
+    mom = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                       state["mom"], grads)
+    new = jax.tree.map(lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+                       params, mom)
+    return new, {"mom": mom}
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm

@@ -1,0 +1,143 @@
+"""Roofline analysis from a compiled dry-run artifact.
+
+  compute    = HLO_FLOPs / (chips * peak_FLOPs)
+  memory     = HLO_bytes / (chips * HBM_bw)
+  collective = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / bytes: ``compiled.cost_analysis()``.
+collective_bytes: parsed from the post-SPMD HLO text — the summed result-shape
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (per-chip program, so already per-chip bytes).
+
+Hardware constants: TPU v5e.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+
+import numpy as np
+
+V5E = {
+    "peak_flops_bf16": 197e12,   # FLOP/s per chip
+    "hbm_bw": 819e9,             # B/s per chip
+    "ici_bw": 50e9,              # B/s per link direction
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sum result-shape bytes per collective kind. ``-done`` ops are skipped so
+    async pairs aren't double counted."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        types, kind = m.group(1), m.group(2)
+        if m.group(0).rstrip("(").endswith("-done("):
+            continue
+        b = _shape_bytes(types)
+        out[kind] += b
+        counts[kind] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float
+    useful_ratio: float
+    per_device_hbm: float = float("nan")
+
+    def row(self) -> str:
+        return (f"{self.arch},{self.shape},{self.mesh},{self.chips},"
+                f"{self.hlo_flops:.3e},{self.hlo_bytes:.3e},"
+                f"{self.collective_bytes:.3e},{self.t_compute*1e3:.3f},"
+                f"{self.t_memory*1e3:.3f},{self.t_collective*1e3:.3f},"
+                f"{self.bottleneck},{self.model_flops:.3e},"
+                f"{self.useful_ratio:.3f},{self.per_device_hbm:.3e}")
+
+    HEADER = ("arch,shape,mesh,chips,hlo_flops,hlo_bytes,coll_bytes,"
+              "t_compute_ms,t_memory_ms,t_collective_ms,bottleneck,"
+              "model_flops,useful_ratio,per_device_hbm_bytes")
+
+
+def roofline_terms(*, arch: str, shape: str, mesh_name: str, chips: int,
+                   cost: dict, coll_bytes: float, model_flops_val: float,
+                   per_device_hbm: float = float("nan"),
+                   flops_are_per_chip: bool = True) -> RooflineReport:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    # cost_analysis of an SPMD-partitioned module reports the per-chip program
+    div = 1 if flops_are_per_chip else chips
+    t_comp = flops / div / V5E["peak_flops_bf16"]
+    t_mem = byts / div / V5E["hbm_bw"]
+    t_coll = coll_bytes / V5E["ici_bw"]
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    useful = model_flops_val / max(flops * (chips if flops_are_per_chip else 1), 1.0)
+    return RooflineReport(arch, shape, mesh_name, chips, flops, byts, coll_bytes,
+                          t_comp, t_mem, t_coll, bottleneck, model_flops_val,
+                          useful, per_device_hbm)
+
+
+def model_flops(n_params_active: int, n_tokens: int, kind: str) -> float:
+    """MODEL_FLOPS = 6*N*D for training, 2*N*D for inference forward."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_params_active * n_tokens
+
+
+def active_params(cfg, params_shape) -> int:
+    """Active parameters per token (MoE: routed experts counted top_k/E)."""
+    import jax
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_shape)[0]:
+        names = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        n = math.prod(leaf.shape)
+        if cfg.moe and any(x in names for x in ("w_gate", "w_up", "w_down")) \
+                and "ffn" in names and "shared" not in names \
+                and len(leaf.shape) >= 3:
+            n = n * cfg.top_k // max(cfg.n_experts, 1)
+        if "embedding" in names or "w_out" in names and "head" in names:
+            pass  # embeddings: gather ~O(d) per token, head counted fully
+        total += n
+    return int(total)

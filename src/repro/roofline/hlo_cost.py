@@ -1,0 +1,212 @@
+"""HLO cost walker: trip-count-aware FLOP / byte / collective accounting.
+
+XLA's ``compiled.cost_analysis()`` counts ``while`` (scan) bodies ONCE — for a
+depth-scanned transformer that under-reports compute by ~n_layers x.  This
+walker parses the post-optimization HLO text, expands every while body by its
+``known_trip_count`` backend config (fallback: the loop condition's compare
+constant), and accumulates:
+
+  - flops: dot = 2 * prod(result) * K; elementwise/reduce = result elements;
+  - bytes: operands + result per top-level op (fusion internals excluded,
+    matching XLA's convention);
+  - collective bytes per kind (all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute), also trip-count-scaled.
+
+The walker is deliberately conservative and structural: it is used for the
+roofline *terms*, where the dominant dots/collectives matter, not for exact
+instruction counts.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                    "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z]\w*)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->", re.M)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^)]*\)|[a-z]\w*\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+    r"([\w\-]+)\((.*)$")
+_TRIP_RE = re.compile(r'known_trip_count[":{\s]+n[":\s]+"?(\d+)')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "negate", "abs", "floor",
+    "ceil", "sign", "cosine", "sine", "atan2", "expm1", "log1p", "logistic",
+    "select", "compare", "and", "or", "xor", "not", "clamp", "remainder",
+}
+_FREE = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "reshape", "copy", "broadcast", "iota", "transpose", "slice", "concatenate",
+    "dynamic-slice", "dynamic-update-slice", "pad", "reverse", "convert",
+    "gather", "scatter", "reduce", "rng", "rng-bit-generator", "map",
+    "after-all", "partition-id", "replica-id", "custom-call", "infeed",
+    "outfeed", "add-dependency", "optimization-barrier", "domain",
+}
+
+
+def _shape_elems_bytes(type_str):
+    elems = byts = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations = self._split(hlo_text)
+        self._memo = {}
+
+    @staticmethod
+    def _split(text):
+        comps = {}
+        cur, name = None, None
+        for line in text.splitlines():
+            stripped = line.strip()
+            m = _COMP_HDR.match(line) if (line and not line[0].isspace()) else None
+            if m and stripped.endswith("{"):
+                name = m.group(1)
+                cur = []
+                comps[name] = cur
+            elif stripped == "}":
+                name, cur = None, None
+            elif cur is not None and stripped:
+                cur.append(stripped)
+        return comps
+
+    # ------------------------------------------------------------------
+    def cost(self, comp_name: str):
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        totals = defaultdict(float)
+        lines = self.computations.get(comp_name, [])
+        types = {}
+        for ln in lines:
+            m = _INSTR_RE.match(ln)
+            if m:
+                types[m.group(1)] = m.group(2)
+
+        for ln in lines:
+            m = _INSTR_RE.match(ln)
+            if not m:
+                continue
+            name, rtype, opcode, rest = m.groups()
+            r_elems, r_bytes = _shape_elems_bytes(rtype)
+
+            if opcode == "while":
+                trip = 1
+                tm = _TRIP_RE.search(ln)
+                if tm:
+                    trip = int(tm.group(1))
+                body = _BODY_RE.search(ln)
+                cond = _COND_RE.search(ln)
+                for sub_m, factor in ((body, trip), (cond, trip + 1)):
+                    if sub_m:
+                        sub = self.cost(sub_m.group(1))
+                        for k, v in sub.items():
+                            totals[k] += v * factor
+                continue
+
+            if opcode in ("fusion", "call", "conditional", "reduce", "map",
+                          "scatter", "select-and-scatter", "sort", "reduce-window"):
+                cm = _CALLS_RE.search(ln)
+                if cm:
+                    sub = self.cost(cm.group(1))
+                    for k, v in sub.items():
+                        totals[k] += v
+                # fusion/call IO bytes
+                op_bytes = 0
+                for op in _OPERAND_RE.findall(rest.split("),")[0]):
+                    if op in types:
+                        op_bytes += _shape_elems_bytes(types[op])[1]
+                totals["bytes"] += op_bytes + r_bytes
+                continue
+
+            if opcode == "dot":
+                k_size = 1
+                cd = _CONTRACT_RE.search(ln)
+                ops = _OPERAND_RE.findall(rest)
+                if cd and ops and ops[0] in types:
+                    lhs_dims = []
+                    sm = _SHAPE_RE.search(types[ops[0]])
+                    if sm:
+                        lhs_dims = [int(d) for d in sm.group(2).split(",") if d]
+                    for idx in cd.group(1).split(","):
+                        if idx and int(idx) < len(lhs_dims):
+                            k_size *= lhs_dims[int(idx)]
+                totals["flops"] += 2.0 * r_elems * k_size
+                op_bytes = sum(_shape_elems_bytes(types[o])[1]
+                               for o in ops if o in types)
+                totals["bytes"] += op_bytes + r_bytes
+                continue
+
+            if any(opcode.startswith(c) for c in COLLECTIVE_KINDS):
+                if opcode.endswith("-done"):
+                    continue
+                kind = next(c for c in COLLECTIVE_KINDS if opcode.startswith(c))
+                totals[f"coll_{kind}"] += r_bytes
+                totals["coll_total"] += r_bytes
+                totals["bytes"] += r_bytes
+                continue
+
+            if opcode in _ELEMENTWISE:
+                totals["flops"] += r_elems
+                op_bytes = sum(_shape_elems_bytes(types[o])[1]
+                               for o in _OPERAND_RE.findall(rest) if o in types)
+                totals["bytes"] += op_bytes + r_bytes
+                continue
+
+            if opcode in _FREE:
+                if opcode in ("copy", "gather", "scatter", "dynamic-update-slice",
+                              "dynamic-slice", "concatenate", "transpose", "pad",
+                              "reshape", "broadcast", "convert"):
+                    totals["bytes"] += 2.0 * r_bytes
+                continue
+            # unknown opcode: charge IO bytes only
+            totals["bytes"] += r_bytes
+        self._memo[comp_name] = dict(totals)
+        return self._memo[comp_name]
+
+    def entry_cost(self, entry_hint: str | None = None):
+        # entry computation is the one named like main / or marked ENTRY (first)
+        for cand in self.computations:
+            if entry_hint and cand == entry_hint:
+                return self.cost(cand)
+        for cand in self.computations:
+            if cand.startswith("main"):
+                return self.cost(cand)
+        # fallback: computation with max flops
+        best = {}
+        for cand in self.computations:
+            c = self.cost(cand)
+            if c.get("flops", 0) >= best.get("flops", 0):
+                best = c
+        return best
+
+
+def analyze_hlo(hlo_text: str) -> dict:
+    model = HloCostModel(hlo_text)
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo_text, re.M)
+    return model.entry_cost(m.group(1) if m else None)

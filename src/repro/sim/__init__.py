@@ -1,0 +1,4 @@
+"""FL simulation substrate: device profiles, availability traces, data
+partitioning, learner local training, resource accounting, and the
+event-driven round engine that reproduces the paper's methodology."""
+from repro.sim.engine import Simulator, SimConfig  # noqa: F401

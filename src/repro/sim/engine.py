@@ -1,0 +1,267 @@
+"""Event-driven FL round engine reproducing the paper's methodology (§5.1).
+
+Supports the paper's experimental settings:
+  OC — over-commit selection by 30% and wait for the first N_t updates;
+  DL — fixed reporting deadline, aggregate whatever arrived.
+SAFA semantics (select-all + target-ratio round end + bounded-staleness cache)
+and RELAY semantics (IPS + APT + SAA with Eq. 2 weights) are both expressible.
+
+Simulated time is decoupled from wall-clock: device durations come from the
+heterogeneity profiles, availability from the trace substrate, and every
+round's cohort trains in one vmapped JAX call.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.core.aggregation import (fedavg_apply, stale_synchronous_aggregate,
+                                    yogi_apply, yogi_init)
+from repro.core.apt import AdaptiveParticipantTarget
+from repro.core.availability import AvailabilityForecaster
+from repro.core.selection import SELECTORS, LearnerView, OortSelector, PrioritySelector
+from repro.sim import devices as dev
+from repro.sim import learner as ln
+from repro.sim import partition as part
+from repro.sim import traces as tr
+from repro.sim.metrics import Accounting, RoundRecord
+
+HOUR = 3600.0
+
+
+@dataclasses.dataclass
+class SimConfig:
+    benchmark: str = "speech"
+    mapping: str = "uniform"          # uniform | fedscale | label_{balanced,uniform,zipf}
+    n_learners: int = 200
+    rounds: int = 200
+    selector: str = "random"          # random | oort | priority | safa
+    aggregator: str = "fedavg"        # fedavg | yogi
+    scaling_rule: str = "relay"       # equal | dynsgd | adasgd | relay
+    beta: float = 0.35                # Eq. 2 averaging weight
+    saa: bool = False                 # accept stale updates
+    staleness_threshold: Optional[int] = None   # None = unbounded (RELAY default)
+    setting: str = "OC"               # OC | DL
+    deadline: float = 100.0           # DL reporting deadline (seconds)
+    n_target: int = 10
+    overcommit: float = 1.3           # OC over-commit factor
+    safa_target_ratio: float = 0.1    # SAFA round-end fraction
+    apt: bool = False
+    dynamic_availability: bool = True
+    hardware_scenario: str = "HS1"
+    local_steps: int = 5
+    local_batch: int = 16
+    local_lr: float = 0.05
+    prox_mu: float = 0.0              # FedProx proximal term (0 = plain FedAvg)
+    server_lr: float = 1.0
+    model_mbits: float = 50.0         # update size on the wire
+    eval_every: int = 10
+    selection_window: float = 5.0
+    seed: int = 0
+    use_agg_kernel: bool = False      # route aggregation through the Pallas kernel
+
+
+@dataclasses.dataclass
+class _InFlight:
+    learner_id: int
+    origin_round: int
+    arrival: float
+    duration: float
+    delta: object
+    stat_util: float
+
+
+class Simulator:
+    def __init__(self, cfg: SimConfig):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        x_tr, y_tr, x_te, y_te = part.make_dataset(cfg.benchmark, self.rng)
+        shards = part.partition(y_tr, cfg.n_learners, cfg.mapping, self.rng)
+        self.data = part.FederatedDataset(cfg.benchmark, x_tr, y_tr, x_te, y_te, shards)
+        self.profiles = dev.sample_profiles(cfg.n_learners, self.rng,
+                                            cfg.hardware_scenario)
+        self.traces = tr.make_traces(cfg.n_learners, self.rng,
+                                     dynamic=cfg.dynamic_availability)
+        self.forecasters = [AvailabilityForecaster() for _ in range(cfg.n_learners)]
+        self._warmup_forecasters()
+        sel_cls = SELECTORS[cfg.selector]
+        self.selector = sel_cls()
+        self.apt = AdaptiveParticipantTarget(n0=cfg.n_target) if cfg.apt else None
+        key = jax.random.PRNGKey(cfg.seed)
+        self.params = ln.mlp_init(key, self.data.x_train.shape[1], self.data.n_classes)
+        self.opt_state = yogi_init(self.params) if cfg.aggregator == "yogi" else None
+        self.acct = Accounting()
+        self.stale_cache: list[_InFlight] = []
+        self.busy_until = np.zeros(cfg.n_learners)  # device busy training/uploading
+        self.mu = cfg.deadline  # initial round-duration estimate
+
+    # ------------------------------------------------------------------
+    def _warmup_forecasters(self):
+        """Learners have pre-deployment local history (paper App. A step 2)."""
+        ts = np.arange(0, 3 * 24 * HOUR, 1800.0)
+        for lid, (f, t) in enumerate(zip(self.forecasters, self.traces)):
+            for tt in ts:
+                f.observe(tt, t.available(tt))
+
+    def _views(self, t_now: float, available_ids):
+        views = []
+        for lid in available_ids:
+            p = self.forecasters[lid].predict_window(t_now + self.mu,
+                                                     t_now + 2 * self.mu)
+            est = self.profiles[lid].round_duration(
+                self.cfg.local_steps * self.cfg.local_batch, 1, self.cfg.model_mbits)
+            views.append(LearnerView(lid, availability_prob=p, est_duration=est))
+        return views
+
+    def _local_round(self, participant_ids, t_now):
+        """Run the cohort's local training; returns per-participant results."""
+        cfg = self.cfg
+        xs, ys, durs, dropout_at = [], [], [], []
+        for lid in participant_ids:
+            bx, by = ln.sample_local_batches(self.data.shards[lid],
+                                             self.data.x_train, self.data.y_train,
+                                             cfg.local_steps, cfg.local_batch, self.rng)
+            xs.append(bx)
+            ys.append(by)
+            dur = self.profiles[lid].round_duration(
+                cfg.local_steps * cfg.local_batch, 1, cfg.model_mbits)
+            durs.append(dur)
+            nu = self.traces[lid].next_unavailable_after(t_now)
+            dropout_at.append(nu - t_now if nu - t_now < dur else np.inf)
+        deltas, losses, l2s = ln.local_train_cohort(
+            self.params, np.stack(xs), np.stack(ys), cfg.local_lr, cfg.prox_mu)
+        return deltas, np.asarray(losses), np.asarray(l2s), durs, dropout_at
+
+    # ------------------------------------------------------------------
+    def run(self, progress: bool = False):
+        cfg = self.cfg
+        t_now = 0.0
+        for r in range(cfg.rounds):
+            t_now += cfg.selection_window
+            available = [lid for lid in range(cfg.n_learners)
+                         if self.traces[lid].available(t_now)
+                         and self.busy_until[lid] <= t_now]
+            for lid in available:  # devices log their own state continuously
+                self.forecasters[lid].observe(t_now, True)
+            if not available:
+                t_now += 60.0
+                continue
+
+            # --- target & selection -----------------------------------
+            n_t = cfg.n_target
+            if self.apt is not None:
+                rts = [f.arrival - t_now for f in self.stale_cache
+                       if f.arrival > t_now]
+                n_t = self.apt.target(rts)
+            n_sel = (int(np.ceil(n_t * cfg.overcommit))
+                     if cfg.setting == "OC" else n_t)
+            views = self._views(t_now, available)
+            chosen = self.selector.select(r, views, n_sel, self.rng)
+            if not chosen:
+                t_now += 60.0
+                continue
+
+            # --- local training (simulated durations, real gradients) --
+            deltas, losses, l2s, durs, drop_at = self._local_round(chosen, t_now)
+
+            arrivals = []   # (arrival_time, idx into chosen) for non-dropouts
+            for i, lid in enumerate(chosen):
+                if drop_at[i] is not np.inf and drop_at[i] < durs[i]:
+                    # device went away mid-round: partial work, always wasted
+                    self.acct.charge(float(drop_at[i]), wasted=True)
+                    self.busy_until[lid] = t_now + float(drop_at[i])
+                else:
+                    arrivals.append((t_now + durs[i], i))
+                    self.acct.charge(float(durs[i]), wasted=False)
+                    self.busy_until[lid] = t_now + float(durs[i])
+            arrivals.sort()
+
+            # --- round end time ---------------------------------------
+            if cfg.selector == "safa":
+                need = max(1, int(np.ceil(cfg.safa_target_ratio * len(chosen))))
+                t_end = (arrivals[need - 1][0] if len(arrivals) >= need
+                         else t_now + cfg.deadline)
+                t_end = min(t_end, t_now + cfg.deadline)
+            elif cfg.setting == "OC":
+                t_end = (arrivals[n_t - 1][0] if len(arrivals) >= n_t
+                         else (arrivals[-1][0] if arrivals else t_now + cfg.deadline))
+            else:  # DL
+                t_end = t_now + cfg.deadline
+
+            # --- split fresh / straggler ------------------------------
+            fresh_updates, fresh_ids = [], []
+            for (arr, i) in arrivals:
+                lid = chosen[i]
+                delta_i = jax.tree.map(lambda d: d[i], deltas)
+                stat_util = float(cfg.local_steps * cfg.local_batch * l2s[i])
+                self.selector.update_feedback(lid, stat_util=stat_util,
+                                              duration=durs[i], round_idx=r)
+                if arr <= t_end and (cfg.setting == "DL" or cfg.selector == "safa"
+                                     or len(fresh_updates) < n_t):
+                    fresh_updates.append(delta_i)
+                    fresh_ids.append(lid)
+                    self.acct.unique.add(lid)
+                elif cfg.saa:
+                    self.stale_cache.append(_InFlight(lid, r, arr, durs[i],
+                                                      delta_i, stat_util))
+                else:
+                    self.acct.uncharge_waste(0.0)
+                    self.acct.resource_wasted += durs[i]
+
+            # --- stale updates landing this round ---------------------
+            stale_updates, stale_taus = [], []
+            still_waiting = []
+            for f in self.stale_cache:
+                if f.arrival <= t_end:
+                    tau = r - f.origin_round
+                    if (cfg.staleness_threshold is None
+                            or tau <= cfg.staleness_threshold):
+                        stale_updates.append(f.delta)
+                        stale_taus.append(tau)
+                        self.acct.unique.add(f.learner_id)
+                    else:
+                        self.acct.resource_wasted += f.duration
+                else:
+                    still_waiting.append(f)
+            self.stale_cache = still_waiting
+
+            # --- aggregate + server update ----------------------------
+            if fresh_updates or stale_updates:
+                updates = fresh_updates + stale_updates
+                fresh_mask = [True] * len(fresh_updates) + [False] * len(stale_updates)
+                taus = [0] * len(fresh_updates) + stale_taus
+                agg, _ = stale_synchronous_aggregate(
+                    updates, fresh_mask, taus, rule=cfg.scaling_rule,
+                    beta=cfg.beta, use_kernel=cfg.use_agg_kernel)
+                if cfg.aggregator == "yogi":
+                    self.params, self.opt_state = yogi_apply(
+                        self.params, agg, self.opt_state)
+                else:
+                    self.params = fedavg_apply(self.params, agg, cfg.server_lr)
+
+            # --- bookkeeping ------------------------------------------
+            duration = t_end - t_now
+            self.mu = (self.apt.update_round_duration(duration)
+                       if self.apt is not None else
+                       0.75 * duration + 0.25 * self.mu)
+            rec = RoundRecord(r, t_end, len(chosen), len(fresh_updates),
+                              len(stale_updates), self.acct.resource_used,
+                              self.acct.resource_wasted, len(self.acct.unique))
+            if (r + 1) % cfg.eval_every == 0 or r == cfg.rounds - 1:
+                acc, loss = ln.evaluate(self.params, self.data.x_test,
+                                        self.data.y_test)
+                rec.accuracy, rec.loss = float(acc), float(loss)
+                if progress:
+                    print(f"  round {r:4d} t={t_end/60:7.1f}min acc={acc:.3f} "
+                          f"used={self.acct.resource_used/60:.0f}min "
+                          f"wasted={100*self.acct.resource_wasted/max(self.acct.resource_used,1e-9):.0f}%")
+            self.acct.records.append(rec)
+            t_now = t_end
+
+        # updates still in flight at the end of training are wasted work
+        for f in self.stale_cache:
+            self.acct.resource_wasted += f.duration
+        return self.acct

@@ -1,0 +1,84 @@
+"""Learner-side local training for the FL simulation.
+
+The simulation model is a 2-layer MLP classifier (the statistical role the
+paper's ResNet/ShuffleNet/Albert play, scaled to CPU).  All selected
+participants of a round train in one ``vmap``-ed jitted call — the TPU-pod
+analogue of FedScale's time-multiplexed GPU workers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def mlp_init(key, dim: int, n_classes: int, hidden: int = 128):
+    k1, k2 = jax.random.split(key)
+    s1, s2 = dim ** -0.5, hidden ** -0.5
+    return {
+        "w1": jax.random.normal(k1, (dim, hidden), jnp.float32) * s1,
+        "b1": jnp.zeros((hidden,), jnp.float32),
+        "w2": jax.random.normal(k2, (hidden, n_classes), jnp.float32) * s2,
+        "b2": jnp.zeros((n_classes,), jnp.float32),
+    }
+
+
+def mlp_apply(params, x):
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def _xent(params, x, y):
+    logits = mlp_apply(params, x)
+    logp = jax.nn.log_softmax(logits)
+    losses = -jnp.take_along_axis(logp, y[:, None], axis=1)[:, 0]
+    return losses.mean(), losses
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "prox_mu"))
+def local_train(params, xs, ys, lr: float, prox_mu: float = 0.0):
+    """K local SGD steps (Alg. 2 participant update).
+
+    xs: (n_steps, batch, dim); ys: (n_steps, batch).
+    ``prox_mu > 0`` adds FedProx's proximal term mu/2 ||w - w_global||^2
+    (Li et al., MLSys'20) to each local step.
+    Returns (delta pytree, mean loss, sqrt(mean loss^2) for Oort stat-util).
+    """
+    p0 = params
+
+    def step(p, xy):
+        x, y = xy
+        (loss, losses), g = jax.value_and_grad(_xent, has_aux=True)(p, x, y)
+        if prox_mu > 0.0:
+            g = jax.tree.map(lambda gw, w, w0: gw + prox_mu * (w - w0), g, p, p0)
+        p = jax.tree.map(lambda w, gw: w - lr * gw, p, g)
+        return p, (loss, jnp.sqrt(jnp.mean(losses ** 2)))
+
+    final, (losses, l2s) = jax.lax.scan(step, params, (xs, ys))
+    delta = jax.tree.map(lambda a, b: a - b, final, params)
+    return delta, losses.mean(), l2s.mean()
+
+
+# vmap over the participant axis — one compiled program trains the whole cohort
+local_train_cohort = jax.jit(
+    jax.vmap(local_train, in_axes=(None, 0, 0, None, None)),
+    static_argnames=("lr", "prox_mu"))
+
+
+@jax.jit
+def evaluate(params, x, y):
+    logits = mlp_apply(params, x)
+    acc = (logits.argmax(-1) == y).mean()
+    loss, _ = _xent(params, x, y)
+    return acc, loss
+
+
+def sample_local_batches(shard_idx: np.ndarray, x: np.ndarray, y: np.ndarray,
+                         n_steps: int, batch: int, rng: np.random.Generator):
+    """Fixed-shape local batches (with replacement when the shard is small)."""
+    take = rng.choice(shard_idx, size=n_steps * batch,
+                      replace=len(shard_idx) < n_steps * batch)
+    return (x[take].reshape(n_steps, batch, -1),
+            y[take].reshape(n_steps, batch))

@@ -1,0 +1,69 @@
+"""Resource & quality accounting (the paper's evaluation currency).
+
+- resource usage: cumulative compute+comm time spent by participants,
+  *including* work that is never aggregated (paper footnote 3);
+- resource wastage: the subset of that time whose updates were never
+  incorporated into the global model;
+- unique-participant rate (Fig. 3's right axis);
+- accuracy/time/round timelines.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    round_idx: int
+    sim_time: float
+    n_selected: int
+    n_fresh: int
+    n_stale: int
+    resource_used: float       # cumulative seconds
+    resource_wasted: float     # cumulative seconds
+    unique_participants: int
+    accuracy: float = float("nan")
+    loss: float = float("nan")
+
+
+@dataclasses.dataclass
+class Accounting:
+    records: List[RoundRecord] = dataclasses.field(default_factory=list)
+    resource_used: float = 0.0
+    resource_wasted: float = 0.0
+    unique: set = dataclasses.field(default_factory=set)
+
+    def charge(self, seconds: float, wasted: bool):
+        self.resource_used += seconds
+        if wasted:
+            self.resource_wasted += seconds
+
+    def uncharge_waste(self, seconds: float):
+        """A previously-wasted contribution later got aggregated (stale path)."""
+        self.resource_wasted -= seconds
+
+    def csv(self) -> str:
+        hdr = ("round,sim_time,n_selected,n_fresh,n_stale,resource_used,"
+               "resource_wasted,unique_participants,accuracy,loss")
+        rows = [hdr]
+        for r in self.records:
+            rows.append(f"{r.round_idx},{r.sim_time:.1f},{r.n_selected},{r.n_fresh},"
+                        f"{r.n_stale},{r.resource_used:.1f},{r.resource_wasted:.1f},"
+                        f"{r.unique_participants},{r.accuracy:.4f},{r.loss:.4f}")
+        return "\n".join(rows)
+
+    def summary(self) -> dict:
+        last = self.records[-1] if self.records else None
+        accs = [r.accuracy for r in self.records if r.accuracy == r.accuracy]
+        return {
+            "rounds": len(self.records),
+            "sim_time": last.sim_time if last else 0.0,
+            "resource_used": self.resource_used,
+            "resource_wasted": self.resource_wasted,
+            "waste_fraction": (self.resource_wasted / self.resource_used
+                               if self.resource_used else 0.0),
+            "unique_participants": len(self.unique),
+            "final_accuracy": accs[-1] if accs else float("nan"),
+            "best_accuracy": max(accs) if accs else float("nan"),
+        }

@@ -1,0 +1,79 @@
+"""Aggregation / server-optimizer tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import (aggregate_updates, fedavg_apply,
+                                    flatten_update, stale_synchronous_aggregate,
+                                    unflatten_update, yogi_apply, yogi_init)
+
+
+def _tree(seed, shapes=((3, 4), (7,), (2, 2, 2))):
+    rng = np.random.default_rng(seed)
+    return {f"p{i}": jnp.asarray(rng.standard_normal(s), jnp.float32)
+            for i, s in enumerate(shapes)}
+
+
+def test_flatten_roundtrip():
+    t = _tree(0)
+    flat, spec = flatten_update(t)
+    back = unflatten_update(flat, spec)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_flatten_roundtrip_bf16():
+    t = {"a": jnp.ones((3, 3), jnp.bfloat16), "b": jnp.zeros((2,), jnp.float32)}
+    flat, spec = flatten_update(t)
+    back = unflatten_update(flat, spec)
+    assert back["a"].dtype == jnp.bfloat16 and back["b"].dtype == jnp.float32
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 8), seed=st.integers(0, 20))
+def test_aggregate_is_convex_combination(n, seed):
+    rng = np.random.default_rng(seed)
+    trees = [_tree(seed + i) for i in range(n)]
+    fresh = [True] * max(1, n // 2) + [False] * (n - max(1, n // 2))
+    tau = [0] * max(1, n // 2) + [2] * (n - max(1, n // 2))
+    agg, w = stale_synchronous_aggregate(trees, fresh, tau, rule="relay")
+    # aggregate lies within the per-coordinate min/max envelope
+    for key in trees[0]:
+        stack = np.stack([np.asarray(t[key]) for t in trees])
+        a = np.asarray(agg[key])
+        assert (a <= stack.max(0) + 1e-5).all()
+        assert (a >= stack.min(0) - 1e-5).all()
+
+
+def test_fedavg_apply():
+    params = {"w": jnp.ones((2, 2), jnp.bfloat16)}
+    delta = {"w": jnp.full((2, 2), 0.5, jnp.float32)}
+    new = fedavg_apply(params, delta, server_lr=1.0)
+    np.testing.assert_allclose(np.asarray(new["w"], np.float32), 1.5)
+    assert new["w"].dtype == jnp.bfloat16
+
+
+def test_yogi_moves_toward_delta_direction():
+    params = {"w": jnp.zeros((4,), jnp.float32)}
+    state = yogi_init(params)
+    delta = {"w": jnp.asarray([1.0, -1.0, 2.0, 0.0])}
+    p = params
+    for _ in range(10):
+        p, state = yogi_apply(p, delta, state, lr=0.1)
+    w = np.asarray(p["w"])
+    assert w[0] > 0 and w[1] < 0 and w[2] > 0 and abs(w[3]) < 1e-6
+
+
+def test_kernel_path_matches_jnp_path():
+    trees = [_tree(i) for i in range(5)]
+    fresh = [True, True, True, False, False]
+    tau = [0, 0, 0, 1, 4]
+    agg1, w1 = stale_synchronous_aggregate(trees, fresh, tau, rule="relay",
+                                           use_kernel=False)
+    agg2, w2 = stale_synchronous_aggregate(trees, fresh, tau, rule="relay",
+                                           use_kernel=True)
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(agg1), jax.tree.leaves(agg2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-6)

@@ -1,0 +1,91 @@
+"""Theorem 1 sanity: Stale-Synchronous FedAvg (Alg. 2) on a controlled
+non-convex problem — staleness tau must not change the asymptote ("asynchrony
+for free"), and the rate improves with n and K.  Fully jitted (lax.scan)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _loss(x, z):
+    """Smooth non-convex objective + noise sample z."""
+    return jnp.sum((x[1:] - x[:-1] ** 2) ** 2) + 0.1 * jnp.sum((x - z) ** 2)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "K", "tau", "T", "d"))
+def _run(key0, *, n, K, tau, T, d, gamma):
+    grad = jax.grad(_loss)
+
+    def local_delta(x, key):
+        def k_step(y, kk):
+            z = 0.3 * jax.random.normal(kk, (d,))
+            return y - gamma * grad(y, z), None
+        y, _ = jax.lax.scan(k_step, x, jax.random.split(key, K))
+        return y - x
+
+    def round_fn(carry, key):
+        x, buf, ptr = carry                      # buf: (tau+1, d) delay line
+        deltas = jax.vmap(lambda kk: local_delta(x, kk))(jax.random.split(key, n))
+        buf = buf.at[ptr % (tau + 1)].set(deltas.mean(0))
+        ready = (ptr >= tau).astype(jnp.float32)
+        x = x + ready * buf[(ptr - tau) % (tau + 1)]
+        gn = jnp.linalg.norm(grad(x, jnp.zeros(d)))
+        return (x, buf, ptr + 1), gn
+
+    init = (jnp.ones((d,)) * 2.0, jnp.zeros((tau + 1, d)), jnp.asarray(0))
+    _, norms = jax.lax.scan(round_fn, init, jax.random.split(key0, T))
+    return norms
+
+
+def run_stale_fedavg(n=4, K=2, tau=0, T=300, gamma=0.02, d=6, seed=0):
+    """Direct implementation of Alg. 2 with fixed round delay tau."""
+    norms = _run(jax.random.PRNGKey(seed), n=n, K=K, tau=tau, T=T, d=d,
+                 gamma=gamma)
+    return np.asarray(norms)
+
+
+def test_converges_with_staleness():
+    norms = run_stale_fedavg(tau=3)
+    assert norms[-50:].mean() < 0.2 * norms[:10].mean()
+
+
+def test_asynchrony_for_free():
+    """tau only affects the transient: late-phase gradient norms match sync."""
+    sync = run_stale_fedavg(tau=0, T=400)
+    stale = run_stale_fedavg(tau=5, T=400)
+    assert stale[-50:].mean() < 2.0 * sync[-50:].mean() + 1e-3
+
+
+def test_rate_improves_with_n():
+    """More participants per round -> smaller stationary gradient norm
+    (variance reduction, the 1/sqrt(n) factor)."""
+    small = run_stale_fedavg(n=1, T=400, seed=1)[-100:].mean()
+    big = run_stale_fedavg(n=16, T=400, seed=1)[-100:].mean()
+    assert big < small
+
+
+def test_rate_improves_with_K():
+    """More local steps -> faster progress per round (the 1/sqrt(K) factor)."""
+    k1 = run_stale_fedavg(K=1, T=150, seed=2)
+    k4 = run_stale_fedavg(K=4, T=150, seed=2)
+    assert k4[100:].mean() < k1[100:].mean()
+
+
+def test_large_staleness_slows_transient():
+    """The O(1/T) term grows with tau: with a step size satisfying Theorem 1's
+    gamma <= O(1/(L sqrt(tau K (n tau K + M)))) bound, large tau still
+    converges but the transient is slower than synchronous."""
+    gamma = 0.004  # small enough for tau=8 per the Theorem-1 step-size bound
+    sync = run_stale_fedavg(tau=0, T=250, seed=3, gamma=gamma)
+    stale = run_stale_fedavg(tau=8, T=250, seed=3, gamma=gamma)
+    assert np.isfinite(stale).all()
+    assert sync[60:120].mean() < stale[60:120].mean()   # slower transient
+    assert stale[-50:].mean() < 0.5 * stale[:10].mean()  # ...but converges
+
+
+def test_step_size_bound_matters():
+    """Violating the tau-dependent step-size bound diverges — the instability
+    Theorem 1 guards against is real, not an artifact."""
+    diverged = run_stale_fedavg(tau=20, T=80, seed=3, gamma=0.02)
+    assert not np.isfinite(diverged[-10:]).all()

@@ -1,0 +1,104 @@
+"""Selector behavior tests (paper Alg. 1 + baselines)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.selection import (LearnerView, OortSelector, PrioritySelector,
+                                  RandomSelector, SafaSelector)
+
+
+def _views(n, rng, probs=None, durations=None):
+    return [LearnerView(i,
+                        availability_prob=(probs[i] if probs is not None
+                                           else rng.random()),
+                        est_duration=(durations[i] if durations is not None
+                                      else rng.uniform(10, 300)))
+            for i in range(n)]
+
+
+def test_random_selects_target_count():
+    rng = np.random.default_rng(0)
+    sel = RandomSelector()
+    chosen = sel.select(0, _views(50, rng), 10, rng)
+    assert len(chosen) == 10 and len(set(chosen)) == 10
+
+
+def test_safa_selects_everyone():
+    rng = np.random.default_rng(0)
+    chosen = SafaSelector().select(0, _views(37, rng), 10, rng)
+    assert len(chosen) == 37
+
+
+def test_priority_picks_least_available():
+    """Alg. 1: ascending availability order."""
+    rng = np.random.default_rng(0)
+    probs = np.linspace(0.05, 0.95, 20)
+    chosen = PrioritySelector(holdoff=0).select(0, _views(20, rng, probs=probs),
+                                                5, rng)
+    assert sorted(chosen) == [0, 1, 2, 3, 4]
+
+
+def test_priority_tie_shuffling():
+    rng = np.random.default_rng(1)
+    probs = np.full(30, 0.5)
+    counts = np.zeros(30)
+    for r in range(200):
+        sel = PrioritySelector(holdoff=0)
+        for lid in sel.select(r, _views(30, rng, probs=probs), 5, rng):
+            counts[lid] += 1
+    assert counts.min() > 0  # ties broken randomly -> everyone gets picked
+
+
+def test_priority_holdoff():
+    """Participants hold off for `holdoff` rounds after selection."""
+    rng = np.random.default_rng(0)
+    probs = np.linspace(0.05, 0.95, 20)
+    sel = PrioritySelector(holdoff=5)
+    first = sel.select(0, _views(20, rng, probs=probs), 5, rng)
+    second = sel.select(1, _views(20, rng, probs=probs), 5, rng)
+    assert not set(first) & set(second)
+
+
+def test_oort_prefers_high_utility():
+    rng = np.random.default_rng(0)
+    durations = np.full(20, 50.0)
+    sel = OortSelector(eps0=0.0)  # pure exploitation
+    for lid in range(20):
+        sel.update_feedback(lid, stat_util=float(lid), duration=50.0)
+    chosen = sel.select(0, _views(20, rng, durations=durations), 5, rng)
+    assert set(chosen) == {15, 16, 17, 18, 19}
+
+
+def test_oort_penalizes_slow_learners():
+    rng = np.random.default_rng(0)
+    sel = OortSelector(eps0=0.0, alpha=2.0)
+    sel.t_pref = 100.0
+    # same stat utility, one much slower than t_pref
+    sel.update_feedback(0, stat_util=10.0, duration=50.0)
+    sel.update_feedback(1, stat_util=10.0, duration=400.0)
+    views = _views(2, rng, durations=np.array([50.0, 400.0]))
+    chosen = sel.select(0, views, 1, rng)
+    assert chosen == [0]
+
+
+def test_oort_explores_unexplored():
+    rng = np.random.default_rng(0)
+    sel = OortSelector(eps0=1.0, eps_min=1.0)  # pure exploration
+    for lid in range(5):
+        sel.update_feedback(lid, stat_util=100.0, duration=10.0)
+    views = _views(10, rng, durations=np.linspace(10, 100, 10))
+    chosen = sel.select(0, views, 5, rng)
+    assert set(chosen) & set(range(5, 10))  # includes unexplored learners
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 60), k=st.integers(1, 20), seed=st.integers(0, 50))
+def test_selectors_return_valid_subsets(n, k, seed):
+    rng = np.random.default_rng(seed)
+    views = _views(n, rng)
+    for sel in (RandomSelector(), PrioritySelector(), OortSelector()):
+        chosen = sel.select(0, views, k, rng)
+        assert len(chosen) <= max(k, n)
+        assert len(set(chosen)) == len(chosen)
+        assert set(chosen) <= set(range(n))
+        assert len(chosen) == min(k, n)

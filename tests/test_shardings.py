@@ -1,0 +1,92 @@
+"""Sharding-rule tests: every assigned arch's param specs must divide evenly
+on the production mesh axes (structure-level — the 512-device compile itself
+is exercised by repro.launch.dryrun)."""
+import math
+import types
+
+import jax
+import pytest
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, adapt_for_shape, get_config
+from repro.launch.shardings import input_specs, param_pspecs
+from repro.models import init_params
+
+
+class FakeMesh:
+    """Duck-typed mesh: shape dict + axis_names, no devices needed."""
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+SINGLE = FakeMesh({"data": 16, "model": 16})
+MULTI = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _check_divisibility(pspecs, shapes, mesh):
+    for (path, spec), leaf in zip(
+            jax.tree_util.tree_flatten_with_path(
+                pspecs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))[0],
+            jax.tree.leaves(shapes)):
+        for dim, ax in zip(leaf.shape, spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = math.prod(mesh.shape[a] for a in axes)
+            assert dim % n == 0, (path, leaf.shape, spec)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("mesh", [SINGLE, MULTI], ids=["pod", "multipod"])
+def test_param_specs_divide(arch, mesh):
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    pspecs = param_pspecs(cfg, shapes, mesh)
+    # structurally identical trees
+    assert jax.tree.structure(jax.tree.map(lambda x: 0, shapes)) == \
+        jax.tree.structure(jax.tree.map(
+            lambda x: 0, pspecs,
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)))
+    _check_divisibility(pspecs, shapes, mesh)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape_name", list(INPUT_SHAPES))
+@pytest.mark.parametrize("mesh", [SINGLE, MULTI], ids=["pod", "multipod"])
+def test_input_specs_divide(arch, shape_name, mesh):
+    shape = INPUT_SHAPES[shape_name]
+    cfg = adapt_for_shape(get_config(arch), shape)
+    for cohort in (("vmap", "stream") if shape.kind == "train" else ("-",)):
+        spec = input_specs(cfg, shape, mesh, cohort=cohort)
+        for name, tree in spec.args.items():
+            specs = spec.arg_specs[name]
+            flat_args = jax.tree.leaves(tree)
+            flat_specs = jax.tree.leaves(
+                specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+            for leaf, sp in zip(flat_args, flat_specs):
+                for dim, ax in zip(leaf.shape, sp):
+                    if ax is None:
+                        continue
+                    axes = ax if isinstance(ax, tuple) else (ax,)
+                    n = math.prod(mesh.shape[a] for a in axes)
+                    assert dim % n == 0, (arch, shape_name, name, leaf.shape, sp)
+
+
+def test_long_500k_uses_subquadratic_attention():
+    """DESIGN.md §4: every arch with full attention switches to SWA for
+    long_500k; SSM archs are untouched."""
+    shape = INPUT_SHAPES["long_500k"]
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        adapted = adapt_for_shape(cfg, shape)
+        if "attn" in cfg.block_pattern:
+            assert adapted.window is not None, arch
+        else:
+            assert adapted.window == cfg.window, arch
+
+
+def test_train_enables_remat_and_loss_chunking():
+    shape = INPUT_SHAPES["train_4k"]
+    cfg = adapt_for_shape(get_config("qwen2.5-3b"), shape)
+    assert cfg.remat and cfg.loss_chunk > 0

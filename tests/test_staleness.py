@@ -1,0 +1,112 @@
+"""Unit + property tests for SAA weight scaling (paper §4.2.4, Eq. 2)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.staleness import (SCALING_RULES, deviation_scores,
+                                  fresh_average, staleness_weights)
+
+
+def _mk(n, d, seed=0, n_fresh=None):
+    rng = np.random.default_rng(seed)
+    U = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    n_fresh = n_fresh if n_fresh is not None else max(1, n // 2)
+    fresh = jnp.asarray([i < n_fresh for i in range(n)])
+    tau = jnp.asarray([0] * n_fresh + list(rng.integers(1, 8, n - n_fresh)),
+                      jnp.int32)
+    return U, fresh, tau
+
+
+@pytest.mark.parametrize("rule", list(SCALING_RULES))
+def test_weights_normalized(rule):
+    U, fresh, tau = _mk(7, 33)
+    w = staleness_weights(U, fresh, tau, rule=rule)
+    assert np.isclose(float(w.sum()), 1.0, atol=1e-5)
+    assert (np.asarray(w) >= 0).all()
+
+
+def test_fresh_only_is_plain_average():
+    U, _, _ = _mk(5, 16)
+    fresh = jnp.ones(5, bool)
+    tau = jnp.zeros(5, jnp.int32)
+    w = staleness_weights(U, fresh, tau, rule="relay")
+    np.testing.assert_allclose(np.asarray(w), np.full(5, 0.2), rtol=1e-6)
+
+
+def test_equal_rule_uniform():
+    U, fresh, tau = _mk(6, 10)
+    w = staleness_weights(U, fresh, tau, rule="equal")
+    np.testing.assert_allclose(np.asarray(w), np.full(6, 1 / 6), rtol=1e-6)
+
+
+def test_dynsgd_monotone_in_tau():
+    """1/(tau+1): more stale => strictly less weight."""
+    U, fresh, _ = _mk(6, 10, n_fresh=2)
+    tau = jnp.asarray([0, 0, 1, 2, 4, 7], jnp.int32)
+    w = np.asarray(staleness_weights(U, fresh, tau, rule="dynsgd"))
+    assert w[2] > w[3] > w[4] > w[5]
+
+
+def test_adasgd_decays_faster_than_dynsgd():
+    U, fresh, _ = _mk(4, 10, n_fresh=2)
+    tau = jnp.asarray([0, 0, 5, 5], jnp.int32)
+    w_dyn = np.asarray(staleness_weights(U, fresh, tau, rule="dynsgd"))
+    w_ada = np.asarray(staleness_weights(U, fresh, tau, rule="adasgd"))
+    # relative to fresh weight, adasgd dampens stale harder
+    assert w_ada[2] / w_ada[0] < w_dyn[2] / w_dyn[0]
+
+
+def test_relay_boosts_deviant_update():
+    """Paper's core claim for Eq. 2: among equally-stale updates, the one
+    deviating more from the fresh mean gets MORE weight (it carries novel
+    data), unlike DynSGD/AdaSGD which ignore content."""
+    rng = np.random.default_rng(3)
+    base = rng.standard_normal(32).astype(np.float32)
+    U = jnp.asarray(np.stack([
+        base, base + 0.01 * rng.standard_normal(32),  # 2 fresh, similar
+        base + 0.02 * rng.standard_normal(32),        # stale, low deviation
+        base + 5.0 * rng.standard_normal(32),         # stale, high deviation
+    ]))
+    fresh = jnp.asarray([True, True, False, False])
+    tau = jnp.asarray([0, 0, 3, 3], jnp.int32)
+    w = np.asarray(staleness_weights(U, fresh, tau, rule="relay", beta=0.35))
+    assert w[3] > w[2]
+
+
+def test_deviation_zero_for_fresh():
+    U, fresh, _ = _mk(6, 12)
+    lam = np.asarray(deviation_scores(U, fresh))
+    assert (lam[np.asarray(fresh)] == 0).all()
+    assert (lam[~np.asarray(fresh)] > 0).all()
+
+
+def test_deviation_closed_form():
+    """Lam_s == ||u_hat - u_s||^2 / ((n_F+1)^2 ||u_hat||^2)."""
+    U, fresh, _ = _mk(5, 20, seed=9)
+    lam = np.asarray(deviation_scores(U, fresh))
+    uh = np.asarray(fresh_average(U, fresh))
+    nf = int(np.asarray(fresh).sum())
+    for s in range(5):
+        if not bool(fresh[s]):
+            expect = (np.sum((uh - np.asarray(U[s])) ** 2)
+                      / ((nf + 1) ** 2 * np.sum(uh ** 2)))
+            np.testing.assert_allclose(lam[s], expect, rtol=1e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(2, 12), d=st.integers(1, 64),
+       n_fresh=st.integers(1, 11), seed=st.integers(0, 100),
+       rule=st.sampled_from(list(SCALING_RULES)),
+       beta=st.floats(0.0, 1.0))
+def test_weights_property(n, d, n_fresh, seed, rule, beta):
+    """Invariants for ANY configuration: weights form a probability vector,
+    fresh updates all share the max weight."""
+    n_fresh = min(n_fresh, n)
+    U, fresh, tau = _mk(n, d, seed=seed, n_fresh=n_fresh)
+    w = np.asarray(staleness_weights(U, fresh, tau, rule=rule, beta=beta))
+    assert np.isclose(w.sum(), 1.0, atol=1e-4)
+    assert (w >= -1e-7).all()
+    f = np.asarray(fresh)
+    if f.any() and (~f).any():
+        assert w[f].min() >= w[~f].max() - 1e-5 or rule == "equal"
