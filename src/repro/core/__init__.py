@@ -3,8 +3,9 @@
 - ``selection``: Random / Oort / SAFA baselines + RELAY's IPS (Alg. 1)
 - ``apt``: Adaptive Participant Target
 - ``staleness``: SAA weight-scaling rules (Equal / DynSGD / AdaSGD / RELAY Eq. 2)
-- ``aggregation``: stale-synchronous weighted aggregation (Alg. 2) over pytrees
-- ``availability``: learner-side availability forecasting
+- ``aggregation``: stale-synchronous weighted aggregation (Alg. 2) over flat
+  (n, D) update rows, with a thin pytree wrapper
+- ``availability``: learner-side availability forecasting (scalar + bank)
 """
 from repro.core.staleness import (  # noqa: F401
     staleness_weights,
@@ -14,8 +15,11 @@ from repro.core.staleness import (  # noqa: F401
 from repro.core.aggregation import (  # noqa: F401
     flatten_update,
     unflatten_update,
+    make_flat_spec,
+    flat_dim,
     aggregate_updates,
     stale_synchronous_aggregate,
+    stale_synchronous_aggregate_flat,
 )
 from repro.core.selection import (  # noqa: F401
     RandomSelector,
@@ -24,4 +28,7 @@ from repro.core.selection import (  # noqa: F401
     SafaSelector,
 )
 from repro.core.apt import AdaptiveParticipantTarget  # noqa: F401
-from repro.core.availability import AvailabilityForecaster  # noqa: F401
+from repro.core.availability import (  # noqa: F401
+    AvailabilityForecaster,
+    ForecasterBank,
+)

@@ -10,6 +10,7 @@ Two code paths:
 """
 from __future__ import annotations
 
+import functools
 from typing import Sequence
 
 import jax
@@ -32,6 +33,24 @@ def flatten_update(tree):
     return flat, (treedef, shapes, [l.dtype for l in leaves])
 
 
+def make_flat_spec(tree):
+    """Flatten spec (treedef, shapes, dtypes) without moving any data.
+
+    Compute once per model; reuse for every ``unflatten_update`` of the run —
+    the flat fast path's round loop never re-derives it.  All-tuple (and thus
+    hashable), so jitted helpers can be cached per spec across instances.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    return (treedef, tuple(l.shape for l in leaves),
+            tuple(l.dtype for l in leaves))
+
+
+def flat_dim(spec) -> int:
+    """Total flat vector length D for a spec from ``make_flat_spec``."""
+    _, shapes, _ = spec
+    return int(sum(int(np.prod(s)) if s else 1 for s in shapes))
+
+
 def unflatten_update(flat, spec):
     treedef, shapes, dtypes = spec
     leaves, off = [], 0
@@ -52,12 +71,89 @@ def aggregate_updates(stacked: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray
     return jnp.einsum("n,nd->d", weights, stacked)
 
 
+@functools.partial(jax.jit, static_argnames=("rule",))
+def _weights_and_aggregate(stacked, fresh, tau, valid, beta, *, rule):
+    w = staleness_weights(stacked, fresh, tau, rule=rule, beta=beta, valid=valid)
+    return aggregate_updates(stacked, w), w
+
+
+def bucket_pow2(n: int) -> int:
+    """Next power of two — the participant-axis padding bucket shared by the
+    compiled aggregation path, the kernel path, and the engine's cohort
+    padding (one compiled program per bucket, not per exact count)."""
+    return 1 << (n - 1).bit_length()
+
+
+def bucket_pad(updates, fresh, tau, *, bucketed: bool = True,
+               lane_block: int = 0):
+    """Host-side (numpy) padding of a round's updates for a compiled program.
+
+    Pads the participant axis to ``bucket_pow2(n)`` zero rows (skipped when
+    ``bucketed=False``) and, when ``lane_block`` > 0, the feature axis up to
+    the next multiple of it.  Returns (updates, fresh, tau, valid) numpy
+    arrays; ``valid`` masks the real rows.  Shared by the jnp fast path and
+    the Pallas kernel wrappers so both pad identically.
+    """
+    n, D = np.shape(updates)
+    m = bucket_pow2(n) if bucketed else n
+    Dp = D + ((-D) % lane_block) if lane_block else D
+    u = np.zeros((m, Dp), np.float32)
+    u[:n, :D] = np.asarray(updates)
+    fr = np.zeros(m, bool)
+    fr[:n] = np.asarray(fresh)
+    ta = np.zeros(m, np.int32)
+    ta[:n] = np.asarray(tau)
+    valid = np.arange(m) < n
+    return u, fr, ta, valid
+
+
+def stale_synchronous_aggregate_flat(stacked, fresh, tau, *, rule: str = "relay",
+                                     beta: float = 0.35, use_kernel: bool = False,
+                                     compiled: bool = True):
+    """Aggregate already-stacked flat updates — the round engine's hot path.
+
+    stacked: (n, D) fp32 rows (one per fresh/stale update); fresh: (n,) bool;
+    tau: (n,) int staleness. Returns (aggregate (D,), weights (n,)).
+    No per-update pytree traversal happens here: callers keep updates as flat
+    rows from training to aggregation and unflatten once per round.
+
+    ``compiled=True`` pads the participant axis to a power-of-two bucket
+    (zero rows, masked out via ``staleness_weights``'s ``valid`` mask) and
+    runs one jitted weights+aggregate program — without the bucketing, every
+    new fresh+stale count would trigger a fresh XLA compile of the eager ops,
+    which dominates the server step at scale.  ``compiled=False`` keeps the
+    seed's unpadded eager evaluation (benchmark baseline).
+    """
+    n = np.shape(stacked)[0]
+    if use_kernel:
+        from repro.kernels.staleness_agg import ops as agg_ops
+        return agg_ops.staleness_aggregate(stacked, fresh, tau, rule=rule,
+                                           beta=beta, bucketed=compiled)
+    if not compiled:
+        stacked = jnp.asarray(stacked, jnp.float32)
+        weights = staleness_weights(stacked, jnp.asarray(fresh, bool),
+                                    jnp.asarray(tau, jnp.int32),
+                                    rule=rule, beta=beta)
+        return aggregate_updates(stacked, weights), weights
+    # pad on host (numpy) — eager jnp.pad would itself compile per shape; the
+    # single device transfer happens at the jit boundary below
+    u, fr, ta, valid = bucket_pad(stacked, fresh, tau)
+    agg, w = _weights_and_aggregate(u, fr, ta, valid, np.float32(beta),
+                                    rule=rule)
+    return agg, w[:n]
+
+
 def stale_synchronous_aggregate(update_trees: Sequence, fresh: Sequence[bool],
                                 tau: Sequence[int], *, rule: str = "relay",
-                                beta: float = 0.35, use_kernel: bool = False):
+                                beta: float = 0.35, use_kernel: bool = False,
+                                compiled: bool = False):
     """Aggregate a round's fresh + stale update pytrees into a single delta tree.
 
-    Returns (aggregate_tree, weights) — weights exposed for accounting/tests.
+    Thin wrapper over ``stale_synchronous_aggregate_flat`` for callers that
+    still hold pytrees. Returns (aggregate_tree, weights).  Defaults to the
+    eager (seed) evaluation: the stack lives on device here, and the compiled
+    path's host-side bucket padding would force a device round trip — flat-row
+    callers on the hot loop pass host arrays and default to ``compiled=True``.
     """
     assert len(update_trees) > 0
     flats, spec = [], None
@@ -65,15 +161,9 @@ def stale_synchronous_aggregate(update_trees: Sequence, fresh: Sequence[bool],
         f, spec = flatten_update(t)
         flats.append(f)
     stacked = jnp.stack(flats)  # (n, D)
-    fresh_arr = jnp.asarray(fresh, bool)
-    tau_arr = jnp.asarray(tau, jnp.int32)
-    if use_kernel:
-        from repro.kernels.staleness_agg import ops as agg_ops
-        agg, weights = agg_ops.staleness_aggregate(stacked, fresh_arr, tau_arr,
-                                                   rule=rule, beta=beta)
-    else:
-        weights = staleness_weights(stacked, fresh_arr, tau_arr, rule=rule, beta=beta)
-        agg = aggregate_updates(stacked, weights)
+    agg, weights = stale_synchronous_aggregate_flat(
+        stacked, fresh, tau, rule=rule, beta=beta, use_kernel=use_kernel,
+        compiled=compiled)
     return unflatten_update(agg, spec), weights
 
 

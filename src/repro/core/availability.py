@@ -55,3 +55,86 @@ class AvailabilityForecaster:
         denom = float(np.var(truth)) or 1.0
         r2 = 1.0 - mse / denom
         return {"r2": r2, "mse": mse, "mae": mae}
+
+
+class ForecasterBank:
+    """All learners' forecasters as (n, n_bins) count matrices.
+
+    Same model as ``AvailabilityForecaster`` — hour-of-day seasonal profile
+    plus an EWMA residual — but ``observe``/``predict`` are batched numpy
+    operations over any subset of learners, removing the per-learner Python
+    loop from the server's check-in and selection paths.  Matches the scalar
+    forecaster bit-for-bit (same update formulas, evaluated elementwise).
+    """
+
+    def __init__(self, n: int, n_bins: int = 48, ewma_alpha: float = 0.05,
+                 seasonal_weight: float = 0.9, prior: float = 0.5):
+        self.n = n
+        self.n_bins = n_bins
+        self.ewma_alpha = ewma_alpha
+        self.seasonal_weight = seasonal_weight
+        self.counts = np.full((n, n_bins), 2.0)
+        self.avail_counts = np.full((n, n_bins), 2.0 * prior)
+        self.recent = np.full(n, prior)
+
+    def _bin(self, t: float) -> int:
+        return int((t % DAY) / DAY * self.n_bins) % self.n_bins
+
+    def observe_batch(self, lids, t: float, available):
+        """One observation at time ``t`` for each learner in ``lids``.
+
+        ``available`` may be a scalar or an array aligned with ``lids``.
+        ``lids`` must be unique within a call: the updates use fancy-index
+        assignment, which applies only one step to a duplicated lid.
+        """
+        lids = np.asarray(lids)
+        avail = np.broadcast_to(np.asarray(available, float), lids.shape)
+        b = self._bin(t)
+        self.counts[lids, b] += 1.0
+        self.avail_counts[lids, b] += avail
+        self.recent[lids] = ((1 - self.ewma_alpha) * self.recent[lids]
+                             + self.ewma_alpha * avail)
+
+    def observe_all(self, t: float, available):
+        """Observation for every learner at once (warmup / census paths)."""
+        avail = np.asarray(available, float)
+        b = self._bin(t)
+        self.counts[:, b] += 1.0
+        self.avail_counts[:, b] += avail
+        self.recent = (1 - self.ewma_alpha) * self.recent + self.ewma_alpha * avail
+
+    def predict_window_batch(self, lids, t_start: float, t_end: float):
+        """P(available throughout [t_start, t_end]) per queried learner."""
+        lids = np.asarray(lids)
+        if t_end <= t_start:
+            t_end = t_start + 1.0
+        ts = np.linspace(t_start, t_end, 4)
+        bins = ((ts % DAY) / DAY * self.n_bins).astype(int) % self.n_bins
+        ratios = (self.avail_counts[np.ix_(lids, bins)]
+                  / self.counts[np.ix_(lids, bins)])
+        seasonal = ratios.mean(axis=1)
+        return (self.seasonal_weight * seasonal
+                + (1 - self.seasonal_weight) * self.recent[lids])
+
+    def view(self, lid: int) -> "ForecasterView":
+        return ForecasterView(self, lid)
+
+
+class ForecasterView:
+    """Scalar ``AvailabilityForecaster``-compatible facade over one bank row."""
+
+    __slots__ = ("bank", "lid", "_lid_arr")
+
+    def __init__(self, bank: ForecasterBank, lid: int):
+        self.bank = bank
+        self.lid = lid
+        self._lid_arr = np.array([lid])
+
+    def observe(self, t: float, available: bool):
+        self.bank.observe_batch(self._lid_arr, t, float(available))
+
+    def predict_window(self, t_start: float, t_end: float) -> float:
+        return float(self.bank.predict_window_batch(self._lid_arr,
+                                                    t_start, t_end)[0])
+
+    score = AvailabilityForecaster.score

@@ -1,36 +1,71 @@
-"""Jit wrapper: full SAA aggregation through the Pallas kernels.
+"""Host-facing entry points: full SAA aggregation through the Pallas kernels.
 
-Handles D padding to the 2048-lane block, computes the (n)-sized weight vector
-on-host from the kernel's deviation partials (O(n) work), then runs the fused
-weighted aggregate.
+The default path is the fused single-launch kernel (deviation partials,
+in-kernel Eq. 2 weights, weighted aggregate in one grid traversal);
+``fused=False`` keeps the original two-launch pipeline (partials kernel ->
+host O(n) weights -> aggregate kernel) for A/B comparison.
+
+These wrappers are deliberately *not* jitted: D is padded to the 2048-lane
+block and (by default) the participant axis is padded to a power-of-two
+bucket on the host, so repeated calls with varying fresh+stale counts reuse
+one compiled kernel per bucket instead of recompiling per exact shape.
+``interpret=None`` auto-detects the backend (compiled on TPU, interpreter
+elsewhere).
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core.aggregation import bucket_pad
 from repro.core.staleness import EPS, SCALING_RULES
-from repro.kernels.staleness_agg.staleness_agg import (D_BLK, deviation_partials,
-                                                       weighted_aggregate)
+from repro.kernels.staleness_agg.staleness_agg import (
+    D_BLK, deviation_partials, fused_staleness_aggregate,
+    fused_staleness_apply, weighted_aggregate)
 
 
-@functools.partial(jax.jit, static_argnames=("rule", "interpret"))
 def staleness_aggregate(updates, fresh, tau, *, rule: str = "relay",
-                        beta: float = 0.35, interpret: bool = True):
+                        beta: float = 0.35, interpret: bool | None = None,
+                        fused: bool = True, bucketed: bool = True):
     """updates: (n, D) any-D fp32; fresh: (n,) bool; tau: (n,) int.
 
     Returns (aggregate (D,), weights (n,)).
     """
-    n, D = updates.shape
-    pad = (-D) % D_BLK
-    u = jnp.pad(updates.astype(jnp.float32), ((0, 0), (0, pad)))
+    n, D = np.shape(updates)
+    if fused:
+        u, fr, ta, valid = bucket_pad(updates, fresh, tau, bucketed=bucketed,
+                                      lane_block=D_BLK)
+        agg, w = fused_staleness_aggregate(u, fr, ta, np.float32(beta),
+                                           rule=rule, interpret=interpret,
+                                           valid=valid)
+        return agg[:D], w[:n]
+    u = jnp.pad(jnp.asarray(updates, jnp.float32), ((0, 0), (0, (-D) % D_BLK)))
+    fresh = jnp.asarray(fresh, bool)
     num, den = deviation_partials(u, fresh, interpret=interpret)
     lam = jnp.where(fresh, 0.0, num / (den + EPS))
     lam_max = jnp.max(jnp.where(~fresh, lam, 0.0))
-    w_stale = SCALING_RULES[rule](tau, lam, lam_max, beta)
+    w_stale = SCALING_RULES[rule](jnp.asarray(tau, jnp.int32), lam, lam_max, beta)
     w = jnp.where(fresh, 1.0, w_stale)
     w = w / jnp.maximum(w.sum(), EPS)
     agg = weighted_aggregate(w, u, interpret=interpret)
     return agg[:D], w
+
+
+def staleness_apply(params, updates, fresh, tau, *, rule: str = "relay",
+                    beta: float = 0.35, server_lr: float = 1.0,
+                    interpret: bool | None = None, bucketed: bool = True):
+    """Fused server step on a flat parameter vector.
+
+    params: (D,) fp32; updates: (n, D). Returns (new_params (D,), weights (n,))
+    with ``new_params = params + server_lr * (w @ updates)`` computed in the
+    same single grid traversal as the weights (params aliased input->output).
+    """
+    n, D = np.shape(updates)
+    u, fr, ta, valid = bucket_pad(updates, fresh, tau, bucketed=bucketed,
+                                  lane_block=D_BLK)
+    p = np.zeros(u.shape[1], np.float32)
+    p[:D] = np.asarray(params)
+    new_p, w = fused_staleness_apply(p, u, fr, ta, np.float32(beta),
+                                     np.float32(server_lr), rule=rule,
+                                     interpret=interpret, valid=valid)
+    return new_p[:D], w[:n]

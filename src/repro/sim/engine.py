@@ -9,19 +9,33 @@ and RELAY semantics (IPS + APT + SAA with Eq. 2 weights) are both expressible.
 Simulated time is decoupled from wall-clock: device durations come from the
 heterogeneity profiles, availability from the trace substrate, and every
 round's cohort trains in one vmapped JAX call.
+
+Two substrates, same semantics (parity-tested in tests/test_fastpath_parity.py):
+
+  fast path (default) — participant updates are flat (n, D) fp32 rows from the
+  compiled cohort-training program all the way to aggregation (unflattened
+  once per round to apply the server step); availability queries go through
+  the struct-of-arrays ``TraceBank``/``ForecasterBank`` with batched
+  searchsorted/bincount math instead of per-learner Python objects;
+
+  legacy path (``fast_path=False``) — the original per-learner scalar loops
+  and pytree shuffling, kept as the parity/benchmark baseline.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import jax
 import numpy as np
 
+from repro.core import aggregation as agg
 from repro.core.aggregation import (fedavg_apply, stale_synchronous_aggregate,
-                                    yogi_apply, yogi_init)
+                                    stale_synchronous_aggregate_flat,
+                                    unflatten_update, yogi_apply, yogi_init)
 from repro.core.apt import AdaptiveParticipantTarget
-from repro.core.availability import AvailabilityForecaster
+from repro.core.availability import AvailabilityForecaster, ForecasterBank
 from repro.core.selection import SELECTORS, LearnerView, OortSelector, PrioritySelector
 from repro.sim import devices as dev
 from repro.sim import learner as ln
@@ -30,6 +44,19 @@ from repro.sim import traces as tr
 from repro.sim.metrics import Accounting, RoundRecord
 
 HOUR = 3600.0
+
+
+@functools.lru_cache(maxsize=8)
+def _fedavg_flat_fn(spec):
+    """Jitted unflatten+FedAvg step, cached per flat spec so every Simulator
+    instance with the same model shares one compiled program."""
+    return jax.jit(lambda p, flat, lr: fedavg_apply(
+        p, unflatten_update(flat, spec), lr))
+
+
+@functools.lru_cache(maxsize=8)
+def _unflatten_fn(spec):
+    return jax.jit(lambda flat: unflatten_update(flat, spec))
 
 
 @dataclasses.dataclass
@@ -62,6 +89,7 @@ class SimConfig:
     selection_window: float = 5.0
     seed: int = 0
     use_agg_kernel: bool = False      # route aggregation through the Pallas kernel
+    fast_path: bool = True            # flat (n, D) updates + TraceBank/ForecasterBank
 
 
 @dataclasses.dataclass
@@ -70,7 +98,7 @@ class _InFlight:
     origin_round: int
     arrival: float
     duration: float
-    delta: object
+    delta: object                     # flat (D,) fp32 row (fast) or pytree (legacy)
     stat_util: float
 
 
@@ -85,13 +113,29 @@ class Simulator:
                                             cfg.hardware_scenario)
         self.traces = tr.make_traces(cfg.n_learners, self.rng,
                                      dynamic=cfg.dynamic_availability)
-        self.forecasters = [AvailabilityForecaster() for _ in range(cfg.n_learners)]
+        # per-learner round duration is config-determined: compute it once
+        self.durations = np.array([
+            p.round_duration(cfg.local_steps * cfg.local_batch, 1, cfg.model_mbits)
+            for p in self.profiles])
+        if cfg.fast_path:
+            self.trace_bank = tr.TraceBank(self.traces)
+            self.fbank = ForecasterBank(cfg.n_learners)
+            self.forecasters = None
+        else:
+            self.trace_bank = None
+            self.fbank = None
+            self.forecasters = [AvailabilityForecaster() for _ in range(cfg.n_learners)]
         self._warmup_forecasters()
         sel_cls = SELECTORS[cfg.selector]
         self.selector = sel_cls()
         self.apt = AdaptiveParticipantTarget(n0=cfg.n_target) if cfg.apt else None
         key = jax.random.PRNGKey(cfg.seed)
         self.params = ln.mlp_init(key, self.data.x_train.shape[1], self.data.n_classes)
+        self._flat_spec = agg.make_flat_spec(self.params)
+        # one compiled unflatten+FedAvg step per round on the fast path (the
+        # eager tree ops dispatch a dozen tiny programs per round otherwise)
+        self._fedavg_flat = _fedavg_flat_fn(self._flat_spec)
+        self._unflatten = _unflatten_fn(self._flat_spec)
         self.opt_state = yogi_init(self.params) if cfg.aggregator == "yogi" else None
         self.acct = Accounting()
         self.stale_cache: list[_InFlight] = []
@@ -102,38 +146,96 @@ class Simulator:
     def _warmup_forecasters(self):
         """Learners have pre-deployment local history (paper App. A step 2)."""
         ts = np.arange(0, 3 * 24 * HOUR, 1800.0)
-        for lid, (f, t) in enumerate(zip(self.forecasters, self.traces)):
-            for tt in ts:
-                f.observe(tt, t.available(tt))
+        if self.cfg.fast_path:
+            for tt in ts:                       # one vectorized census per step
+                self.fbank.observe_all(tt, self.trace_bank.available_all(tt))
+        else:
+            for lid, (f, t) in enumerate(zip(self.forecasters, self.traces)):
+                for tt in ts:
+                    f.observe(tt, t.available(tt))
+
+    def _available_now(self, t_now: float):
+        """Idle + available learner ids (ascending), forecasters updated."""
+        if self.cfg.fast_path:
+            mask = self.trace_bank.available_all(t_now) & (self.busy_until <= t_now)
+            available = np.nonzero(mask)[0]
+            if len(available):                  # devices log their own state
+                self.fbank.observe_batch(available, t_now, 1.0)
+            return available
+        available = [lid for lid in range(self.cfg.n_learners)
+                     if self.traces[lid].available(t_now)
+                     and self.busy_until[lid] <= t_now]
+        for lid in available:
+            self.forecasters[lid].observe(t_now, True)
+        return available
 
     def _views(self, t_now: float, available_ids):
-        views = []
-        for lid in available_ids:
-            p = self.forecasters[lid].predict_window(t_now + self.mu,
-                                                     t_now + 2 * self.mu)
-            est = self.profiles[lid].round_duration(
-                self.cfg.local_steps * self.cfg.local_batch, 1, self.cfg.model_mbits)
-            views.append(LearnerView(lid, availability_prob=p, est_duration=est))
-        return views
+        t0, t1 = t_now + self.mu, t_now + 2 * self.mu
+        if self.cfg.fast_path:
+            probs = self.fbank.predict_window_batch(available_ids, t0, t1)
+            return [LearnerView(lid, availability_prob=float(p),
+                                est_duration=self.durations[lid])
+                    for lid, p in zip(available_ids, probs)]
+        return [LearnerView(lid,
+                            availability_prob=self.forecasters[lid].predict_window(t0, t1),
+                            est_duration=self.durations[lid])
+                for lid in available_ids]
 
     def _local_round(self, participant_ids, t_now):
-        """Run the cohort's local training; returns per-participant results."""
+        """Run the cohort's local training; returns per-participant results.
+
+        Fast path: deltas come back as stacked flat (n, D) fp32 rows straight
+        from the compiled program; legacy: a pytree of stacked leaves.
+        """
         cfg = self.cfg
-        xs, ys, durs, dropout_at = [], [], [], []
+        xs, ys = [], []
         for lid in participant_ids:
             bx, by = ln.sample_local_batches(self.data.shards[lid],
                                              self.data.x_train, self.data.y_train,
                                              cfg.local_steps, cfg.local_batch, self.rng)
             xs.append(bx)
             ys.append(by)
-            dur = self.profiles[lid].round_duration(
-                cfg.local_steps * cfg.local_batch, 1, cfg.model_mbits)
-            durs.append(dur)
+        durs = self.durations[np.asarray(participant_ids)]
+        if cfg.fast_path:
+            nus = self.trace_bank.next_unavailable_after_batch(participant_ids, t_now)
+            rel = nus - t_now
+            drop_at = np.where(rel < durs, rel, np.inf)
+            # pad the cohort to a power-of-two bucket: one compiled program per
+            # bucket instead of per distinct cohort size (rows independent
+            # under vmap, so real rows are bit-identical; padding discarded)
+            k = len(xs)
+            m = agg.bucket_pow2(k)
+            bx = np.stack(xs + [xs[0]] * (m - k))
+            by = np.stack(ys + [ys[0]] * (m - k))
+            deltas, losses, l2s = ln.local_train_cohort_flat(
+                self.params, bx, by, cfg.local_lr, cfg.prox_mu)
+            deltas = np.asarray(deltas)[:k]     # one device->host copy per round
+            return (deltas, np.asarray(losses)[:k], np.asarray(l2s)[:k],
+                    durs, drop_at)
+        drop_at = []
+        for lid, d in zip(participant_ids, durs):
             nu = self.traces[lid].next_unavailable_after(t_now)
-            dropout_at.append(nu - t_now if nu - t_now < dur else np.inf)
+            drop_at.append(nu - t_now if nu - t_now < d else np.inf)
+        drop_at = np.array(drop_at)
         deltas, losses, l2s = ln.local_train_cohort(
             self.params, np.stack(xs), np.stack(ys), cfg.local_lr, cfg.prox_mu)
-        return deltas, np.asarray(losses), np.asarray(l2s), durs, dropout_at
+        return deltas, np.asarray(losses), np.asarray(l2s), durs, drop_at
+
+    def _aggregate(self, fresh_updates, stale_updates, stale_taus):
+        cfg = self.cfg
+        fresh_mask = [True] * len(fresh_updates) + [False] * len(stale_updates)
+        taus = [0] * len(fresh_updates) + stale_taus
+        if cfg.fast_path:
+            stacked = np.stack(fresh_updates + stale_updates)
+            agg_flat, _ = stale_synchronous_aggregate_flat(
+                stacked, fresh_mask, taus, rule=cfg.scaling_rule,
+                beta=cfg.beta, use_kernel=cfg.use_agg_kernel)
+            return agg_flat
+        agg_tree, _ = stale_synchronous_aggregate(
+            fresh_updates + stale_updates, fresh_mask, taus,
+            rule=cfg.scaling_rule, beta=cfg.beta, use_kernel=cfg.use_agg_kernel,
+            compiled=False)  # seed-exact eager baseline
+        return agg_tree
 
     # ------------------------------------------------------------------
     def run(self, progress: bool = False):
@@ -141,12 +243,8 @@ class Simulator:
         t_now = 0.0
         for r in range(cfg.rounds):
             t_now += cfg.selection_window
-            available = [lid for lid in range(cfg.n_learners)
-                         if self.traces[lid].available(t_now)
-                         and self.busy_until[lid] <= t_now]
-            for lid in available:  # devices log their own state continuously
-                self.forecasters[lid].observe(t_now, True)
-            if not available:
+            available = self._available_now(t_now)
+            if not len(available):
                 t_now += 60.0
                 continue
 
@@ -169,7 +267,7 @@ class Simulator:
 
             arrivals = []   # (arrival_time, idx into chosen) for non-dropouts
             for i, lid in enumerate(chosen):
-                if drop_at[i] is not np.inf and drop_at[i] < durs[i]:
+                if np.isfinite(drop_at[i]):
                     # device went away mid-round: partial work, always wasted
                     self.acct.charge(float(drop_at[i]), wasted=True)
                     self.busy_until[lid] = t_now + float(drop_at[i])
@@ -195,7 +293,8 @@ class Simulator:
             fresh_updates, fresh_ids = [], []
             for (arr, i) in arrivals:
                 lid = chosen[i]
-                delta_i = jax.tree.map(lambda d: d[i], deltas)
+                delta_i = (deltas[i] if cfg.fast_path
+                           else jax.tree.map(lambda d: d[i], deltas))
                 stat_util = float(cfg.local_steps * cfg.local_batch * l2s[i])
                 self.selector.update_feedback(lid, stat_util=stat_util,
                                               duration=durs[i], round_idx=r)
@@ -205,11 +304,16 @@ class Simulator:
                     fresh_ids.append(lid)
                     self.acct.unique.add(lid)
                 elif cfg.saa:
+                    if cfg.fast_path:
+                        # copy: delta_i is a view into the round's padded
+                        # (m, D) cohort buffer; caching the view would pin
+                        # the whole buffer for the straggler's lifetime
+                        delta_i = np.array(delta_i)
                     self.stale_cache.append(_InFlight(lid, r, arr, durs[i],
                                                       delta_i, stat_util))
                 else:
-                    self.acct.uncharge_waste(0.0)
-                    self.acct.resource_wasted += durs[i]
+                    # already charged as used at dispatch; never aggregated
+                    self.acct.mark_wasted(float(durs[i]))
 
             # --- stale updates landing this round ---------------------
             stale_updates, stale_taus = [], []
@@ -223,24 +327,26 @@ class Simulator:
                         stale_taus.append(tau)
                         self.acct.unique.add(f.learner_id)
                     else:
-                        self.acct.resource_wasted += f.duration
+                        self.acct.mark_wasted(f.duration)
                 else:
                     still_waiting.append(f)
             self.stale_cache = still_waiting
 
             # --- aggregate + server update ----------------------------
             if fresh_updates or stale_updates:
-                updates = fresh_updates + stale_updates
-                fresh_mask = [True] * len(fresh_updates) + [False] * len(stale_updates)
-                taus = [0] * len(fresh_updates) + stale_taus
-                agg, _ = stale_synchronous_aggregate(
-                    updates, fresh_mask, taus, rule=cfg.scaling_rule,
-                    beta=cfg.beta, use_kernel=cfg.use_agg_kernel)
-                if cfg.aggregator == "yogi":
-                    self.params, self.opt_state = yogi_apply(
-                        self.params, agg, self.opt_state)
+                agg_out = self._aggregate(fresh_updates, stale_updates, stale_taus)
+                if cfg.fast_path and cfg.aggregator != "yogi":
+                    self.params = self._fedavg_flat(self.params, agg_out,
+                                                    cfg.server_lr)
                 else:
-                    self.params = fedavg_apply(self.params, agg, cfg.server_lr)
+                    agg_tree = (self._unflatten(agg_out) if cfg.fast_path
+                                else agg_out)
+                    if cfg.aggregator == "yogi":
+                        self.params, self.opt_state = yogi_apply(
+                            self.params, agg_tree, self.opt_state)
+                    else:
+                        self.params = fedavg_apply(self.params, agg_tree,
+                                                   cfg.server_lr)
 
             # --- bookkeeping ------------------------------------------
             duration = t_end - t_now
@@ -263,5 +369,5 @@ class Simulator:
 
         # updates still in flight at the end of training are wasted work
         for f in self.stale_cache:
-            self.acct.resource_wasted += f.duration
+            self.acct.mark_wasted(f.duration)
         return self.acct

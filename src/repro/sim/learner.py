@@ -67,6 +67,22 @@ local_train_cohort = jax.jit(
     static_argnames=("lr", "prox_mu"))
 
 
+def _cohort_flat(params, xs, ys, lr, prox_mu):
+    deltas, losses, l2s = jax.vmap(
+        local_train, in_axes=(None, 0, 0, None, None))(params, xs, ys, lr, prox_mu)
+    n = xs.shape[0]
+    flat = jnp.concatenate([l.reshape(n, -1).astype(jnp.float32)
+                            for l in jax.tree.leaves(deltas)], axis=1)
+    return flat, losses, l2s
+
+
+# flat fast path: the cohort's deltas leave the compiled program already
+# stacked as (n, D) fp32 rows in ``jax.tree.flatten`` leaf order — the same
+# layout ``core.aggregation.flatten_update`` produces — so the engine never
+# slices per-participant pytrees again.
+local_train_cohort_flat = jax.jit(_cohort_flat, static_argnames=("lr", "prox_mu"))
+
+
 @jax.jit
 def evaluate(params, x, y):
     logits = mlp_apply(params, x)

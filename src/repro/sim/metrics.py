@@ -39,9 +39,9 @@ class Accounting:
         if wasted:
             self.resource_wasted += seconds
 
-    def uncharge_waste(self, seconds: float):
-        """A previously-wasted contribution later got aggregated (stale path)."""
-        self.resource_wasted -= seconds
+    def mark_wasted(self, seconds: float):
+        """Work already charged as used turned out never to be aggregated."""
+        self.resource_wasted += seconds
 
     def csv(self) -> str:
         hdr = ("round,sim_time,n_selected,n_fresh,n_stale,resource_used,"

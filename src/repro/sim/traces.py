@@ -77,6 +77,89 @@ class AlwaysAvailable:
         return float("inf")
 
 
+class TraceBank:
+    """Struct-of-arrays view over n learner traces for batched queries.
+
+    All per-learner segment boundaries are packed into one globally sorted
+    array by offsetting learner ``i``'s boundaries by ``i * stride`` (stride
+    exceeds every boundary and every clipped query time), so a single
+    ``np.searchsorted`` resolves the active segment of *all* queried learners
+    at once — the vectorized counterpart of ``LearnerTrace.available``'s
+    per-learner ``bisect``.  Semantics match the scalar classes bit-for-bit.
+    """
+
+    def __init__(self, traces):
+        self.n = len(traces)
+        rows_b = [np.asarray(getattr(t, "boundaries", [0.0]), np.float64)
+                  for t in traces]
+        rows_s = [np.asarray(getattr(t, "states", [True]), bool)
+                  for t in traces]
+        self.lens = np.array([len(b) for b in rows_b], np.int64)
+        self.offsets = np.concatenate([[0], np.cumsum(self.lens)[:-1]])
+        self.boundaries = (np.concatenate(rows_b) if rows_b
+                           else np.zeros(0))
+        self.states = (np.concatenate(rows_s) if rows_s
+                       else np.zeros(0, bool))
+        self.stride = float(self.boundaries.max(initial=0.0)) + 2.0
+        self._packed = (self.boundaries
+                        + np.repeat(np.arange(self.n), self.lens) * self.stride)
+        self._all = np.arange(self.n)
+
+    def _segment(self, lids, t):
+        """Active segment index per queried learner (clipped to the last)."""
+        tq = np.minimum(t, self.stride - 1.0)
+        q = lids * self.stride + tq
+        idx = np.searchsorted(self._packed, q, side="right") - 1 - self.offsets[lids]
+        return np.clip(idx, 0, self.lens[lids] - 1)
+
+    def available_batch(self, lids, t):
+        lids = np.asarray(lids)
+        return self.states[self.offsets[lids] + self._segment(lids, t)]
+
+    def available_all(self, t):
+        return self.available_batch(self._all, t)
+
+    def available_through_batch(self, lids, t0, t1):
+        lids = np.asarray(lids)
+        s0 = self._segment(lids, t0)
+        s1 = self._segment(lids, t1)
+        return (s0 == s1) & self.states[self.offsets[lids] + s0]
+
+    def next_unavailable_after_batch(self, lids, t):
+        """Per-learner next dropout time; ``t`` where already unavailable,
+        +inf when available beyond the trace horizon."""
+        lids = np.asarray(lids)
+        seg = self._segment(lids, t)
+        avail = self.states[self.offsets[lids] + seg]
+        has_next = seg + 1 < self.lens[lids]
+        nxt_idx = self.offsets[lids] + np.minimum(seg + 1, self.lens[lids] - 1)
+        nxt = np.where(has_next, self.boundaries[nxt_idx], np.inf)
+        return np.where(avail, nxt, t)
+
+    def view(self, lid: int) -> "TraceView":
+        return TraceView(self, lid)
+
+
+class TraceView:
+    """Scalar ``LearnerTrace``-compatible facade over one TraceBank row."""
+
+    __slots__ = ("bank", "lid", "_lid_arr")
+
+    def __init__(self, bank: TraceBank, lid: int):
+        self.bank = bank
+        self.lid = lid
+        self._lid_arr = np.array([lid])
+
+    def available(self, t: float) -> bool:
+        return bool(self.bank.available_batch(self._lid_arr, t)[0])
+
+    def available_through(self, t0: float, t1: float) -> bool:
+        return bool(self.bank.available_through_batch(self._lid_arr, t0, t1)[0])
+
+    def next_unavailable_after(self, t: float) -> float:
+        return float(self.bank.next_unavailable_after_batch(self._lid_arr, t)[0])
+
+
 def make_traces(n: int, rng: np.random.Generator, dynamic: bool = True,
                 horizon: float = 14 * DAY):
     if not dynamic:

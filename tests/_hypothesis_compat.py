@@ -1,0 +1,63 @@
+"""Use hypothesis when installed; otherwise a deterministic stand-in.
+
+The property tests only need four strategies (integers, floats, sampled_from,
+booleans) and the ``@settings(max_examples=..., deadline=...)`` /
+``@given(**kwargs)`` decorator pair.  The fallback draws ``max_examples``
+pseudo-random examples from a fixed seed, so runs are reproducible and the
+suite collects and passes without the dependency.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as np
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample
+
+    class st:  # noqa: N801 — mirrors ``hypothesis.strategies``
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(len(elements)))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    def settings(max_examples=20, **_):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            # NB: no functools.wraps — copying __wrapped__ would make pytest
+            # see the original signature and demand fixtures for each param.
+            def runner():
+                n = getattr(runner, "_max_examples", 20)
+                rng = np.random.default_rng(0x5EED)
+                for _ in range(n):
+                    fn(**{k: s.sample(rng) for k, s in strategies.items()})
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            return runner
+        return deco

@@ -6,3 +6,4 @@ import sys
 os.environ.pop("XLA_FORCE_HOST_PLATFORM_DEVICE_COUNT", None)
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))  # for _hypothesis_compat

@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.aggregation import (aggregate_updates, fedavg_apply,
                                     flatten_update, stale_synchronous_aggregate,

@@ -1,0 +1,209 @@
+"""Parity: the flat/banked fast path must reproduce the scalar substrate.
+
+Three layers, matching the refactor:
+  - TraceBank / ForecasterBank vs the scalar LearnerTrace / AvailabilityForecaster
+    (bit-for-bit on random schedules);
+  - stale_synchronous_aggregate_flat vs the pytree path and the fused kernel;
+  - the full engine: fast_path=True vs the seed-equivalent legacy path gives
+    the same schedule, accounting, and (to float tolerance) accuracy.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import aggregation as agg
+from repro.core.availability import AvailabilityForecaster, ForecasterBank
+from repro.sim import SimConfig, Simulator
+from repro.sim.traces import TraceBank, make_traces
+
+# ---------------------------------------------------------------------------
+# TraceBank
+# ---------------------------------------------------------------------------
+
+
+def test_trace_bank_matches_scalar_traces():
+    rng = np.random.default_rng(7)
+    traces = make_traces(25, rng)
+    bank = TraceBank(traces)
+    lids = np.arange(25)
+    # random times, including beyond the 14-day horizon
+    for t in rng.uniform(0.0, 16 * 24 * 3600.0, size=120):
+        t = float(t)
+        np.testing.assert_array_equal(
+            bank.available_all(t),
+            [tr.available(t) for tr in traces])
+        np.testing.assert_array_equal(
+            bank.next_unavailable_after_batch(lids, t),
+            [tr.next_unavailable_after(t) for tr in traces])
+        t1 = t + float(rng.uniform(1.0, 3600.0))
+        np.testing.assert_array_equal(
+            bank.available_through_batch(lids, t, t1),
+            [tr.available_through(t, t1) for tr in traces])
+
+
+def test_trace_bank_view_is_scalar_compatible():
+    rng = np.random.default_rng(3)
+    traces = make_traces(5, rng)
+    bank = TraceBank(traces)
+    v = bank.view(2)
+    for t in rng.uniform(0.0, 10 * 24 * 3600.0, size=40):
+        t = float(t)
+        assert v.available(t) == traces[2].available(t)
+        assert v.next_unavailable_after(t) == traces[2].next_unavailable_after(t)
+
+
+def test_trace_bank_static_availability():
+    traces = make_traces(4, np.random.default_rng(0), dynamic=False)
+    bank = TraceBank(traces)
+    assert bank.available_all(1e9).all()
+    assert np.isinf(bank.next_unavailable_after_batch(np.arange(4), 123.0)).all()
+
+
+# ---------------------------------------------------------------------------
+# ForecasterBank
+# ---------------------------------------------------------------------------
+
+
+def test_forecaster_bank_matches_scalar_forecasters():
+    rng = np.random.default_rng(11)
+    n = 12
+    scalars = [AvailabilityForecaster() for _ in range(n)]
+    bank = ForecasterBank(n)
+    t = 0.0
+    for _ in range(300):
+        t += float(rng.uniform(60.0, 7200.0))
+        lids = np.sort(rng.choice(n, size=rng.integers(1, n + 1), replace=False))
+        avail = rng.random(len(lids)) < 0.5
+        for lid, a in zip(lids, avail):
+            scalars[lid].observe(t, bool(a))
+        bank.observe_batch(lids, t, avail.astype(float))
+    np.testing.assert_array_equal(
+        bank.counts, np.stack([f.counts for f in scalars]))
+    np.testing.assert_array_equal(
+        bank.avail_counts, np.stack([f.avail_counts for f in scalars]))
+    np.testing.assert_array_equal(
+        bank.recent, [f.recent for f in scalars])
+    for _ in range(25):
+        t0 = float(rng.uniform(0, 14 * 24 * 3600.0))
+        t1 = t0 + float(rng.uniform(0.0, 4 * 3600.0))
+        np.testing.assert_array_equal(
+            bank.predict_window_batch(np.arange(n), t0, t1),
+            [f.predict_window(t0, t1) for f in scalars])
+
+
+def test_forecaster_bank_observe_all_matches_loop():
+    n = 6
+    scalars = [AvailabilityForecaster() for _ in range(n)]
+    bank = ForecasterBank(n)
+    rng = np.random.default_rng(5)
+    for step in range(100):
+        t = step * 1800.0
+        avail = rng.random(n) < 0.4
+        for f, a in zip(scalars, avail):
+            f.observe(t, bool(a))
+        bank.observe_all(t, avail.astype(float))
+    np.testing.assert_array_equal(bank.recent, [f.recent for f in scalars])
+    np.testing.assert_array_equal(
+        bank.avail_counts, np.stack([f.avail_counts for f in scalars]))
+
+
+def test_forecaster_view_predicts_like_scalar():
+    bank = ForecasterBank(3)
+    scalar = AvailabilityForecaster()
+    v = bank.view(1)
+    for step in range(50):
+        t = step * 3600.0
+        a = step % 3 == 0
+        scalar.observe(t, a)
+        v.observe(t, a)
+    assert v.predict_window(1e5, 1.1e5) == scalar.predict_window(1e5, 1.1e5)
+
+
+# ---------------------------------------------------------------------------
+# Flat aggregation
+# ---------------------------------------------------------------------------
+
+
+def _trees(n, seed=0, shapes=((4, 5), (9,), (3, 3))):
+    rng = np.random.default_rng(seed)
+    return [{f"p{i}": np.asarray(rng.standard_normal(s), np.float32)
+             for i, s in enumerate(shapes)} for _ in range(n)]
+
+
+@pytest.mark.parametrize("rule", ["equal", "dynsgd", "adasgd", "relay"])
+def test_flat_aggregate_matches_pytree_path(rule):
+    trees = _trees(7, seed=2)
+    fresh = [True, True, True, False, False, False, False]
+    tau = [0, 0, 0, 1, 2, 4, 4]
+    stacked = np.stack([np.asarray(agg.flatten_update(t)[0]) for t in trees])
+    spec = agg.make_flat_spec(trees[0])
+
+    tree_agg, w_tree = agg.stale_synchronous_aggregate(trees, fresh, tau,
+                                                       rule=rule)
+    flat_agg, w_flat = agg.stale_synchronous_aggregate_flat(stacked, fresh, tau,
+                                                            rule=rule)
+    eager_agg, w_eager = agg.stale_synchronous_aggregate_flat(
+        stacked, fresh, tau, rule=rule, compiled=False)
+    np.testing.assert_allclose(np.asarray(w_flat), np.asarray(w_eager),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(flat_agg), np.asarray(eager_agg),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(w_flat), np.asarray(w_tree),
+                               rtol=1e-6, atol=1e-7)
+    back = agg.unflatten_update(flat_agg, spec)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(tree_agg)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_flat_aggregate_matches_fused_kernel():
+    trees = _trees(5, seed=9)
+    fresh = [True, True, False, False, False]
+    tau = [0, 0, 1, 3, 6]
+    stacked = np.stack([np.asarray(agg.flatten_update(t)[0]) for t in trees])
+    a1, w1 = agg.stale_synchronous_aggregate_flat(stacked, fresh, tau,
+                                                  rule="relay")
+    a2, w2 = agg.stale_synchronous_aggregate_flat(stacked, fresh, tau,
+                                                  rule="relay", use_kernel=True)
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_flat_dim_and_spec_roundtrip():
+    tree = _trees(1, seed=1)[0]
+    spec = agg.make_flat_spec(tree)
+    flat, spec2 = agg.flatten_update(tree)
+    assert agg.flat_dim(spec) == flat.shape[0]
+    back = agg.unflatten_update(flat, spec)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Engine end-to-end
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kw", [
+    dict(selector="random", saa=True, setting="OC"),
+    dict(selector="safa", setting="DL", saa=True, staleness_threshold=3),
+    dict(selector="priority", apt=True),
+])
+def test_engine_fast_path_matches_legacy(kw):
+    """Same seed => same schedule, accounting, and accuracy (float tolerance:
+    the flat cohort program may fuse arithmetic differently than the pytree
+    one, but the simulated schedule is host-side and must be exact)."""
+    base = dict(n_learners=40, rounds=12, eval_every=6, seed=3)
+    base.update(kw)
+    fast = Simulator(SimConfig(fast_path=True, **base)).run()
+    legacy = Simulator(SimConfig(fast_path=False, **base)).run()
+    sf, sl = fast.summary(), legacy.summary()
+    for k in ("rounds", "sim_time", "resource_used", "resource_wasted",
+              "unique_participants"):
+        assert sf[k] == sl[k], (k, sf[k], sl[k])
+    assert np.isclose(sf["final_accuracy"], sl["final_accuracy"], atol=1e-3)
+    for rf, rl in zip(fast.records, legacy.records):
+        assert (rf.sim_time, rf.n_selected, rf.n_fresh, rf.n_stale) == \
+               (rl.sim_time, rl.n_selected, rl.n_fresh, rl.n_stale)

@@ -33,6 +33,46 @@ def test_staleness_agg_matches_oracle(n, D, rule):
                                rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.parametrize("n,D", [(2, 2048), (5, 2048), (8, 4096 + 77)])
+@pytest.mark.parametrize("rule", ["equal", "dynsgd", "adasgd", "relay"])
+def test_fused_staleness_agg_matches_two_pass(n, D, rule):
+    """Single-traversal fused kernel == two-launch pipeline == jnp oracle."""
+    rng = np.random.default_rng(n + D)
+    U = jnp.asarray(rng.standard_normal((n, D)), jnp.float32)
+    fresh = jnp.asarray([True] + list(rng.random(n - 1) < 0.5))
+    tau = jnp.where(fresh, 0, jnp.asarray(rng.integers(1, 6, n)))
+    agg_f, w_f = agg_ops.staleness_aggregate(U, fresh, tau, rule=rule,
+                                             fused=True)
+    agg_2, w_2 = agg_ops.staleness_aggregate(U, fresh, tau, rule=rule,
+                                             fused=False)
+    agg_r, w_r = agg_ref.staleness_aggregate_ref(U, fresh, tau, rule=rule)
+    np.testing.assert_allclose(np.asarray(w_f), np.asarray(w_r),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(w_f), np.asarray(w_2),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(agg_f), np.asarray(agg_r),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_fused_staleness_apply_in_place_step():
+    """params + lr * aggregate, computed in the same grid traversal with the
+    params buffer aliased input->output."""
+    rng = np.random.default_rng(42)
+    n, D = 6, 4096 + 33
+    U = jnp.asarray(rng.standard_normal((n, D)), jnp.float32)
+    p0 = jnp.asarray(rng.standard_normal(D), jnp.float32)
+    fresh = jnp.asarray([True, True, True, False, False, False])
+    tau = jnp.asarray([0, 0, 0, 2, 3, 5], jnp.int32)
+    agg_r, w_r = agg_ref.staleness_aggregate_ref(U, fresh, tau, rule="relay")
+    new_p, w = agg_ops.staleness_apply(p0, U, fresh, tau, rule="relay",
+                                       server_lr=0.5)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(w_r),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(new_p),
+                               np.asarray(p0 + 0.5 * agg_r),
+                               rtol=1e-4, atol=1e-5)
+
+
 def test_staleness_agg_deviation_partials():
     from repro.kernels.staleness_agg.staleness_agg import deviation_partials
     from repro.kernels.staleness_agg.ref import deviation_partials_ref

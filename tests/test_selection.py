@@ -1,7 +1,7 @@
 """Selector behavior tests (paper Alg. 1 + baselines)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.selection import (LearnerView, OortSelector, PrioritySelector,
                                   RandomSelector, SafaSelector)
