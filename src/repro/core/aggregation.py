@@ -17,7 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.staleness import staleness_weights
+from repro.core.staleness import (RULE_ID, staleness_weights,
+                                  staleness_weights_by_id)
 
 
 # ---------------------------------------------------------------------------
@@ -71,10 +72,29 @@ def aggregate_updates(stacked: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray
     return jnp.einsum("n,nd->d", weights, stacked)
 
 
-@functools.partial(jax.jit, static_argnames=("rule",))
-def _weights_and_aggregate(stacked, fresh, tau, valid, beta, *, rule):
+def _waa(stacked, fresh, tau, valid, beta, *, rule):
     w = staleness_weights(stacked, fresh, tau, rule=rule, beta=beta, valid=valid)
     return aggregate_updates(stacked, w), w
+
+
+_weights_and_aggregate = jax.jit(_waa, static_argnames=("rule",))
+
+
+def _waa_by_id(stacked, fresh, tau, valid, beta, rule_id):
+    w = staleness_weights_by_id(stacked, fresh, tau, rule_id, beta=beta,
+                                valid=valid)
+    return aggregate_updates(stacked, w), w
+
+
+@jax.jit
+def _sweep_weights_and_aggregate(stacked, fresh, tau, valid, beta, rule_id):
+    """vmap of the per-round weights+aggregate program over a leading sweep
+    axis: stacked (S, n, D), masks (S, n), beta (S,), rule_id (S,) ->
+    ((S, D), (S, n)).  The scaling rule is a traced per-cell operand
+    (``lax.switch``), so cells mixing rules share this one compiled program;
+    each cell's slice is bit-identical to the unbatched static-rule program
+    on the same rows (rows are independent under vmap)."""
+    return jax.vmap(_waa_by_id)(stacked, fresh, tau, valid, beta, rule_id)
 
 
 def bucket_pow2(n: int) -> int:
@@ -82,6 +102,17 @@ def bucket_pow2(n: int) -> int:
     compiled aggregation path, the kernel path, and the engine's cohort
     padding (one compiled program per bucket, not per exact count)."""
     return 1 << (n - 1).bit_length()
+
+
+def bucket_block(n: int, block: int) -> int:
+    """Two-tier padding bucket: power-of-two up to ``block``, then multiples
+    of ``block``.  Large axes (SAFA-style cohorts, sweep-packed rows) land
+    within ``block - 1`` wasted slots instead of pow2's up-to-2x overshoot,
+    while the number of distinct compiled shapes stays small.  Padding is
+    masked/discarded everywhere, so bucket choice never affects results."""
+    if n <= block:
+        return bucket_pow2(n)
+    return block * ((n + block - 1) // block)
 
 
 def bucket_pad(updates, fresh, tau, *, bucketed: bool = True,
@@ -143,6 +174,72 @@ def stale_synchronous_aggregate_flat(stacked, fresh, tau, *, rule: str = "relay"
     return agg, w[:n]
 
 
+def sweep_bucket_pad(cell_updates, d: int):
+    """Pad a sweep round's per-cell update stacks to one (S, n_b, D) tensor.
+
+    cell_updates: length-S list; entry ``s`` is either ``None`` (no updates
+    this round — the cell contributes all-invalid rows and a zero aggregate)
+    or ``(rows, fresh, tau)`` with ``rows`` a list of (D,) fp32 vectors.
+    The participant axis is padded to one shared ``bucket_block(n, 32)``
+    bucket (power-of-two up to 32 slots, then multiples of 32) so the whole
+    sweep reuses a compiled program per bucket; aggregation is
+    padding-invariant (zero rows are masked by ``valid`` and contribute
+    exact zeros to every reduction), so each cell's result is bit-identical
+    to padding it to its own bucket.
+
+    Returns numpy (U (S, n_b, d), fresh (S, n_b), tau (S, n_b),
+    valid (S, n_b), has (S,)).
+    """
+    s_total = len(cell_updates)
+    n_max = max([len(c[0]) for c in cell_updates if c is not None] + [1])
+    n_b = bucket_block(n_max, 32)
+    u = np.zeros((s_total, n_b, d), np.float32)
+    fresh = np.zeros((s_total, n_b), bool)
+    tau = np.zeros((s_total, n_b), np.int32)
+    valid = np.zeros((s_total, n_b), bool)
+    has = np.zeros(s_total, bool)
+    for s, cell in enumerate(cell_updates):
+        if cell is None:
+            continue
+        rows, fr, ta = cell
+        n = len(rows)
+        u[s, :n] = np.stack(rows)
+        fresh[s, :n] = fr
+        tau[s, :n] = ta
+        valid[s, :n] = True
+        has[s] = True
+    return u, fresh, tau, valid, has
+
+
+def sweep_aggregate_flat(stacked, fresh, tau, valid, beta, *,
+                         rule="relay", use_kernel: bool = False):
+    """SAA-aggregate S simulations' rounds in one batched program.
+
+    stacked: (S, n, D) fp32 (typically from ``sweep_bucket_pad``); fresh/tau/
+    valid: (S, n); beta: (S,) per-cell Eq. 2 averaging weights; ``rule`` is
+    one rule name or a length-S sequence — mixed rules run in the same
+    compiled program (per-cell ``lax.switch``).  Returns (aggregate (S, D),
+    weights (S, n)).  ``use_kernel`` routes through the sweep-axis fused
+    Pallas kernel (``kernels.staleness_agg``), which is compiled per rule
+    and therefore requires a uniform one.  All-invalid cells produce an
+    exactly-zero aggregate row (their weights normalize to 0).
+    """
+    s = np.shape(stacked)[0]
+    rules = [rule] * s if isinstance(rule, str) else list(rule)
+    if use_kernel:
+        if len(set(rules)) != 1:
+            raise ValueError("the sweep kernel is compiled per scaling rule; "
+                             f"got mixed rules {sorted(set(rules))}")
+        from repro.kernels.staleness_agg import ops as agg_ops
+        return agg_ops.sweep_staleness_aggregate(stacked, fresh, tau,
+                                                 valid=valid, rule=rules[0],
+                                                 beta=beta)
+    rule_id = np.array([RULE_ID[r] for r in rules], np.int32)
+    return _sweep_weights_and_aggregate(
+        stacked, np.asarray(fresh), np.asarray(tau), np.asarray(valid),
+        np.asarray(beta, np.float32), rule_id)
+
+
 def stale_synchronous_aggregate(update_trees: Sequence, fresh: Sequence[bool],
                                 tau: Sequence[int], *, rule: str = "relay",
                                 beta: float = 0.35, use_kernel: bool = False,
@@ -200,3 +297,22 @@ def yogi_apply(params, delta, state, *, lr=1e-2, b1=0.9, b2=0.99, eps=1e-3):
                            + lr * m_ / (jnp.sqrt(v_) + eps)).astype(p.dtype),
         params, m, v)
     return new_params, {"m": m, "v": v, "t": state["t"] + 1}
+
+
+def yogi_init_flat(d: int):
+    """YoGi state over a flat (D,) parameter vector (fast-path server)."""
+    return {"m": jnp.zeros((d,), jnp.float32),
+            "v": jnp.full((d,), 1e-6, jnp.float32),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def yogi_apply_flat(flat_params, delta, state, *, lr=1e-2, b1=0.9, b2=0.99,
+                    eps=1e-3):
+    """``yogi_apply`` on flat fp32 vectors — same elementwise formulas, so the
+    values match the pytree version bit-for-bit; vmappable over a leading
+    sweep axis."""
+    m = b1 * state["m"] + (1 - b1) * delta
+    d2 = jnp.square(delta)
+    v = state["v"] - (1 - b2) * d2 * jnp.sign(state["v"] - d2)
+    new = flat_params + lr * m / (jnp.sqrt(v) + eps)
+    return new, {"m": m, "v": v, "t": state["t"] + 1}

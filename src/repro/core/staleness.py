@@ -67,6 +67,10 @@ SCALING_RULES = {
     "relay": _rule_relay,
 }
 
+# stable rule indexing for traced rule selection (``staleness_weights_by_id``)
+RULE_ORDER = tuple(SCALING_RULES)
+RULE_ID = {r: i for i, r in enumerate(RULE_ORDER)}
+
 
 def staleness_weights(updates: jnp.ndarray, fresh: jnp.ndarray, tau: jnp.ndarray,
                       *, rule: str = "relay", beta: float = 0.35,
@@ -82,6 +86,28 @@ def staleness_weights(updates: jnp.ndarray, fresh: jnp.ndarray, tau: jnp.ndarray
     stale_mask = (~fresh) & valid
     lam_max = jnp.max(jnp.where(stale_mask, lam, 0.0))
     w_stale = SCALING_RULES[rule](tau, lam, lam_max, beta)
+    w = jnp.where(fresh, 1.0, w_stale)
+    w = jnp.where(valid, w, 0.0)
+    return w / jnp.maximum(w.sum(), EPS)
+
+
+def staleness_weights_by_id(updates, fresh, tau, rule_id, *, beta=0.35,
+                            valid=None):
+    """``staleness_weights`` with the scaling rule as a *traced* operand.
+
+    ``rule_id`` indexes ``RULE_ORDER`` and selects the rule via
+    ``lax.switch``, so a sweep can mix scaling rules across its cells inside
+    one compiled program.  The selected branch is the same rule function the
+    static path calls — per-cell results are bit-identical to
+    ``staleness_weights(..., rule=RULE_ORDER[rule_id])``.
+    """
+    if valid is None:
+        valid = jnp.ones_like(fresh)
+    lam = deviation_scores(updates, fresh & valid)
+    stale_mask = (~fresh) & valid
+    lam_max = jnp.max(jnp.where(stale_mask, lam, 0.0))
+    w_stale = jax.lax.switch(rule_id, [SCALING_RULES[r] for r in RULE_ORDER],
+                             tau, lam, lam_max, beta)
     w = jnp.where(fresh, 1.0, w_stale)
     w = jnp.where(valid, w, 0.0)
     return w / jnp.maximum(w.sum(), EPS)

@@ -21,7 +21,7 @@ from repro.core.aggregation import bucket_pad
 from repro.core.staleness import EPS, SCALING_RULES
 from repro.kernels.staleness_agg.staleness_agg import (
     D_BLK, deviation_partials, fused_staleness_aggregate,
-    fused_staleness_apply, weighted_aggregate)
+    fused_staleness_apply, sweep_fused_staleness_aggregate, weighted_aggregate)
 
 
 def staleness_aggregate(updates, fresh, tau, *, rule: str = "relay",
@@ -49,6 +49,28 @@ def staleness_aggregate(updates, fresh, tau, *, rule: str = "relay",
     w = w / jnp.maximum(w.sum(), EPS)
     agg = weighted_aggregate(w, u, interpret=interpret)
     return agg[:D], w
+
+
+def sweep_staleness_aggregate(updates, fresh, tau, *, valid=None,
+                              rule: str = "relay", beta=0.35,
+                              interpret: bool | None = None):
+    """Batched SAA over a sweep axis: updates (S, n, any-D) fp32; fresh/tau
+    (S, n); ``valid`` masks padded participant slots (default: all real);
+    ``beta`` is a scalar or a (S,) per-simulation vector.
+
+    Returns (aggregate (S, D), weights (S, n)) from ONE kernel launch over a
+    (S, phase, D-block) grid — the sweep-grid extension of the fused kernel.
+    """
+    s, n, d = np.shape(updates)
+    if valid is None:
+        valid = np.ones((s, n), bool)
+    u = np.zeros((s, n, d + ((-d) % D_BLK)), np.float32)
+    u[:, :, :d] = np.asarray(updates)
+    beta_vec = np.broadcast_to(np.asarray(beta, np.float32), (s,))
+    agg, w = sweep_fused_staleness_aggregate(
+        u, np.asarray(fresh), np.asarray(tau), beta_vec, np.asarray(valid),
+        rule=rule, interpret=interpret)
+    return agg[:, :d], w
 
 
 def staleness_apply(params, updates, fresh, tau, *, rule: str = "relay",

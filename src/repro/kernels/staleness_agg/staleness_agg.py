@@ -46,6 +46,21 @@ def _resolve_interpret(interpret):
     return default_interpret() if interpret is None else interpret
 
 
+def _deviation_increments(u, fresh):
+    """Eq. 2 deviation partials for one (n, D_BLK) tile.
+
+    u: (n, D_BLK) fp32; fresh: (n, 1) fp32 {0,1}.  Returns the tile's
+    contribution (num (n, 1), den (1, 1)) — the single implementation of the
+    partials math shared by every kernel variant.
+    """
+    n_f = jnp.maximum(fresh.sum(), 1.0)
+    u_hat = (u * fresh).sum(axis=0, keepdims=True) / n_f      # (1, D_BLK)
+    mixed = (u + n_f * u_hat) / (n_f + 1.0)
+    num = ((u_hat - mixed) ** 2).sum(axis=1, keepdims=True)   # (n, 1)
+    den = (u_hat ** 2).sum().reshape(1, 1)
+    return num, den
+
+
 def _deviation_kernel(u_ref, fresh_ref, num_ref, den_ref):
     """Accumulate per-update deviation partials over D blocks.
 
@@ -53,13 +68,7 @@ def _deviation_kernel(u_ref, fresh_ref, num_ref, den_ref):
     num_ref: (n, 1) accumulator; den_ref: (1, 1) accumulator.
     """
     i = pl.program_id(0)
-    u = u_ref[...]
-    fresh = fresh_ref[...]                       # (n, 1)
-    n_f = jnp.maximum(fresh.sum(), 1.0)
-    u_hat = (u * fresh).sum(axis=0, keepdims=True) / n_f      # (1, D_BLK)
-    mixed = (u + n_f * u_hat) / (n_f + 1.0)
-    num = ((u_hat - mixed) ** 2).sum(axis=1, keepdims=True)   # (n, 1)
-    den = (u_hat ** 2).sum().reshape(1, 1)
+    num, den = _deviation_increments(u_ref[...], fresh_ref[...])
 
     @pl.when(i == 0)
     def _init():
@@ -83,11 +92,9 @@ def _aggregate_kernel(w_ref, u_ref, out_ref):
 
 def _accumulate_partials(u, fresh, num_ref, den_ref):
     """Deviation partials for one (n, D_BLK) tile into the accumulators."""
-    n_f = jnp.maximum(fresh.sum(), 1.0)
-    u_hat = (u * fresh).sum(axis=0, keepdims=True) / n_f       # (1, D_BLK)
-    mixed = (u + n_f * u_hat) / (n_f + 1.0)
-    num_ref[...] += ((u_hat - mixed) ** 2).sum(axis=1, keepdims=True)
-    den_ref[...] += (u_hat ** 2).sum().reshape(1, 1)
+    num, den = _deviation_increments(u, fresh)
+    num_ref[...] += num
+    den_ref[...] += den
 
 
 def _compute_weights(rule, fresh, tau, beta, num, den, valid):
@@ -171,6 +178,92 @@ def _make_fused_apply_kernel(rule: str):
             out_ref[...] = params_ref[...] + scal_ref[0, 1] * agg
 
     return kernel
+
+
+def _make_sweep_fused_kernel(rule: str):
+    """Fused SAA kernel with a leading sweep-grid axis: grid (S, phase, D
+    blocks).  Each simulation ``s`` owns its own accumulator blocks (index
+    maps select row ``s``), re-initialized at its (phase 0, block 0) step, so
+    one launch aggregates a whole sweep's round with per-cell Eq. 2 weights
+    and per-cell beta."""
+    def kernel(u_ref, fresh_ref, tau_ref, valid_ref, beta_ref,
+               num_ref, den_ref, w_ref, out_ref):
+        p = pl.program_id(1)      # phase: 0 = partials, 1 = aggregate
+        i = pl.program_id(2)      # D block
+        fresh = fresh_ref[0]      # (n, 1) fp32 {0, 1}
+
+        @pl.when((p == 0) & (i == 0))
+        def _init():
+            num_ref[...] = jnp.zeros_like(num_ref)
+            den_ref[...] = jnp.zeros_like(den_ref)
+            w_ref[...] = jnp.zeros_like(w_ref)
+
+        @pl.when(p == 0)
+        def _partials():
+            num, den = _deviation_increments(u_ref[0], fresh)
+            num_ref[0] += num
+            den_ref[0] += den
+            # keep the revisited output block defined on every grid step
+            out_ref[...] = jnp.zeros_like(out_ref)
+
+        @pl.when((p == 1) & (i == 0))
+        def _weights():
+            w = _compute_weights(rule, fresh, tau_ref[0], beta_ref[0, 0],
+                                 num_ref[0], den_ref[0], valid_ref[0])
+            w_ref[...] = w.reshape(w_ref.shape)
+
+        @pl.when(p == 1)
+        def _agg():
+            out_ref[0] = jnp.dot(w_ref[0], u_ref[0],
+                                 preferred_element_type=jnp.float32)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("rule", "interpret"))
+def sweep_fused_staleness_aggregate(updates, fresh, tau, beta, valid, *,
+                                    rule="relay", interpret=None):
+    """updates: (S, n, D) fp32, D % D_BLK == 0; fresh/valid: (S, n) bool;
+    tau: (S, n) int; beta: (S,) per-simulation Eq. 2 averaging weight.
+
+    One kernel launch aggregates S simulations' rounds: per-cell deviation
+    partials, in-kernel per-cell Eq. 2 weights, per-cell weighted aggregate.
+    Returns (aggregate (S, D), weights (S, n)); all-invalid cells produce
+    zero weights and a zero aggregate row.
+    """
+    interpret = _resolve_interpret(interpret)
+    s, n, d = updates.shape
+    assert d % D_BLK == 0
+    grid = (s, 2, d // D_BLK)
+    num, den, w, out = pl.pallas_call(
+        _make_sweep_fused_kernel(rule),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n, D_BLK), lambda s_, p, i: (s_, 0, i)),
+            pl.BlockSpec((1, n, 1), lambda s_, p, i: (s_, 0, 0)),
+            pl.BlockSpec((1, n, 1), lambda s_, p, i: (s_, 0, 0)),
+            pl.BlockSpec((1, n, 1), lambda s_, p, i: (s_, 0, 0)),
+            pl.BlockSpec((1, 1), lambda s_, p, i: (s_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n, 1), lambda s_, p, i: (s_, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda s_, p, i: (s_, 0, 0)),
+            pl.BlockSpec((1, 1, n), lambda s_, p, i: (s_, 0, 0)),
+            pl.BlockSpec((1, 1, D_BLK), lambda s_, p, i: (s_, 0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((s, 1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((s, 1, n), jnp.float32),
+            jax.ShapeDtypeStruct((s, 1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(updates.astype(jnp.float32),
+      fresh.astype(jnp.float32)[..., None],
+      tau.astype(jnp.float32)[..., None],
+      valid.astype(jnp.float32)[..., None],
+      beta.astype(jnp.float32)[:, None])
+    return out[:, 0], w[:, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("rule", "interpret"))

@@ -53,14 +53,24 @@ def sample_profiles(n: int, rng: np.random.Generator,
         down = float(np.exp(np.log(NET_DOWN_MED) + 0.5 * rng.standard_normal()))
         up = float(np.exp(np.log(NET_UP_MED) + 0.5 * rng.standard_normal()))
         profiles.append(DeviceProfile(int(c), t, down, up))
+    return apply_hardware_scenario(profiles, hardware_scenario)
 
-    if hardware_scenario != "HS1":
-        frac = {"HS2": 0.25, "HS3": 0.75, "HS4": 1.00}[hardware_scenario]
-        speeds = np.array([p.per_sample_time for p in profiles])
-        cutoff = np.quantile(speeds, frac)  # fastest `frac` portion
-        for p in profiles:
-            if p.per_sample_time <= cutoff:
-                p.per_sample_time /= 2.0
-                p.down_mbps *= 2.0
-                p.up_mbps *= 2.0
-    return profiles
+
+def apply_hardware_scenario(profiles: list[DeviceProfile],
+                            hardware_scenario: str) -> list[DeviceProfile]:
+    """HS2-HS4 speedups on an HS1 base population (paper §5.4).
+
+    The base draws are scenario-independent, so one sampled population can be
+    shared across a sweep's hardware axis; transformed profiles are new
+    objects (the HS1 base is never mutated), HS1 returns the input list.
+    """
+    if hardware_scenario == "HS1":
+        return profiles
+    frac = {"HS2": 0.25, "HS3": 0.75, "HS4": 1.00}[hardware_scenario]
+    speeds = np.array([p.per_sample_time for p in profiles])
+    cutoff = np.quantile(speeds, frac)  # fastest `frac` portion
+    return [dataclasses.replace(p, per_sample_time=p.per_sample_time / 2.0,
+                                down_mbps=p.down_mbps * 2.0,
+                                up_mbps=p.up_mbps * 2.0)
+            if p.per_sample_time <= cutoff else p
+            for p in profiles]

@@ -12,14 +12,30 @@ round's cohort trains in one vmapped JAX call.
 
 Two substrates, same semantics (parity-tested in tests/test_fastpath_parity.py):
 
-  fast path (default) — participant updates are flat (n, D) fp32 rows from the
-  compiled cohort-training program all the way to aggregation (unflattened
-  once per round to apply the server step); availability queries go through
-  the struct-of-arrays ``TraceBank``/``ForecasterBank`` with batched
+  fast path (default) — the global model lives as a flat (D,) fp32 vector;
+  participant updates are flat (n, D) fp32 rows from the compiled cohort
+  program (``flat_cohort_step``, a pure function of the flat vector that is
+  also vmappable along a leading sweep axis) through the stale cache to
+  aggregation and the flat server step; availability queries go through the
+  struct-of-arrays ``TraceBank``/``ForecasterBank`` with batched
   searchsorted/bincount math instead of per-learner Python objects;
 
   legacy path (``fast_path=False``) — the original per-learner scalar loops
   and pytree shuffling, kept as the parity/benchmark baseline.
+
+The round loop is decomposed into ``_begin_round`` (host: availability,
+selection, batch sampling), ``_train`` (device), ``_collect_updates`` (host:
+arrivals, fresh/stale split), ``_aggregate``/``_apply_update`` (device) and
+``_record_round`` (host bookkeeping + optional eval).  ``run()`` chains them
+for one simulation; ``repro.sweeps.runner`` drives many Simulators through
+the same methods in lockstep, batching the device stages across the sweep
+axis — the host logic is shared code, so batched cells are bit-identical to
+serial runs of the same config/seed.
+
+Seed-determined world state (dataset, shards, device profiles, availability
+traces, warmed forecasters, initial model) is factored into ``Substrate`` so
+a sweep's shared-seed cells build it once and every policy sees identical
+traces (matched-condition comparisons, Soltani et al. 2022).
 """
 from __future__ import annotations
 
@@ -28,12 +44,14 @@ import functools
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregation as agg
 from repro.core.aggregation import (fedavg_apply, stale_synchronous_aggregate,
                                     stale_synchronous_aggregate_flat,
-                                    unflatten_update, yogi_apply, yogi_init)
+                                    unflatten_update, yogi_apply,
+                                    yogi_apply_flat, yogi_init, yogi_init_flat)
 from repro.core.apt import AdaptiveParticipantTarget
 from repro.core.availability import AvailabilityForecaster, ForecasterBank
 from repro.core.selection import SELECTORS, LearnerView, OortSelector, PrioritySelector
@@ -46,12 +64,49 @@ from repro.sim.metrics import Accounting, RoundRecord
 HOUR = 3600.0
 
 
+# ---------------------------------------------------------------------------
+# Pure flat-update round programs (vmappable: repro.sweeps stacks them)
+# ---------------------------------------------------------------------------
+
+
+def flat_cohort_step(flat_params, bx, by, *, spec, lr, prox_mu):
+    """One round of local training as a pure function of the flat model.
+
+    flat_params: (D,) fp32 in ``spec`` leaf order; bx: (m, steps, batch, dim);
+    by: (m, steps, batch).  Returns ((m, D) flat deltas, (m,) losses,
+    (m,) Oort l2 stats).  Rows are independent under vmap, so padding rows
+    never perturb real rows, and the whole step can be vmapped along a
+    leading sweep axis (or packed as per-row parameters) with bit-identical
+    per-row results — the property ``repro.sweeps.runner`` builds on.
+    """
+    step = functools.partial(ln.local_train_flat, spec=spec, lr=lr,
+                             prox_mu=prox_mu)
+    return jax.vmap(step, in_axes=(None, 0, 0))(flat_params, bx, by)
+
+
 @functools.lru_cache(maxsize=8)
-def _fedavg_flat_fn(spec):
-    """Jitted unflatten+FedAvg step, cached per flat spec so every Simulator
-    instance with the same model shares one compiled program."""
-    return jax.jit(lambda p, flat, lr: fedavg_apply(
-        p, unflatten_update(flat, spec), lr))
+def _cohort_step_fn(spec, lr, prox_mu):
+    """Jitted ``flat_cohort_step``, cached per (spec, lr, prox_mu) so every
+    Simulator with the same model/hyperparameters shares one program."""
+    return jax.jit(functools.partial(flat_cohort_step, spec=spec, lr=lr,
+                                     prox_mu=prox_mu))
+
+
+@functools.lru_cache(maxsize=2)
+def _flat_apply_fn():
+    """FedAvg server step on the flat vector: x <- x + lr * Delta."""
+    return jax.jit(lambda flat, delta, lr: flat + lr * delta)
+
+
+@functools.lru_cache(maxsize=2)
+def _yogi_flat_fn():
+    return jax.jit(yogi_apply_flat)
+
+
+@functools.lru_cache(maxsize=8)
+def _flat_eval_fn(spec):
+    return jax.jit(lambda flat, x, y: ln.evaluate(unflatten_update(flat, spec),
+                                                  x, y))
 
 
 @functools.lru_cache(maxsize=8)
@@ -92,6 +147,71 @@ class SimConfig:
     fast_path: bool = True            # flat (n, D) updates + TraceBank/ForecasterBank
 
 
+def substrate_key(cfg: SimConfig) -> tuple:
+    """The config fields that determine the seed-built world state."""
+    return (cfg.benchmark, cfg.mapping, cfg.n_learners, cfg.seed,
+            cfg.dynamic_availability)
+
+
+@dataclasses.dataclass
+class Substrate:
+    """Everything the config seed determines before the first round.
+
+    Built with the exact RNG draw order of the original Simulator
+    constructor (dataset, partition, profiles, traces), then the generator
+    state is captured so a Simulator resuming from a cached Substrate
+    consumes the identical stream the uncached constructor would — sweep
+    cells sharing a substrate are bit-identical to standalone runs.
+
+    Device profiles are stored as the HS1 base population; hardware
+    scenarios are pure transforms applied per Simulator
+    (``devices.apply_hardware_scenario``), so the hardware axis of a sweep
+    shares one substrate too.
+    """
+    key: tuple
+    data: part.FederatedDataset
+    base_profiles: list
+    traces: list
+    trace_bank: tr.TraceBank
+    rng_state: dict
+    params0: dict                      # initial model pytree (read-only, shared)
+    flat_params0: np.ndarray           # same model, flat fp32 (D,)
+    flat_spec: tuple
+    _warmed: Optional[tuple] = None    # lazily-built fast-path forecaster warmup
+
+    @staticmethod
+    def build(cfg: SimConfig) -> "Substrate":
+        rng = np.random.default_rng(cfg.seed)
+        x_tr, y_tr, x_te, y_te = part.make_dataset(cfg.benchmark, rng)
+        shards = part.partition(y_tr, cfg.n_learners, cfg.mapping, rng)
+        base_profiles = dev.sample_profiles(cfg.n_learners, rng)   # HS1 base
+        traces = tr.make_traces(cfg.n_learners, rng,
+                                dynamic=cfg.dynamic_availability)
+        data = part.FederatedDataset(cfg.benchmark, x_tr, y_tr, x_te, y_te,
+                                     shards)
+        params0 = ln.mlp_init(jax.random.PRNGKey(cfg.seed),
+                              x_tr.shape[1], data.n_classes)
+        flat_spec = agg.make_flat_spec(params0)
+        flat0, _ = agg.flatten_update(params0)
+        return Substrate(key=substrate_key(cfg), data=data,
+                         base_profiles=base_profiles, traces=traces,
+                         trace_bank=tr.TraceBank(traces),
+                         rng_state=rng.bit_generator.state,
+                         params0=params0, flat_params0=np.asarray(flat0),
+                         flat_spec=flat_spec)
+
+    def warmed_fbank(self) -> tuple:
+        """Pre-deployment forecaster history (paper App. A step 2), computed
+        once per substrate; returns (counts, avail_counts, recent) arrays
+        that each Simulator copies into its own ForecasterBank."""
+        if self._warmed is None:
+            fb = ForecasterBank(len(self.traces))
+            for tt in np.arange(0, 3 * 24 * HOUR, 1800.0):
+                fb.observe_all(tt, self.trace_bank.available_all(tt))
+            self._warmed = (fb.counts, fb.avail_counts, fb.recent)
+        return self._warmed
+
+
 @dataclasses.dataclass
 class _InFlight:
     learner_id: int
@@ -102,23 +222,41 @@ class _InFlight:
     stat_util: float
 
 
+@dataclasses.dataclass
+class RoundPlan:
+    """Host-side output of ``_begin_round``: everything the device stage
+    needs for one round's cohort training."""
+    t_now: float
+    chosen: list
+    n_t: int
+    k: int                            # cohort size
+    bx: np.ndarray                    # (k, steps, batch, dim) local batches
+    by: np.ndarray                    # (k, steps, batch)
+    durs: np.ndarray                  # (k,)
+    drop_at: np.ndarray               # (k,) mid-round dropout offsets (inf = none)
+
+
 class Simulator:
-    def __init__(self, cfg: SimConfig):
+    def __init__(self, cfg: SimConfig, substrate: Optional[Substrate] = None):
         self.cfg = cfg
+        if substrate is None:
+            substrate = Substrate.build(cfg)
+        else:
+            assert substrate.key == substrate_key(cfg), \
+                "substrate built for a different config family"
+        self.substrate = substrate
         self.rng = np.random.default_rng(cfg.seed)
-        x_tr, y_tr, x_te, y_te = part.make_dataset(cfg.benchmark, self.rng)
-        shards = part.partition(y_tr, cfg.n_learners, cfg.mapping, self.rng)
-        self.data = part.FederatedDataset(cfg.benchmark, x_tr, y_tr, x_te, y_te, shards)
-        self.profiles = dev.sample_profiles(cfg.n_learners, self.rng,
-                                            cfg.hardware_scenario)
-        self.traces = tr.make_traces(cfg.n_learners, self.rng,
-                                     dynamic=cfg.dynamic_availability)
+        self.rng.bit_generator.state = substrate.rng_state
+        self.data = substrate.data
+        self.profiles = dev.apply_hardware_scenario(substrate.base_profiles,
+                                                    cfg.hardware_scenario)
+        self.traces = substrate.traces
         # per-learner round duration is config-determined: compute it once
         self.durations = np.array([
             p.round_duration(cfg.local_steps * cfg.local_batch, 1, cfg.model_mbits)
             for p in self.profiles])
         if cfg.fast_path:
-            self.trace_bank = tr.TraceBank(self.traces)
+            self.trace_bank = substrate.trace_bank
             self.fbank = ForecasterBank(cfg.n_learners)
             self.forecasters = None
         else:
@@ -129,30 +267,36 @@ class Simulator:
         sel_cls = SELECTORS[cfg.selector]
         self.selector = sel_cls()
         self.apt = AdaptiveParticipantTarget(n0=cfg.n_target) if cfg.apt else None
-        key = jax.random.PRNGKey(cfg.seed)
-        self.params = ln.mlp_init(key, self.data.x_train.shape[1], self.data.n_classes)
-        self._flat_spec = agg.make_flat_spec(self.params)
-        # one compiled unflatten+FedAvg step per round on the fast path (the
-        # eager tree ops dispatch a dozen tiny programs per round otherwise)
-        self._fedavg_flat = _fedavg_flat_fn(self._flat_spec)
-        self._unflatten = _unflatten_fn(self._flat_spec)
-        self.opt_state = yogi_init(self.params) if cfg.aggregator == "yogi" else None
+        self.params = substrate.params0
+        self._flat_spec = substrate.flat_spec
+        if cfg.fast_path:
+            self.flat_params = jnp.asarray(substrate.flat_params0)
+            self.flat_opt_state = (yogi_init_flat(len(substrate.flat_params0))
+                                   if cfg.aggregator == "yogi" else None)
+            self.opt_state = None
+        else:
+            self.flat_params = None
+            self.flat_opt_state = None
+            self.opt_state = yogi_init(self.params) if cfg.aggregator == "yogi" else None
         self.acct = Accounting()
         self.stale_cache: list[_InFlight] = []
         self.busy_until = np.zeros(cfg.n_learners)  # device busy training/uploading
         self.mu = cfg.deadline  # initial round-duration estimate
+        self._t_now = 0.0
 
     # ------------------------------------------------------------------
     def _warmup_forecasters(self):
         """Learners have pre-deployment local history (paper App. A step 2)."""
-        ts = np.arange(0, 3 * 24 * HOUR, 1800.0)
         if self.cfg.fast_path:
-            for tt in ts:                       # one vectorized census per step
-                self.fbank.observe_all(tt, self.trace_bank.available_all(tt))
-        else:
-            for lid, (f, t) in enumerate(zip(self.forecasters, self.traces)):
-                for tt in ts:
-                    f.observe(tt, t.available(tt))
+            counts, avail_counts, recent = self.substrate.warmed_fbank()
+            self.fbank.counts = counts.copy()
+            self.fbank.avail_counts = avail_counts.copy()
+            self.fbank.recent = recent.copy()
+            return
+        ts = np.arange(0, 3 * 24 * HOUR, 1800.0)
+        for lid, (f, t) in enumerate(zip(self.forecasters, self.traces)):
+            for tt in ts:
+                f.observe(tt, t.available(tt))
 
     def _available_now(self, t_now: float):
         """Idle + available learner ids (ascending), forecasters updated."""
@@ -181,45 +325,162 @@ class Simulator:
                             est_duration=self.durations[lid])
                 for lid in available_ids]
 
-    def _local_round(self, participant_ids, t_now):
-        """Run the cohort's local training; returns per-participant results.
+    # ------------------------------------------------------------------
+    # Round stages (run() chains them; repro.sweeps.runner drives them in
+    # lockstep across many Simulators with batched device stages)
+    # ------------------------------------------------------------------
 
-        Fast path: deltas come back as stacked flat (n, D) fp32 rows straight
-        from the compiled program; legacy: a pytree of stacked leaves.
-        """
+    def eval_due(self, r: int) -> bool:
+        return (r + 1) % self.cfg.eval_every == 0 or r == self.cfg.rounds - 1
+
+    def _begin_round(self, r: int) -> Optional[RoundPlan]:
+        """Host pre-step: advance time, census availability, pick the cohort,
+        sample its local batches.  Returns None when the round is skipped
+        (nobody available / nobody selected)."""
+        cfg = self.cfg
+        self._t_now += cfg.selection_window
+        t_now = self._t_now
+        available = self._available_now(t_now)
+        if not len(available):
+            self._t_now += 60.0
+            return None
+
+        n_t = cfg.n_target
+        if self.apt is not None:
+            rts = [f.arrival - t_now for f in self.stale_cache
+                   if f.arrival > t_now]
+            n_t = self.apt.target(rts)
+        n_sel = (int(np.ceil(n_t * cfg.overcommit))
+                 if cfg.setting == "OC" else n_t)
+        views = self._views(t_now, available)
+        chosen = self.selector.select(r, views, n_sel, self.rng)
+        if not chosen:
+            self._t_now += 60.0
+            return None
+        return self._build_plan(chosen, t_now, n_t)
+
+    def _build_plan(self, chosen, t_now, n_t) -> RoundPlan:
         cfg = self.cfg
         xs, ys = [], []
-        for lid in participant_ids:
+        for lid in chosen:
             bx, by = ln.sample_local_batches(self.data.shards[lid],
                                              self.data.x_train, self.data.y_train,
                                              cfg.local_steps, cfg.local_batch, self.rng)
             xs.append(bx)
             ys.append(by)
-        durs = self.durations[np.asarray(participant_ids)]
+        durs = self.durations[np.asarray(chosen)]
+        k = len(xs)
         if cfg.fast_path:
-            nus = self.trace_bank.next_unavailable_after_batch(participant_ids, t_now)
+            nus = self.trace_bank.next_unavailable_after_batch(chosen, t_now)
             rel = nus - t_now
             drop_at = np.where(rel < durs, rel, np.inf)
+        else:
+            drop_at = []
+            for lid, d in zip(chosen, durs):
+                nu = self.traces[lid].next_unavailable_after(t_now)
+                drop_at.append(nu - t_now if nu - t_now < d else np.inf)
+            drop_at = np.array(drop_at)
+        return RoundPlan(t_now, list(chosen), n_t, k, np.stack(xs),
+                         np.stack(ys), durs, drop_at)
+
+    def _train(self, plan: RoundPlan):
+        """Device stage: the cohort's local training (simulated durations,
+        real gradients).  Fast path returns flat (k, D) fp32 host rows."""
+        cfg = self.cfg
+        if cfg.fast_path:
             # pad the cohort to a power-of-two bucket: one compiled program per
             # bucket instead of per distinct cohort size (rows independent
-            # under vmap, so real rows are bit-identical; padding discarded)
-            k = len(xs)
-            m = agg.bucket_pow2(k)
-            bx = np.stack(xs + [xs[0]] * (m - k))
-            by = np.stack(ys + [ys[0]] * (m - k))
-            deltas, losses, l2s = ln.local_train_cohort_flat(
-                self.params, bx, by, cfg.local_lr, cfg.prox_mu)
-            deltas = np.asarray(deltas)[:k]     # one device->host copy per round
-            return (deltas, np.asarray(losses)[:k], np.asarray(l2s)[:k],
-                    durs, drop_at)
-        drop_at = []
-        for lid, d in zip(participant_ids, durs):
-            nu = self.traces[lid].next_unavailable_after(t_now)
-            drop_at.append(nu - t_now if nu - t_now < d else np.inf)
-        drop_at = np.array(drop_at)
+            # under vmap, so real rows are bit-identical; padding discarded).
+            # Serial-only: the sweep runner packs unpadded plan rows itself.
+            k, m = plan.k, agg.bucket_pow2(plan.k)
+            bx = np.concatenate([plan.bx,
+                                 np.broadcast_to(plan.bx[:1],
+                                                 (m - k,) + plan.bx.shape[1:])])
+            by = np.concatenate([plan.by,
+                                 np.broadcast_to(plan.by[:1],
+                                                 (m - k,) + plan.by.shape[1:])])
+            step = _cohort_step_fn(self._flat_spec, cfg.local_lr, cfg.prox_mu)
+            deltas, losses, l2s = step(self.flat_params, bx, by)
+            # one device->host copy per round
+            return np.asarray(deltas)[:k], np.asarray(losses)[:k], np.asarray(l2s)[:k]
         deltas, losses, l2s = ln.local_train_cohort(
-            self.params, np.stack(xs), np.stack(ys), cfg.local_lr, cfg.prox_mu)
-        return deltas, np.asarray(losses), np.asarray(l2s), durs, drop_at
+            self.params, plan.bx, plan.by, cfg.local_lr, cfg.prox_mu)
+        return deltas, np.asarray(losses), np.asarray(l2s)
+
+    def _collect_updates(self, r: int, plan: RoundPlan, deltas, losses, l2s):
+        """Host post-step: arrival schedule, round end time, fresh/straggler
+        split, stale-cache landing.  Returns (t_end, fresh_updates,
+        stale_updates, stale_taus)."""
+        cfg = self.cfg
+        t_now, chosen, durs, drop_at = plan.t_now, plan.chosen, plan.durs, plan.drop_at
+        n_t = plan.n_t
+
+        arrivals = []   # (arrival_time, idx into chosen) for non-dropouts
+        for i, lid in enumerate(chosen):
+            if np.isfinite(drop_at[i]):
+                # device went away mid-round: partial work, always wasted
+                self.acct.charge(float(drop_at[i]), wasted=True)
+                self.busy_until[lid] = t_now + float(drop_at[i])
+            else:
+                arrivals.append((t_now + durs[i], i))
+                self.acct.charge(float(durs[i]), wasted=False)
+                self.busy_until[lid] = t_now + float(durs[i])
+        arrivals.sort()
+
+        # --- round end time ---------------------------------------
+        if cfg.selector == "safa":
+            need = max(1, int(np.ceil(cfg.safa_target_ratio * len(chosen))))
+            t_end = (arrivals[need - 1][0] if len(arrivals) >= need
+                     else t_now + cfg.deadline)
+            t_end = min(t_end, t_now + cfg.deadline)
+        elif cfg.setting == "OC":
+            t_end = (arrivals[n_t - 1][0] if len(arrivals) >= n_t
+                     else (arrivals[-1][0] if arrivals else t_now + cfg.deadline))
+        else:  # DL
+            t_end = t_now + cfg.deadline
+
+        # --- split fresh / straggler ------------------------------
+        fresh_updates = []
+        for (arr, i) in arrivals:
+            lid = chosen[i]
+            delta_i = (deltas[i] if cfg.fast_path
+                       else jax.tree.map(lambda d: d[i], deltas))
+            stat_util = float(cfg.local_steps * cfg.local_batch * l2s[i])
+            self.selector.update_feedback(lid, stat_util=stat_util,
+                                          duration=durs[i], round_idx=r)
+            if arr <= t_end and (cfg.setting == "DL" or cfg.selector == "safa"
+                                 or len(fresh_updates) < n_t):
+                fresh_updates.append(delta_i)
+                self.acct.unique.add(lid)
+            elif cfg.saa:
+                if cfg.fast_path:
+                    # copy: delta_i is a view into the round's padded
+                    # (m, D) cohort buffer; caching the view would pin
+                    # the whole buffer for the straggler's lifetime
+                    delta_i = np.array(delta_i)
+                self.stale_cache.append(_InFlight(lid, r, arr, durs[i],
+                                                  delta_i, stat_util))
+            else:
+                # already charged as used at dispatch; never aggregated
+                self.acct.mark_wasted(float(durs[i]))
+
+        # --- stale updates landing this round ---------------------
+        stale_updates, stale_taus = [], []
+        still_waiting = []
+        for f in self.stale_cache:
+            if f.arrival <= t_end:
+                tau = r - f.origin_round
+                if (cfg.staleness_threshold is None
+                        or tau <= cfg.staleness_threshold):
+                    stale_updates.append(f.delta)
+                    stale_taus.append(tau)
+                    self.acct.unique.add(f.learner_id)
+                else:
+                    self.acct.mark_wasted(f.duration)
+            else:
+                still_waiting.append(f)
+        self.stale_cache = still_waiting
+        return t_end, fresh_updates, stale_updates, stale_taus
 
     def _aggregate(self, fresh_updates, stale_updates, stale_taus):
         cfg = self.cfg
@@ -237,137 +498,74 @@ class Simulator:
             compiled=False)  # seed-exact eager baseline
         return agg_tree
 
-    # ------------------------------------------------------------------
-    def run(self, progress: bool = False):
+    def _apply_update(self, agg_out):
+        """Server optimizer step on the aggregated delta."""
         cfg = self.cfg
-        t_now = 0.0
-        for r in range(cfg.rounds):
-            t_now += cfg.selection_window
-            available = self._available_now(t_now)
-            if not len(available):
-                t_now += 60.0
-                continue
-
-            # --- target & selection -----------------------------------
-            n_t = cfg.n_target
-            if self.apt is not None:
-                rts = [f.arrival - t_now for f in self.stale_cache
-                       if f.arrival > t_now]
-                n_t = self.apt.target(rts)
-            n_sel = (int(np.ceil(n_t * cfg.overcommit))
-                     if cfg.setting == "OC" else n_t)
-            views = self._views(t_now, available)
-            chosen = self.selector.select(r, views, n_sel, self.rng)
-            if not chosen:
-                t_now += 60.0
-                continue
-
-            # --- local training (simulated durations, real gradients) --
-            deltas, losses, l2s, durs, drop_at = self._local_round(chosen, t_now)
-
-            arrivals = []   # (arrival_time, idx into chosen) for non-dropouts
-            for i, lid in enumerate(chosen):
-                if np.isfinite(drop_at[i]):
-                    # device went away mid-round: partial work, always wasted
-                    self.acct.charge(float(drop_at[i]), wasted=True)
-                    self.busy_until[lid] = t_now + float(drop_at[i])
-                else:
-                    arrivals.append((t_now + durs[i], i))
-                    self.acct.charge(float(durs[i]), wasted=False)
-                    self.busy_until[lid] = t_now + float(durs[i])
-            arrivals.sort()
-
-            # --- round end time ---------------------------------------
-            if cfg.selector == "safa":
-                need = max(1, int(np.ceil(cfg.safa_target_ratio * len(chosen))))
-                t_end = (arrivals[need - 1][0] if len(arrivals) >= need
-                         else t_now + cfg.deadline)
-                t_end = min(t_end, t_now + cfg.deadline)
-            elif cfg.setting == "OC":
-                t_end = (arrivals[n_t - 1][0] if len(arrivals) >= n_t
-                         else (arrivals[-1][0] if arrivals else t_now + cfg.deadline))
-            else:  # DL
-                t_end = t_now + cfg.deadline
-
-            # --- split fresh / straggler ------------------------------
-            fresh_updates, fresh_ids = [], []
-            for (arr, i) in arrivals:
-                lid = chosen[i]
-                delta_i = (deltas[i] if cfg.fast_path
-                           else jax.tree.map(lambda d: d[i], deltas))
-                stat_util = float(cfg.local_steps * cfg.local_batch * l2s[i])
-                self.selector.update_feedback(lid, stat_util=stat_util,
-                                              duration=durs[i], round_idx=r)
-                if arr <= t_end and (cfg.setting == "DL" or cfg.selector == "safa"
-                                     or len(fresh_updates) < n_t):
-                    fresh_updates.append(delta_i)
-                    fresh_ids.append(lid)
-                    self.acct.unique.add(lid)
-                elif cfg.saa:
-                    if cfg.fast_path:
-                        # copy: delta_i is a view into the round's padded
-                        # (m, D) cohort buffer; caching the view would pin
-                        # the whole buffer for the straggler's lifetime
-                        delta_i = np.array(delta_i)
-                    self.stale_cache.append(_InFlight(lid, r, arr, durs[i],
-                                                      delta_i, stat_util))
-                else:
-                    # already charged as used at dispatch; never aggregated
-                    self.acct.mark_wasted(float(durs[i]))
-
-            # --- stale updates landing this round ---------------------
-            stale_updates, stale_taus = [], []
-            still_waiting = []
-            for f in self.stale_cache:
-                if f.arrival <= t_end:
-                    tau = r - f.origin_round
-                    if (cfg.staleness_threshold is None
-                            or tau <= cfg.staleness_threshold):
-                        stale_updates.append(f.delta)
-                        stale_taus.append(tau)
-                        self.acct.unique.add(f.learner_id)
-                    else:
-                        self.acct.mark_wasted(f.duration)
-                else:
-                    still_waiting.append(f)
-            self.stale_cache = still_waiting
-
-            # --- aggregate + server update ----------------------------
-            if fresh_updates or stale_updates:
-                agg_out = self._aggregate(fresh_updates, stale_updates, stale_taus)
-                if cfg.fast_path and cfg.aggregator != "yogi":
-                    self.params = self._fedavg_flat(self.params, agg_out,
+        if cfg.fast_path:
+            if cfg.aggregator == "yogi":
+                self.flat_params, self.flat_opt_state = _yogi_flat_fn()(
+                    self.flat_params, agg_out, self.flat_opt_state)
+            else:
+                self.flat_params = _flat_apply_fn()(self.flat_params, agg_out,
                                                     cfg.server_lr)
-                else:
-                    agg_tree = (self._unflatten(agg_out) if cfg.fast_path
-                                else agg_out)
-                    if cfg.aggregator == "yogi":
-                        self.params, self.opt_state = yogi_apply(
-                            self.params, agg_tree, self.opt_state)
-                    else:
-                        self.params = fedavg_apply(self.params, agg_tree,
-                                                   cfg.server_lr)
+        elif cfg.aggregator == "yogi":
+            self.params, self.opt_state = yogi_apply(self.params, agg_out,
+                                                     self.opt_state)
+        else:
+            self.params = fedavg_apply(self.params, agg_out, cfg.server_lr)
 
-            # --- bookkeeping ------------------------------------------
-            duration = t_end - t_now
-            self.mu = (self.apt.update_round_duration(duration)
-                       if self.apt is not None else
-                       0.75 * duration + 0.25 * self.mu)
-            rec = RoundRecord(r, t_end, len(chosen), len(fresh_updates),
-                              len(stale_updates), self.acct.resource_used,
-                              self.acct.resource_wasted, len(self.acct.unique))
-            if (r + 1) % cfg.eval_every == 0 or r == cfg.rounds - 1:
-                acc, loss = ln.evaluate(self.params, self.data.x_test,
-                                        self.data.y_test)
-                rec.accuracy, rec.loss = float(acc), float(loss)
-                if progress:
-                    print(f"  round {r:4d} t={t_end/60:7.1f}min acc={acc:.3f} "
-                          f"used={self.acct.resource_used/60:.0f}min "
-                          f"wasted={100*self.acct.resource_wasted/max(self.acct.resource_used,1e-9):.0f}%")
-            self.acct.records.append(rec)
-            t_now = t_end
+    def _evaluate(self):
+        if self.cfg.fast_path:
+            return _flat_eval_fn(self._flat_spec)(self.flat_params,
+                                                  self.data.x_test,
+                                                  self.data.y_test)
+        return ln.evaluate(self.params, self.data.x_test, self.data.y_test)
 
+    def _record_round(self, r: int, t_start: float, t_end: float,
+                      n_selected: int, n_fresh: int, n_stale: int,
+                      acc_loss=None, progress: bool = False):
+        """Bookkeeping tail of a round: round-duration estimate, RoundRecord,
+        optional evaluation (``acc_loss`` supplies precomputed metrics when a
+        sweep batch evaluated all cells in one call)."""
+        duration = t_end - t_start
+        self.mu = (self.apt.update_round_duration(duration)
+                   if self.apt is not None else
+                   0.75 * duration + 0.25 * self.mu)
+        rec = RoundRecord(r, t_end, n_selected, n_fresh, n_stale,
+                          self.acct.resource_used, self.acct.resource_wasted,
+                          len(self.acct.unique))
+        if self.eval_due(r):
+            acc, loss = self._evaluate() if acc_loss is None else acc_loss
+            rec.accuracy, rec.loss = float(acc), float(loss)
+            if progress:
+                print(f"  round {r:4d} t={t_end/60:7.1f}min acc={rec.accuracy:.3f} "
+                      f"used={self.acct.resource_used/60:.0f}min "
+                      f"wasted={100*self.acct.resource_wasted/max(self.acct.resource_used,1e-9):.0f}%")
+        self.acct.records.append(rec)
+        self._t_now = t_end
+
+    def _finalize(self) -> Accounting:
         # updates still in flight at the end of training are wasted work
         for f in self.stale_cache:
             self.acct.mark_wasted(f.duration)
+        if self.cfg.fast_path:
+            self.params = _unflatten_fn(self._flat_spec)(self.flat_params)
         return self.acct
+
+    # ------------------------------------------------------------------
+    def run(self, progress: bool = False):
+        self._t_now = 0.0
+        for r in range(self.cfg.rounds):
+            plan = self._begin_round(r)
+            if plan is None:
+                continue
+            deltas, losses, l2s = self._train(plan)
+            t_end, fresh_updates, stale_updates, stale_taus = \
+                self._collect_updates(r, plan, deltas, losses, l2s)
+            if fresh_updates or stale_updates:
+                self._apply_update(
+                    self._aggregate(fresh_updates, stale_updates, stale_taus))
+            self._record_round(r, plan.t_now, t_end, len(plan.chosen),
+                               len(fresh_updates), len(stale_updates),
+                               progress=progress)
+        return self._finalize()

@@ -67,20 +67,22 @@ local_train_cohort = jax.jit(
     static_argnames=("lr", "prox_mu"))
 
 
-def _cohort_flat(params, xs, ys, lr, prox_mu):
-    deltas, losses, l2s = jax.vmap(
-        local_train, in_axes=(None, 0, 0, None, None))(params, xs, ys, lr, prox_mu)
-    n = xs.shape[0]
-    flat = jnp.concatenate([l.reshape(n, -1).astype(jnp.float32)
-                            for l in jax.tree.leaves(deltas)], axis=1)
-    return flat, losses, l2s
+def local_train_flat(flat_params, xs, ys, *, spec, lr, prox_mu):
+    """One learner's local round as a pure flat-vector function.
 
-
-# flat fast path: the cohort's deltas leave the compiled program already
-# stacked as (n, D) fp32 rows in ``jax.tree.flatten`` leaf order — the same
-# layout ``core.aggregation.flatten_update`` produces — so the engine never
-# slices per-participant pytrees again.
-local_train_cohort_flat = jax.jit(_cohort_flat, static_argnames=("lr", "prox_mu"))
+    flat_params: (D,) fp32 in ``spec`` leaf order; xs: (n_steps, batch, dim);
+    returns (flat delta (D,), mean loss, Oort l2 stat).  The unflatten and
+    per-leaf flatten are pure reshapes, so the delta rows are bit-identical
+    to ``local_train``'s pytree output — this is the unit the engine's
+    ``flat_cohort_step`` vmaps over a cohort and the sweep runner vmaps over
+    packed (cell, participant) rows with per-row parameters.
+    """
+    from repro.core.aggregation import unflatten_update
+    delta, loss, l2 = local_train(unflatten_update(flat_params, spec),
+                                  xs, ys, lr, prox_mu)
+    flat = jnp.concatenate([jnp.ravel(l).astype(jnp.float32)
+                            for l in jax.tree.leaves(delta)])
+    return flat, loss, l2
 
 
 @jax.jit

@@ -10,7 +10,29 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import List, TypedDict
+
+
+class SimSummary(TypedDict):
+    """Fixed-key summary of one simulation run.
+
+    This is the stable contract consumed by downstream layers (the sweep
+    results accumulator in ``repro.sweeps.results``, benchmarks, examples):
+    keys are exactly ``SUMMARY_KEYS``, values are plain Python scalars, and
+    two runs of the same config/seed produce equal summaries.  Pinned by
+    ``tests/test_metrics_schema.py``.
+    """
+    rounds: int                  # recorded rounds (skipped rounds excluded)
+    sim_time: float              # simulated seconds at the last recorded round
+    resource_used: float         # cumulative participant compute+comm seconds
+    resource_wasted: float       # subset never incorporated into the model
+    waste_fraction: float        # resource_wasted / resource_used (0 if unused)
+    unique_participants: int     # distinct learners ever aggregated
+    final_accuracy: float        # last evaluation (NaN if never evaluated)
+    best_accuracy: float         # best evaluation (NaN if never evaluated)
+
+
+SUMMARY_KEYS = tuple(SimSummary.__annotations__)
 
 
 @dataclasses.dataclass
@@ -53,17 +75,17 @@ class Accounting:
                         f"{r.unique_participants},{r.accuracy:.4f},{r.loss:.4f}")
         return "\n".join(rows)
 
-    def summary(self) -> dict:
+    def summary(self) -> SimSummary:
         last = self.records[-1] if self.records else None
         accs = [r.accuracy for r in self.records if r.accuracy == r.accuracy]
-        return {
-            "rounds": len(self.records),
-            "sim_time": last.sim_time if last else 0.0,
-            "resource_used": self.resource_used,
-            "resource_wasted": self.resource_wasted,
-            "waste_fraction": (self.resource_wasted / self.resource_used
-                               if self.resource_used else 0.0),
-            "unique_participants": len(self.unique),
-            "final_accuracy": accs[-1] if accs else float("nan"),
-            "best_accuracy": max(accs) if accs else float("nan"),
-        }
+        return SimSummary(
+            rounds=len(self.records),
+            sim_time=last.sim_time if last else 0.0,
+            resource_used=self.resource_used,
+            resource_wasted=self.resource_wasted,
+            waste_fraction=(self.resource_wasted / self.resource_used
+                            if self.resource_used else 0.0),
+            unique_participants=len(self.unique),
+            final_accuracy=accs[-1] if accs else float("nan"),
+            best_accuracy=max(accs) if accs else float("nan"),
+        )

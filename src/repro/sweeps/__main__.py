@@ -1,0 +1,77 @@
+"""Sweep demo / smoke entry point.
+
+  PYTHONPATH=src python -m repro.sweeps            # demo grid
+  PYTHONPATH=src python -m repro.sweeps --smoke    # small CI grid
+
+Expands a policy x SAA x hardware grid, runs it batched, re-runs every cell
+serially to assert bit-identical metrics, prints the paper-style
+resource-to-accuracy table, and writes ``BENCH_sweeps.json`` (batched vs
+serial wall-clock) at the repo root.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from repro.sweeps import SweepSpec, assert_parity, run_batched, run_serial
+from repro.sweeps.report import savings_line, text_table
+
+
+def demo_spec(smoke: bool) -> SweepSpec:
+    if smoke:
+        return SweepSpec(
+            axes={"policy": ["random", "relay"], "saa": [False, True]},
+            base=dict(n_learners=60, rounds=8, eval_every=4, n_target=5,
+                      mapping="label_uniform"),
+            seeds=(0,))
+    return SweepSpec(
+        axes={"policy": ["random", "oort", "safa", "relay"],
+              "saa": [False, True],
+              "hardware": ["HS1", "HS3"]},
+        base=dict(n_learners=100, rounds=40, eval_every=10,
+                  mapping="label_uniform"),
+        seeds=(0, 1))
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="small CI grid")
+    ap.add_argument("--out", default=None, help="BENCH_sweeps.json path")
+    args = ap.parse_args(argv)
+
+    spec = demo_spec(args.smoke)
+    cells = spec.expand()
+    print(f"# sweep: {len(cells)} cells "
+          f"({' x '.join(f'{a}[{len(v)}]' for a, v in spec.axes.items())}"
+          f" x seeds[{len(spec.seeds)}])")
+
+    results, batched_wall = run_batched(cells)
+    serial_summaries, serial_wall = run_serial(cells)
+    assert_parity(results, serial_summaries)
+    speedup = serial_wall / max(batched_wall, 1e-9)
+    print(f"# batched {batched_wall:.2f}s vs serial {serial_wall:.2f}s "
+          f"({speedup:.1f}x), per-cell metrics bit-identical\n")
+    print(text_table(results))
+    print()
+    print(savings_line(results, {"policy": "relay", "saa": True},
+                       {"policy": "random", "saa": False}))
+
+    out = (pathlib.Path(args.out) if args.out else
+           pathlib.Path(__file__).resolve().parents[3] / "BENCH_sweeps.json")
+    payload = {
+        "bench": "sweeps",
+        "mode": "smoke" if args.smoke else "demo",
+        "cells": len(cells),
+        "batched_wall_s": round(batched_wall, 3),
+        "serial_wall_s": round(serial_wall, 3),
+        "speedup": round(speedup, 2),
+        "parity": True,
+        "results": results.to_json_dict(),
+    }
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"\n# wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

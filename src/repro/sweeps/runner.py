@@ -1,0 +1,297 @@
+"""Batched multi-simulation executor over the flat fast path.
+
+``SweepRunner`` drives S compatible simulations in lockstep: each round,
+every cell's host state machine (availability census, selection, batch
+sampling, arrival schedule — the Simulator's own ``_begin_round`` /
+``_collect_updates`` / ``_record_round`` methods, shared code with serial
+runs) executes per cell, while the device stages are batched across the
+sweep axis:
+
+  * cohort training packs every live cell's real participant rows into ONE
+    (R, steps, batch, dim) call with per-row parameters gathered from the
+    stacked (S, D) model tensor (``engine.flat_cohort_step``'s unit vmapped
+    over packed rows; R padded to a power-of-two bucket);
+  * aggregation stacks the cells' fresh+stale updates into (S, n, D) and
+    runs one vmapped SAA program (or the sweep-grid Pallas kernel);
+  * the server step and evaluation apply to all S cells in one call.
+
+Rows are independent under vmap and reductions are padding-invariant (zero
+rows contribute exact zeros), so every cell's metrics are **bit-identical**
+to a serial ``Simulator.run`` of the same config/seed — asserted by
+``tests/test_sweep_parity.py`` and re-checked by the benchmarks.
+
+Cells sharing a substrate key (benchmark, mapping, n_learners, seed,
+availability) also share one ``Substrate`` build — the dominant cost of a
+serial sweep — which is where most of the batched speedup comes from on
+small hosts; the packed device stages amortize dispatch and padding on top.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from collections import OrderedDict
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation as agg
+from repro.core.aggregation import unflatten_update, yogi_apply_flat
+from repro.sim import learner as ln
+from repro.sim.engine import Simulator, Substrate, substrate_key
+from repro.sweeps.grid import Cell
+from repro.sweeps.results import CellResult, SweepResults
+
+
+ROW_BLOCK = 128   # packed-row padding bucket granularity (see bucket_block)
+
+
+def compat_key(cfg) -> tuple:
+    """Cells sharing this key run in one lockstep batch: fields that fix the
+    compiled programs' shapes/static arguments or the lockstep cadence.
+    Everything else (selector, SAA, APT, setting, hardware, seeds, beta,
+    server_lr, and — on the jnp path — scaling_rule, which is a traced
+    per-cell ``lax.switch`` operand) varies freely within a batch; the
+    Pallas sweep kernel is compiled per rule, so kernel-backed cells split
+    by rule."""
+    return (cfg.benchmark, cfg.local_steps, cfg.local_batch, cfg.local_lr,
+            cfg.prox_mu, cfg.rounds, cfg.eval_every, cfg.aggregator,
+            cfg.use_agg_kernel,
+            cfg.scaling_rule if cfg.use_agg_kernel else None)
+
+
+@functools.lru_cache(maxsize=8)
+def _packed_train_fn(spec, lr, prox_mu):
+    """One compiled program trains every cell's cohort: rows (R,) index the
+    owning cell, whose flat parameters are gathered per row."""
+    step = functools.partial(ln.local_train_flat, spec=spec, lr=lr,
+                             prox_mu=prox_mu)
+
+    def f(flat_params, cell_rows, bx, by):
+        return jax.vmap(step)(flat_params[cell_rows], bx, by)
+
+    return jax.jit(f)
+
+
+@functools.lru_cache(maxsize=8)
+def _sweep_eval_shared_fn(spec):
+    """Batched eval, one test set shared by every cell (the common
+    shared-seed case): no per-cell gather or duplication at all."""
+    def ev(flat, x, y):
+        return ln.evaluate(unflatten_update(flat, spec), x, y)
+
+    return jax.jit(jax.vmap(ev, in_axes=(0, None, None)))
+
+
+@functools.lru_cache(maxsize=8)
+def _sweep_eval_fn(spec):
+    """Batched eval over mixed substrates; cells index into the batch's
+    *unique* test sets (cells sharing a substrate share one host copy)."""
+    def ev(flat, i, x_u, y_u):
+        return ln.evaluate(unflatten_update(flat, spec), x_u[i], y_u[i])
+
+    return jax.jit(jax.vmap(ev, in_axes=(0, 0, None, None)))
+
+
+@functools.lru_cache(maxsize=2)
+def _sweep_apply_fn():
+    """Batched FedAvg server step; cells without updates keep their exact
+    parameter bits (``where`` selects the untouched row)."""
+    return jax.jit(lambda fp, delta, lr, has: jnp.where(
+        has[:, None], fp + lr[:, None] * delta, fp))
+
+
+@functools.lru_cache(maxsize=2)
+def _sweep_yogi_fn():
+    def f(fp, delta, state, has):
+        new_p, new_s = jax.vmap(yogi_apply_flat)(fp, delta, state)
+        keep = lambda new, old: jnp.where(
+            has.reshape((-1,) + (1,) * (new.ndim - 1)), new, old)
+        return keep(new_p, fp), jax.tree.map(keep, new_s, state)
+
+    return jax.jit(f)
+
+
+@dataclasses.dataclass
+class SweepRunner:
+    """Expand cells (``SweepSpec.expand()``) and run them batched."""
+    cells: Sequence[Cell]
+    progress: bool = False
+    substrate_cache: Optional[dict] = None
+
+    def __post_init__(self):
+        for c in self.cells:
+            if not c.config.fast_path:
+                raise ValueError(f"cell {c.name}: the batched sweep executor "
+                                 "requires fast_path=True")
+        if self.substrate_cache is None:
+            self.substrate_cache = {}
+
+    def substrate(self, cfg) -> Substrate:
+        key = substrate_key(cfg)
+        if key not in self.substrate_cache:
+            self.substrate_cache[key] = Substrate.build(cfg)
+        return self.substrate_cache[key]
+
+    def run(self) -> SweepResults:
+        groups: "OrderedDict[tuple, list[int]]" = OrderedDict()
+        for i, c in enumerate(self.cells):
+            groups.setdefault(compat_key(c.config), []).append(i)
+        results: list[Optional[CellResult]] = [None] * len(self.cells)
+        for idxs in groups.values():
+            batch = [self.cells[i] for i in idxs]
+            accts = self._run_batch(batch)
+            for i, acct in zip(idxs, accts):
+                results[i] = CellResult(cell=self.cells[i],
+                                        summary=acct.summary(), acct=acct)
+        return SweepResults(results)
+
+    # ------------------------------------------------------------------
+    def _run_batch(self, batch: Sequence[Cell]):
+        cfgs = [c.config for c in batch]
+        cfg0 = cfgs[0]
+        sims = [Simulator(cfg, substrate=self.substrate(cfg)) for cfg in cfgs]
+        s_total = len(sims)
+        spec = sims[0]._flat_spec
+        d = len(np.asarray(sims[0].flat_params))
+        train = _packed_train_fn(spec, cfg0.local_lr, cfg0.prox_mu)
+        eval_fn = _sweep_eval_shared_fn(spec)
+        eval_fn_mixed = _sweep_eval_fn(spec)
+        flat_params = jnp.stack([sim.flat_params for sim in sims])
+        yogi = cfg0.aggregator == "yogi"
+        opt_state = (jax.tree.map(lambda *xs: jnp.stack(xs),
+                                  *[sim.flat_opt_state for sim in sims])
+                     if yogi else None)
+        datasets, te_idx = [], []
+        for sim in sims:
+            if not any(sim.data is ds for ds in datasets):
+                datasets.append(sim.data)
+            te_idx.append(next(i for i, ds in enumerate(datasets)
+                               if ds is sim.data))
+        x_te = np.stack([ds.x_test for ds in datasets])
+        y_te = np.stack([ds.y_test for ds in datasets])
+        te_idx = np.asarray(te_idx)
+        beta = np.array([cfg.beta for cfg in cfgs], np.float32)
+        lr_vec = np.array([cfg.server_lr for cfg in cfgs], np.float32)
+
+        for r in range(cfg0.rounds):
+            plans = [sim._begin_round(r) for sim in sims]
+            live = [i for i in range(s_total) if plans[i] is not None]
+            if not live:
+                continue
+
+            # --- batched cohort training (packed rows) ----------------
+            parts_x, parts_y, rows = [], [], []
+            for i in live:
+                p = plans[i]
+                parts_x.append(p.bx)
+                parts_y.append(p.by)
+                rows.extend([i] * p.k)
+            n_rows = len(rows)
+            r_b = agg.bucket_block(n_rows, ROW_BLOCK)
+            if r_b > n_rows:    # pad with copies of the first row (discarded)
+                pad_x = np.broadcast_to(parts_x[0][:1],
+                                        (r_b - n_rows,) + parts_x[0].shape[1:])
+                pad_y = np.broadcast_to(parts_y[0][:1],
+                                        (r_b - n_rows,) + parts_y[0].shape[1:])
+                parts_x.append(pad_x)
+                parts_y.append(pad_y)
+                rows.extend([live[0]] * (r_b - n_rows))
+            deltas, losses, l2s = train(flat_params, np.asarray(rows),
+                                        np.concatenate(parts_x),
+                                        np.concatenate(parts_y))
+            deltas = np.asarray(deltas)
+            losses = np.asarray(losses)
+            l2s = np.asarray(l2s)
+
+            # --- per-cell host logic + update collection --------------
+            tails = {}
+            cell_updates = [None] * s_total
+            off = 0
+            for i in live:
+                p = plans[i]
+                sl = slice(off, off + p.k)
+                off += p.k
+                t_end, fresh_up, stale_up, stale_taus = \
+                    sims[i]._collect_updates(r, p, deltas[sl], losses[sl],
+                                             l2s[sl])
+                tails[i] = (t_end, len(fresh_up), len(stale_up))
+                if fresh_up or stale_up:
+                    cell_updates[i] = (
+                        fresh_up + stale_up,
+                        [True] * len(fresh_up) + [False] * len(stale_up),
+                        [0] * len(fresh_up) + stale_taus)
+
+            # --- batched aggregation + server step --------------------
+            if any(c is not None for c in cell_updates):
+                u, fresh, tau, valid, has = agg.sweep_bucket_pad(cell_updates, d)
+                agg_out, _ = agg.sweep_aggregate_flat(
+                    u, fresh, tau, valid, beta,
+                    rule=[cfg.scaling_rule for cfg in cfgs],
+                    use_kernel=cfg0.use_agg_kernel)
+                if yogi:
+                    flat_params, opt_state = _sweep_yogi_fn()(
+                        flat_params, agg_out, opt_state, has)
+                else:
+                    flat_params = _sweep_apply_fn()(flat_params, agg_out,
+                                                    lr_vec, has)
+
+            # --- batched evaluation + per-cell bookkeeping ------------
+            acc = loss = None
+            if sims[0].eval_due(r):
+                a, lo = (eval_fn(flat_params, x_te[0], y_te[0])
+                         if len(x_te) == 1 else
+                         eval_fn_mixed(flat_params, te_idx, x_te, y_te))
+                acc, loss = np.asarray(a), np.asarray(lo)
+            for i in live:
+                t_end, n_fresh, n_stale = tails[i]
+                sims[i]._record_round(
+                    r, plans[i].t_now, t_end, len(plans[i].chosen), n_fresh,
+                    n_stale, acc_loss=(acc[i], loss[i]) if acc is not None else None,
+                    progress=self.progress)
+
+        accts = []
+        for i, sim in enumerate(sims):
+            sim.flat_params = flat_params[i]
+            if yogi:
+                sim.flat_opt_state = jax.tree.map(lambda x: x[i], opt_state)
+            accts.append(sim._finalize())
+        return accts
+
+
+# ---------------------------------------------------------------------------
+# Batched-vs-serial harness (shared by `python -m repro.sweeps` and
+# `benchmarks/bench_sweeps.py`)
+# ---------------------------------------------------------------------------
+
+
+def run_serial(cells: Sequence[Cell]):
+    """The baseline a sweep replaces: one full ``Simulator(cfg).run()`` per
+    cell (fresh substrate each).  Returns (summaries, wall seconds)."""
+    t0 = time.time()
+    summaries = [Simulator(c.config).run().summary() for c in cells]
+    return summaries, time.time() - t0
+
+
+def run_batched(cells: Sequence[Cell]):
+    """Returns (SweepResults, wall seconds) — wall includes substrate builds."""
+    t0 = time.time()
+    results = SweepRunner(cells).run()
+    return results, time.time() - t0
+
+
+def summaries_equal(a: dict, b: dict) -> bool:
+    """Exact summary comparison (NaN-tolerant for the accuracy fields)."""
+    if set(a) != set(b):
+        return False
+    return all(a[k] == b[k] or (a[k] != a[k] and b[k] != b[k]) for k in a)
+
+
+def assert_parity(results: SweepResults, serial_summaries) -> None:
+    for res, ser in zip(results, serial_summaries):
+        if not summaries_equal(dict(res.summary), dict(ser)):
+            raise AssertionError(
+                f"sweep parity violation at cell {res.cell.name}:\n"
+                f"  batched: {res.summary}\n  serial : {ser}")

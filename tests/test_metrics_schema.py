@@ -1,0 +1,47 @@
+"""Pin the fixed-key ``SimSummary`` schema that downstream layers (sweep
+results, benchmarks, examples) consume."""
+import math
+
+from repro.sim import SimConfig, Simulator
+from repro.sim.metrics import SUMMARY_KEYS, Accounting, RoundRecord, SimSummary
+
+EXPECTED_KEYS = ("rounds", "sim_time", "resource_used", "resource_wasted",
+                 "waste_fraction", "unique_participants", "final_accuracy",
+                 "best_accuracy")
+
+
+def test_summary_keys_are_pinned():
+    assert SUMMARY_KEYS == EXPECTED_KEYS
+    assert tuple(SimSummary.__annotations__) == EXPECTED_KEYS
+
+
+def test_empty_accounting_summary_schema():
+    s = Accounting().summary()
+    assert tuple(s) == EXPECTED_KEYS
+    assert s["rounds"] == 0 and s["resource_used"] == 0.0
+    assert s["waste_fraction"] == 0.0
+    assert math.isnan(s["final_accuracy"]) and math.isnan(s["best_accuracy"])
+
+
+def test_populated_summary_schema_and_types():
+    acct = Accounting()
+    acct.charge(100.0, wasted=False)
+    acct.charge(20.0, wasted=True)
+    acct.unique.update({1, 2, 3})
+    acct.records.append(RoundRecord(0, 55.0, 5, 4, 1, 120.0, 20.0, 3,
+                                    accuracy=0.5, loss=1.2))
+    s = acct.summary()
+    assert tuple(s) == EXPECTED_KEYS
+    assert isinstance(s["rounds"], int) and s["rounds"] == 1
+    assert isinstance(s["unique_participants"], int)
+    assert s["sim_time"] == 55.0
+    assert s["waste_fraction"] == 20.0 / 120.0
+    assert s["final_accuracy"] == 0.5 == s["best_accuracy"]
+
+
+def test_simulator_summary_conforms():
+    s = Simulator(SimConfig(n_learners=20, rounds=4, eval_every=2,
+                            n_target=3)).run().summary()
+    assert tuple(s) == EXPECTED_KEYS
+    for k in EXPECTED_KEYS:
+        assert isinstance(s[k], (int, float)), k

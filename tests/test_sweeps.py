@@ -1,0 +1,234 @@
+"""Unit tests for the sweep subsystem: grid expansion, batched aggregation
+(jnp + sweep-axis Pallas kernel), results/report layers, yogi/kernel cells."""
+import numpy as np
+import pytest
+
+from repro.core import aggregation as agg
+from repro.sim import SimConfig
+from repro.sweeps import Cell, SweepRunner, SweepSpec, axis_updates, compat_key
+from repro.sweeps.report import markdown_table, text_table
+from repro.sweeps.runner import summaries_equal
+
+# ---------------------------------------------------------------------------
+# Grid expansion
+# ---------------------------------------------------------------------------
+
+
+def test_grid_expansion_shared_seed_pairing():
+    spec = SweepSpec(axes={"policy": ["random", "relay"],
+                           "hardware": ["HS1", "HS3"]},
+                     base=dict(n_learners=20, rounds=4),
+                     seeds=(0, 7))
+    cells = spec.expand()
+    assert len(cells) == spec.size == 8
+    # every axis combination appears once per seed, with cfg.seed == seed
+    seeds = sorted({c.config.seed for c in cells})
+    assert seeds == [0, 7]
+    relay = [c for c in cells if c.coord("policy") == "relay"]
+    assert all(c.config.selector == "priority" and c.config.saa
+               and c.config.apt for c in relay)
+    hs3 = [c for c in cells if c.coord("hardware") == "HS3"]
+    assert all(c.config.hardware_scenario == "HS3" for c in hs3)
+    assert all(c.config.n_learners == 20 for c in cells)
+    assert len({c.name for c in cells}) == len(cells)
+
+
+def test_grid_rejects_axis_order_that_collapses_cells():
+    """A saa axis BEFORE a policy axis whose presets pin saa would produce
+    differently-labeled cells with identical configs — expand() refuses."""
+    bad = SweepSpec(axes={"saa": [False, True], "policy": ["safa", "relay"]},
+                    base=dict(n_learners=20, rounds=4))
+    with pytest.raises(ValueError, match="identical config"):
+        bad.expand()
+    # the reverse order is the supported toggle-within-preset pattern
+    good = SweepSpec(axes={"policy": ["safa", "relay"], "saa": [False, True]},
+                     base=dict(n_learners=20, rounds=4))
+    assert len(good.expand()) == 4
+
+
+def test_grid_axis_registry_and_raw_fields():
+    assert axis_updates("saa", True) == {"saa": True}
+    assert axis_updates("availability", "static") == \
+        {"dynamic_availability": False}
+    assert axis_updates("n_target", 25) == {"n_target": 25}  # raw field
+    with pytest.raises(KeyError):
+        axis_updates("not_an_axis", 1)
+    with pytest.raises(ValueError):
+        axis_updates("hardware", "HS9")
+
+
+def test_compat_key_splits_incompatible_cells():
+    a = SimConfig(rounds=10)
+    b = SimConfig(rounds=20)
+    c = SimConfig(rounds=10, selector="oort", saa=True, hardware_scenario="HS4")
+    assert compat_key(a) != compat_key(b)
+    assert compat_key(a) == compat_key(c)  # host-side knobs batch together
+
+
+# ---------------------------------------------------------------------------
+# Batched aggregation: jnp sweep path and the sweep-axis Pallas kernel
+# ---------------------------------------------------------------------------
+
+
+def _round_updates(rng, n, d):
+    rows = [rng.standard_normal(d).astype(np.float32) for _ in range(n)]
+    n_fresh = max(1, n // 2)
+    fresh = [True] * n_fresh + [False] * (n - n_fresh)
+    tau = [0] * n_fresh + list(rng.integers(1, 5, n - n_fresh))
+    return rows, fresh, tau
+
+
+@pytest.mark.parametrize("rule", ["equal", "dynsgd", "adasgd", "relay"])
+def test_sweep_aggregate_matches_per_cell_flat(rule):
+    """Each cell's slice of the batched aggregate is bit-identical to the
+    serial flat aggregation of the same rows (including a no-update cell)."""
+    rng = np.random.default_rng(0)
+    d = 257
+    cell_updates = [_round_updates(rng, n, d) for n in (3, 7, 5)]
+    cell_updates.insert(1, None)
+    u, fresh, tau, valid, has = agg.sweep_bucket_pad(cell_updates, d)
+    assert u.shape == (4, 8, d) and list(has) == [True, False, True, True]
+    beta = np.array([0.35, 0.35, 0.5, 0.2], np.float32)
+    out, w = agg.sweep_aggregate_flat(u, fresh, tau, valid, beta, rule=rule)
+    out, w = np.asarray(out), np.asarray(w)
+    np.testing.assert_array_equal(out[1], np.zeros(d))
+    for s, cell in enumerate(cell_updates):
+        if cell is None:
+            continue
+        rows, fr, ta = cell
+        ref, w_ref = agg.stale_synchronous_aggregate_flat(
+            np.stack(rows), fr, ta, rule=rule, beta=float(beta[s]))
+        np.testing.assert_array_equal(out[s], np.asarray(ref))
+        np.testing.assert_array_equal(w[s][:len(rows)], np.asarray(w_ref))
+
+
+def test_sweep_aggregate_mixed_rules_in_one_program():
+    """scaling_rule is a traced per-cell operand on the jnp path: a batch
+    mixing all four rules matches each rule's static serial aggregation
+    bit-for-bit; the kernel path refuses mixed rules."""
+    rng = np.random.default_rng(11)
+    d = 180
+    rules = ["equal", "dynsgd", "adasgd", "relay"]
+    cell_updates = [_round_updates(rng, 6, d) for _ in rules]
+    u, fresh, tau, valid, _ = agg.sweep_bucket_pad(cell_updates, d)
+    beta = np.full(4, 0.35, np.float32)
+    out, w = agg.sweep_aggregate_flat(u, fresh, tau, valid, beta, rule=rules)
+    for s, (rows, fr, ta) in enumerate(cell_updates):
+        ref, w_ref = agg.stale_synchronous_aggregate_flat(
+            np.stack(rows), fr, ta, rule=rules[s], beta=0.35)
+        np.testing.assert_array_equal(np.asarray(out)[s], np.asarray(ref))
+        np.testing.assert_array_equal(np.asarray(w)[s][:6], np.asarray(w_ref))
+    with pytest.raises(ValueError, match="mixed rules"):
+        agg.sweep_aggregate_flat(u, fresh, tau, valid, beta, rule=rules,
+                                 use_kernel=True)
+
+
+def test_runner_scaling_rule_axis_batches_together():
+    """A scaling_rule axis stays in ONE lockstep batch (per-cell rule switch)
+    and every cell still matches its serial run exactly."""
+    from repro.sim import Simulator
+    spec = SweepSpec(axes={"scaling_rule": ["equal", "dynsgd", "adasgd",
+                                            "relay"]},
+                     base={**SMALL, "saa": True, "setting": "DL",
+                           "deadline": 40.0}, seeds=(0,))
+    cells = spec.expand()
+    assert len({compat_key(c.config) for c in cells}) == 1
+    results = SweepRunner(cells).run()
+    for res in results:
+        serial = Simulator(res.cell.config).run().summary()
+        assert summaries_equal(dict(res.summary), dict(serial)), res.cell.name
+
+
+def test_sweep_kernel_matches_jnp_path():
+    rng = np.random.default_rng(3)
+    d = 300   # not lane-aligned: exercises the kernel wrapper's padding
+    cell_updates = [_round_updates(rng, n, d) for n in (4, 6)]
+    u, fresh, tau, valid, _ = agg.sweep_bucket_pad(cell_updates, d)
+    beta = np.array([0.35, 0.45], np.float32)
+    a_jnp, w_jnp = agg.sweep_aggregate_flat(u, fresh, tau, valid, beta,
+                                            rule="relay")
+    a_k, w_k = agg.sweep_aggregate_flat(u, fresh, tau, valid, beta,
+                                        rule="relay", use_kernel=True)
+    np.testing.assert_allclose(np.asarray(w_k), np.asarray(w_jnp),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(a_k), np.asarray(a_jnp),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_sweep_kernel_matches_per_cell_fused_kernel():
+    """The sweep-grid kernel row-for-row vs the existing per-cell kernel."""
+    from repro.kernels.staleness_agg import ops as agg_ops
+    rng = np.random.default_rng(5)
+    d = 2048
+    cell_updates = [_round_updates(rng, 5, d) for _ in range(3)]
+    u, fresh, tau, valid, _ = agg.sweep_bucket_pad(cell_updates, d)
+    a_sweep, w_sweep = agg_ops.sweep_staleness_aggregate(
+        u, fresh, tau, valid=valid, rule="relay", beta=0.35)
+    for s, (rows, fr, ta) in enumerate(cell_updates):
+        a_cell, w_cell = agg_ops.staleness_aggregate(
+            np.stack(rows), np.asarray(fr), np.asarray(ta), rule="relay",
+            beta=0.35)
+        np.testing.assert_allclose(np.asarray(a_sweep)[s], np.asarray(a_cell),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(w_sweep)[s][:5],
+                                   np.asarray(w_cell), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Runner: yogi and kernel-backed cells, results/report layers
+# ---------------------------------------------------------------------------
+
+SMALL = dict(n_learners=25, rounds=5, eval_every=5, n_target=4,
+             mapping="label_uniform")
+
+
+def _run_spec(spec):
+    return SweepRunner(spec.expand()).run()
+
+
+def test_runner_yogi_and_kernel_cells():
+    from repro.sim import Simulator
+    for extra in (dict(aggregator="yogi"), dict(use_agg_kernel=True)):
+        spec = SweepSpec(axes={"selector": ["random", "priority"]},
+                         base={**SMALL, **extra, "saa": True}, seeds=(0,))
+        results = _run_spec(spec)
+        for res in results:
+            serial = Simulator(res.cell.config).run().summary()
+            assert summaries_equal(dict(res.summary), dict(serial)), \
+                (extra, res.cell.name)
+
+
+def test_mixed_compat_groups_run_in_one_sweep():
+    """Cells with different rounds/aggregators split into separate lockstep
+    batches but come back as one result set in input order."""
+    cells = (SweepSpec(axes={"selector": ["random"]}, base=SMALL).expand()
+             + SweepSpec(axes={"selector": ["random"]},
+                         base={**SMALL, "rounds": 3}).expand())
+    results = SweepRunner(cells).run()
+    assert [r.cell.config.rounds for r in results] == [5, 3]
+    assert results[0].summary["rounds"] >= results[1].summary["rounds"]
+
+
+def test_results_soa_filter_and_reports():
+    spec = SweepSpec(axes={"policy": ["random", "relay"]},
+                     base=SMALL, seeds=(0, 1))
+    results = _run_spec(spec)
+    soa = results.soa()
+    assert len(soa["final_accuracy"]) == 4
+    assert set(soa["policy"]) == {"random", "relay"}
+    only_relay = results.filter(policy="relay")
+    assert len(only_relay) == 2
+    stats = results.group_stats()
+    assert all("policy" in row and "final_accuracy" in row for row in stats)
+    assert all(row["n"] == 2 for row in stats)
+
+    md = markdown_table(results)
+    txt = text_table(results)
+    assert "policy=relay" in md and "policy=random" in md
+    assert len(md.splitlines()) == 4  # header + separator + 2 policy rows
+    assert "accuracy" in txt.splitlines()[0]
+
+    js = results.to_json_dict()
+    assert len(js["cells"]) == 4
+    assert set(js["cells"][0]["summary"]) >= {"final_accuracy",
+                                              "resource_used"}
