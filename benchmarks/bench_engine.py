@@ -1,14 +1,26 @@
-"""Engine throughput benchmark: flat fast path vs the seed-legacy baseline.
+"""Engine throughput benchmark: fused device-resident pipeline vs the
+per-stage flat path vs the seed-legacy baseline.
 
 Measures rounds/sec of the full simulation loop at n_learners in {100, 500,
-1000} and the server-aggregation microbenchmark (µs per aggregate), then
-writes ``BENCH_engine.json`` at the repo root so the perf trajectory is
-tracked PR over PR.  Both paths run the same seeds; the harness asserts the
-simulated schedule/accounting metrics are identical before reporting speedup.
+1000} for three engine substrates:
+
+  fused  — single-dispatch device-resident round pipeline (default engine);
+  flat   — per-stage flat fast path (``fused_rounds=False``), the pre-fused
+           "current fast path" the pipeline is measured against;
+  legacy — per-learner scalar loops (``fast_path=False``), the seed baseline.
+
+All three run the same seeds; the harness asserts the simulated
+schedule/accounting metrics are identical across the three (and the fused
+path's full summary — accuracy included — bit-equal to the flat path's)
+before reporting speedups.  Also runs the server-aggregation
+microbenchmark (µs per aggregate) and writes ``BENCH_engine.json``.
 
 Usage:
-  PYTHONPATH=src python -m benchmarks.bench_engine           # full sweep
-  PYTHONPATH=src python -m benchmarks.bench_engine --smoke   # 10-round CI smoke
+  PYTHONPATH=src python -m benchmarks.bench_engine             # full sweep
+  PYTHONPATH=src python -m benchmarks.bench_engine --smoke     # 10-round CI smoke
+  PYTHONPATH=src python -m benchmarks.bench_engine --profile   # + pipeline
+      dispatch/transfer stats, with the round loop under
+      jax.transfer_guard("disallow") so implicit host transfers fail
 """
 from __future__ import annotations
 
@@ -26,17 +38,26 @@ from repro.sim import SimConfig, Simulator
 PARITY_KEYS = ("rounds", "sim_time", "resource_used", "resource_wasted",
                "unique_participants")
 
+MODES = {
+    "fused": {},
+    "flat": {"fused_rounds": False},
+    "legacy": {"fast_path": False},
+}
 
-def _run(n_learners: int, rounds: int, fast: bool) -> dict:
-    cfg = SimConfig(n_learners=n_learners, rounds=rounds, eval_every=10,
-                    seed=0, saa=True, setting="OC", fast_path=fast)
-    # warm the jit caches with a tiny run of the same shape family, so the
+
+def _cfg(n_learners: int, rounds: int, mode: str) -> SimConfig:
+    return SimConfig(n_learners=n_learners, rounds=rounds, eval_every=10,
+                     seed=0, saa=True, setting="OC", **MODES[mode])
+
+
+def _run(n_learners: int, rounds: int, mode: str, trials: int = 2) -> dict:
+    cfg = _cfg(n_learners, rounds, mode)
+    # warm the jit caches with a full run of the same shape family, so the
     # timed wall measures the round loop rather than one-time compiles;
-    # best-of-2 trials damps scheduler noise on shared machines
-    Simulator(dataclasses.replace(cfg, n_learners=min(n_learners, 100),
-                                  rounds=3, eval_every=2)).run()
+    # best-of-N trials damps scheduler noise on shared machines
+    Simulator(cfg).run()
     best = None
-    for _ in range(2):
+    for _ in range(trials):
         t0 = time.time()
         sim = Simulator(cfg)
         t_init = time.time() - t0
@@ -54,28 +75,53 @@ def _run(n_learners: int, rounds: int, fast: bool) -> dict:
     return best
 
 
-def bench_engine(sizes, rounds: int) -> list[dict]:
+def bench_engine(sizes, rounds: int, trials: int = 2) -> list[dict]:
     out = []
     for n in sizes:
-        fast = _run(n, rounds, fast=True)
-        legacy = _run(n, rounds, fast=False)
-        for k in PARITY_KEYS:
-            assert fast["summary"][k] == legacy["summary"][k], \
-                f"parity violation at n={n}: {k}"
+        res = {m: _run(n, rounds, m, trials) for m in MODES}
+        for m in ("flat", "legacy"):
+            for k in PARITY_KEYS:
+                assert res["fused"]["summary"][k] == res[m]["summary"][k], \
+                    f"parity violation at n={n} vs {m}: {k}"
+        # the fused pipeline must be bit-identical to the per-stage flat
+        # path on the full summary, accuracy included
+        assert res["fused"]["summary"] == res["flat"]["summary"], \
+            f"fused/flat summary divergence at n={n}"
+        rps = {m: res[m]["rounds_per_sec"] for m in MODES}
         row = {
             "n_learners": n,
             "rounds": rounds,
-            "fast": fast,
-            "legacy": legacy,
-            "speedup": round(fast["rounds_per_sec"]
-                             / max(legacy["rounds_per_sec"], 1e-9), 2),
+            **res,
+            "speedup_fused_vs_flat": round(rps["fused"]
+                                           / max(rps["flat"], 1e-9), 2),
+            "speedup_fused_vs_legacy": round(rps["fused"]
+                                             / max(rps["legacy"], 1e-9), 2),
             "parity": True,
         }
         out.append(row)
-        print(f"engine/n={n},{1e6 / max(fast['rounds_per_sec'], 1e-9):.0f},"
-              f"rounds_per_sec={fast['rounds_per_sec']};"
-              f"legacy={legacy['rounds_per_sec']};speedup={row['speedup']}x")
+        print(f"engine/n={n},{1e6 / max(rps['fused'], 1e-9):.0f},"
+              f"fused={rps['fused']};flat={rps['flat']};"
+              f"legacy={rps['legacy']};"
+              f"speedup_vs_flat={row['speedup_fused_vs_flat']}x")
     return out
+
+
+def profile_pipeline(n_learners: int, rounds: int) -> dict:
+    """Per-stage dispatch counts and host-transfer bytes of the fused round
+    loop, run under ``jax.transfer_guard("disallow")`` — an implicit host
+    transfer anywhere in the hot path raises instead of silently slowing
+    the loop down."""
+    from repro.sim.pipeline import RoundPipeline
+    cfg = _cfg(n_learners, rounds, "fused")
+    Simulator(cfg).run()                      # warm compiles outside the guard
+    pipe = RoundPipeline([Simulator(cfg)])
+    pipe.run(transfer_guard=True)
+    stats = pipe.stats.as_dict()
+    stats["transfer_guard"] = "disallow"
+    print(f"profile/n={n_learners},{stats['dispatches_per_round']},"
+          f"h2d_per_round={stats['h2d_bytes_per_round']}B;"
+          f"d2h_per_round={stats['d2h_bytes_per_round']}B")
+    return stats
 
 
 def bench_server_agg(n_updates: int = 16, d: int = 12963, iters: int = 30) -> dict:
@@ -108,14 +154,17 @@ def bench_server_agg(n_updates: int = 16, d: int = 12963, iters: int = 30) -> di
 
 def main() -> None:
     smoke = "--smoke" in sys.argv
+    profile = "--profile" in sys.argv
     sizes = (100,) if smoke else (100, 500, 1000)
     rounds = 10 if smoke else 50
     result = {
         "bench": "engine",
         "mode": "smoke" if smoke else "full",
-        "engine": bench_engine(sizes, rounds),
+        "engine": bench_engine(sizes, rounds, trials=2 if smoke else 3),
         "server_agg": bench_server_agg(iters=5 if smoke else 30),
     }
+    if profile:
+        result["pipeline_profile"] = profile_pipeline(sizes[-1], rounds)
     out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_engine.json"
     out.write_text(json.dumps(result, indent=2) + "\n")
     print(f"# wrote {out}", file=sys.stderr)

@@ -1,31 +1,50 @@
-"""Sweep throughput benchmark: batched executor vs serial Simulator.run.
+"""Sweep throughput benchmark: fused batched executor vs the per-stage
+batched executor vs serial Simulator.run, plus accuracy-target early stop.
 
-Times a policy x SAA x hardware x seed grid at S in {4, 16, 64} cells
-(n_learners=100) through the batched ``SweepRunner`` against the serial
-baseline (one full ``Simulator(cfg).run()`` per cell, fresh substrate each —
-what reproducing the grid costs without the subsystem).  Parity is asserted
-before any speedup is reported: every cell's summary must be bit-identical
-between the two executions.  Writes ``BENCH_sweeps.json`` at the repo root
-for the perf trajectory.
+Times a selector x SAA x hardware x seed grid at S in {4, 16, 64} cells
+(n_learners=100) through three executions:
+
+  batched (fused)    — the device-resident round pipeline (default);
+  batched (stages)   — the PR-2 per-stage batched executor
+                       (``fused_rounds=False`` cells), the baseline the
+                       pipeline replaces;
+  serial             — one full ``Simulator(cfg).run()`` per cell (fresh
+                       substrate each), what the grid costs with no sweep
+                       subsystem at all.
+
+Parity is asserted before any speedup is reported: every cell's summary
+must be bit-identical between the fused batched run and the serial run.
+An early-stop row then re-runs the largest grid with ``target_accuracy``
+set: cells that reach the target drop out of the lockstep batch (shrinking
+bucket-padded repacking), and the row records the wall-clock saving and
+per-cell parity against early-stopped serial runs.  Writes
+``BENCH_sweeps.json`` at the repo root for the perf trajectory.
 
 Usage:
-  PYTHONPATH=src python -m benchmarks.bench_sweeps           # full sweep
-  PYTHONPATH=src python -m benchmarks.bench_sweeps --smoke   # small CI smoke
+  PYTHONPATH=src python -m benchmarks.bench_sweeps             # full sweep
+  PYTHONPATH=src python -m benchmarks.bench_sweeps --smoke     # small CI smoke
+  PYTHONPATH=src python -m benchmarks.bench_sweeps --profile   # + pipeline
+      dispatch/transfer stats for the largest grid
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import pathlib
 import sys
+import time
 
-from repro.sweeps import (SweepSpec, assert_parity, run_batched, run_serial)
+from repro.sweeps import SweepSpec, SweepRunner, assert_parity, run_serial
 
 ROUNDS, EVAL_EVERY = 12, 6
 
 
-def grid(s_cells: int, n_learners: int, rounds: int) -> SweepSpec:
+def grid(s_cells: int, n_learners: int, rounds: int,
+         target_accuracy=None) -> SweepSpec:
     base = dict(n_learners=n_learners, rounds=rounds, eval_every=EVAL_EVERY,
                 mapping="label_uniform")
+    if target_accuracy is not None:
+        base["target_accuracy"] = target_accuracy
     axes = {
         4: {"selector": ["random", "priority"], "saa": [False, True]},
         16: {"selector": ["random", "oort", "priority", "safa"],
@@ -38,11 +57,17 @@ def grid(s_cells: int, n_learners: int, rounds: int) -> SweepSpec:
     return SweepSpec(axes=axes, base=base, seeds=seeds)
 
 
+def _stage_cells(cells):
+    return [dataclasses.replace(
+        c, config=dataclasses.replace(c.config, fused_rounds=False))
+        for c in cells]
+
+
 def _best_of(fn, trials: int = 2):
     """Best-of-N wall (bench_engine's protocol): the first trial warms the
-    jit caches for this grid's cohort/packed-row buckets, the best trial
-    measures the round loops + substrate builds rather than one-time
-    compiles.  Both executors get the same treatment."""
+    jit caches for this grid's padding buckets, the best trial measures the
+    round loops + substrate builds rather than one-time compiles.  Every
+    executor gets the same treatment."""
     best_out, best_wall = None, float("inf")
     for _ in range(trials):
         out, wall = fn()
@@ -51,41 +76,93 @@ def _best_of(fn, trials: int = 2):
     return best_out, best_wall
 
 
+def _run_batched(cells):
+    t0 = time.time()
+    runner = SweepRunner(cells)
+    results = runner.run()
+    return (results, runner.last_stats), time.time() - t0
+
+
 def bench(sizes, n_learners: int, rounds: int) -> list[dict]:
     out = []
     for s_cells in sizes:
         cells = grid(s_cells, n_learners, rounds).expand()
         assert len(cells) == s_cells
-        results, batched_wall = _best_of(lambda: run_batched(cells))
+        (results, stats), fused_wall = _best_of(lambda: _run_batched(cells))
+        (_, _), stage_wall = _best_of(
+            lambda: _run_batched(_stage_cells(cells)))
         serial_summaries, serial_wall = _best_of(lambda: run_serial(cells))
         assert_parity(results, serial_summaries)
         row = {
             "s_cells": s_cells,
             "n_learners": n_learners,
             "rounds": rounds,
-            "batched_wall_s": round(batched_wall, 3),
+            "batched_wall_s": round(fused_wall, 3),
+            "stages_wall_s": round(stage_wall, 3),
             "serial_wall_s": round(serial_wall, 3),
-            "speedup": round(serial_wall / max(batched_wall, 1e-9), 2),
-            "cells_per_sec_batched": round(s_cells / max(batched_wall, 1e-9), 2),
+            "speedup": round(serial_wall / max(fused_wall, 1e-9), 2),
+            "speedup_vs_stages": round(stage_wall / max(fused_wall, 1e-9), 2),
+            "cells_per_sec_batched": round(s_cells / max(fused_wall, 1e-9), 2),
+            "pipeline_stats": stats,
             "parity": True,
         }
         out.append(row)
-        print(f"sweeps/S={s_cells},{1e3 * batched_wall / s_cells:.0f},"
-              f"batched={batched_wall:.2f}s;serial={serial_wall:.2f}s;"
-              f"speedup={row['speedup']}x")
+        print(f"sweeps/S={s_cells},{1e3 * fused_wall / s_cells:.0f},"
+              f"batched={fused_wall:.2f}s;stages={stage_wall:.2f}s;"
+              f"serial={serial_wall:.2f}s;speedup={row['speedup']}x")
     return out
+
+
+def bench_early_stop(s_cells: int, n_learners: int, rounds: int,
+                     target: float = 0.2) -> dict:
+    """Accuracy-target early stop: finished cells leave the lockstep batch,
+    so the sweep's cost tracks live cells.  Reports the wall saving vs the
+    same grid running every round, with per-cell parity against serial
+    early-stopped runs asserted first."""
+    full_cells = grid(s_cells, n_learners, rounds).expand()
+    es_cells = grid(s_cells, n_learners, rounds, target_accuracy=target).expand()
+    (_, _), full_wall = _best_of(lambda: _run_batched(full_cells))
+    (results, _), es_wall = _best_of(lambda: _run_batched(es_cells))
+    serial_summaries, _ = run_serial(es_cells)
+    assert_parity(results, serial_summaries)
+    stopped = sum(1 for r in results if r.summary["stopped_early"])
+    rounds_run = sum(r.summary["rounds"] for r in results)
+    row = {
+        "s_cells": s_cells,
+        "n_learners": n_learners,
+        "rounds": rounds,
+        "target_accuracy": target,
+        "early_stop": True,
+        "batched_wall_s": round(es_wall, 3),
+        "full_run_wall_s": round(full_wall, 3),
+        "speedup_vs_full": round(full_wall / max(es_wall, 1e-9), 2),
+        "cells_stopped_early": stopped,
+        "rounds_run_total": rounds_run,
+        "rounds_full_total": s_cells * rounds,
+        "parity": True,
+    }
+    print(f"sweeps_early_stop/S={s_cells},{1e3 * es_wall / s_cells:.0f},"
+          f"wall={es_wall:.2f}s;full={full_wall:.2f}s;"
+          f"speedup={row['speedup_vs_full']}x;stopped={stopped}/{s_cells}")
+    return row
 
 
 def main() -> None:
     smoke = "--smoke" in sys.argv
+    profile = "--profile" in sys.argv
     sizes = (4,) if smoke else (4, 16, 64)
     n_learners = 60 if smoke else 100
     rounds = 6 if smoke else ROUNDS
+    rows = bench(sizes, n_learners, rounds)
     result = {
         "bench": "sweeps",
         "mode": "smoke" if smoke else "full",
-        "sweep": bench(sizes, n_learners, rounds),
+        "sweep": rows,
+        "early_stop": [bench_early_stop(sizes[-1], n_learners, rounds,
+                                        target=0.1 if smoke else 0.2)],
     }
+    if profile:
+        result["pipeline_profile"] = rows[-1]["pipeline_stats"]
     out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_sweeps.json"
     out.write_text(json.dumps(result, indent=2) + "\n")
     print(f"# wrote {out}", file=sys.stderr)

@@ -86,6 +86,12 @@ def _waa_by_id(stacked, fresh, tau, valid, beta, rule_id):
     return aggregate_updates(stacked, w), w
 
 
+# the per-cell weights+aggregate unit the device-resident round pipeline
+# vmaps inside its fused round program (repro.sim.pipeline); same code the
+# batched sweep program below runs, so both paths share one set of numerics
+weights_and_aggregate_by_id = _waa_by_id
+
+
 @jax.jit
 def _sweep_weights_and_aggregate(stacked, fresh, tau, valid, beta, rule_id):
     """vmap of the per-round weights+aggregate program over a leading sweep

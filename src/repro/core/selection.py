@@ -33,9 +33,21 @@ class LearnerView:
 
 class Selector:
     name = "base"
+    # Selectors that ignore availability forecasts / utilities set this False
+    # and implement ``select_ids``; the engine then skips building LearnerViews
+    # (and the forecaster window queries behind them) on the hot path.  The
+    # queries are pure reads, so skipping them never changes forecaster state
+    # or the RNG stream — selection is bit-identical either way.
+    needs_views = True
 
     def select(self, round_idx: int, checked_in: Sequence[LearnerView],
                n_target: int, rng: np.random.Generator) -> List[int]:
+        raise NotImplementedError
+
+    def select_ids(self, round_idx: int, ids, n_target: int,
+                   rng: np.random.Generator) -> List[int]:
+        """View-free selection for ``needs_views = False`` selectors; ``ids``
+        is the checked-in learner ids in ascending order."""
         raise NotImplementedError
 
     def update_feedback(self, learner_id: int, *, stat_util: float = None,
@@ -45,17 +57,27 @@ class Selector:
 
 class RandomSelector(Selector):
     name = "random"
+    needs_views = False
 
-    def select(self, round_idx, checked_in, n_target, rng):
-        ids = [v.learner_id for v in checked_in]
+    def select_ids(self, round_idx, ids, n_target, rng):
         if len(ids) <= n_target:
             return list(ids)
+        # rng.choice consumes the same stream for a list or an array of the
+        # same length, so the two entry points draw identical cohorts
         return list(rng.choice(ids, size=n_target, replace=False))
+
+    def select(self, round_idx, checked_in, n_target, rng):
+        return self.select_ids(round_idx, [v.learner_id for v in checked_in],
+                               n_target, rng)
 
 
 class SafaSelector(Selector):
     """SAFA flips selection: every available learner trains every round."""
     name = "safa"
+    needs_views = False
+
+    def select_ids(self, round_idx, ids, n_target, rng):
+        return list(ids)
 
     def select(self, round_idx, checked_in, n_target, rng):
         return [v.learner_id for v in checked_in]

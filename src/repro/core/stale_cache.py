@@ -1,0 +1,134 @@
+"""Device-resident stale-update cache (SAA straggler store).
+
+The host-side cache in ``repro.sim.engine`` used to hold each straggler's
+flat ``(D,)`` delta as a numpy copy, forcing a device->host copy when the
+update was cached and a host->device copy when it landed.  Here the rows
+stay on device: a ``(capacity + 1, D)`` fp32 tensor whose last row is a
+scratch slot that in-program scatters can target for non-straggler rows,
+plus host-side slot accounting (free list + insertion order).  The round
+pipeline scatters a round's straggler deltas into their slots and gathers
+landing slots straight into the aggregation operand — the delta never
+leaves the device.
+
+Slot discipline:
+
+- ``alloc(k)`` reserves ``k`` slots.  With ``grow=True`` (the engine's
+  setting) a full cache doubles its capacity — parity with the unbounded
+  host-list cache is preserved because nothing is ever dropped.  With
+  ``grow=False`` the oldest occupied slots are evicted in insertion order
+  (bounded-memory deployments); the evicted slot ids are returned so the
+  caller can drop its matching entries.
+- ``free(slots)`` releases landed/expired slots for reuse.  Freed slots are
+  handed out LIFO; the policy only has to be deterministic — slot choice
+  never affects values, because a slot's row is always scatter-written in
+  the round its entry is created, before any gather reads it.
+- ``valid_mask()`` exposes the occupancy mask over data slots (the scratch
+  row is never valid).
+
+Rows are exact: ``put``/``gather`` (the host-facing IO used by tests and
+by callers that keep a host cache) move bits unchanged, and the pipeline's
+in-program scatter/gather are pure data movement — so aggregation over
+cached rows is bit-identical to aggregation over host copies of the same
+updates.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class CacheOverflow(RuntimeError):
+    """alloc() on a full, non-growing cache with nothing to evict."""
+
+
+class DeviceStaleCache:
+    def __init__(self, d: int, capacity: int = 64, grow: bool = True):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.d = int(d)
+        self.capacity = int(capacity)
+        self.grow = grow
+        self.rows = jnp.zeros((self.capacity + 1, self.d), jnp.float32)
+        # pop() hands out ascending slot ids for a fresh cache
+        self._free = list(range(self.capacity - 1, -1, -1))
+        self._order: "OrderedDict[int, int]" = OrderedDict()   # slot -> seq
+        self._seq = 0
+        self.grow_events = 0
+
+    # ------------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._order)
+
+    @property
+    def trash_slot(self) -> int:
+        """The scratch row: scatters for rows that cache nothing land here."""
+        return self.capacity
+
+    def occupied(self) -> list:
+        """Occupied slot ids in insertion (= eviction) order."""
+        return list(self._order)
+
+    def valid_mask(self) -> np.ndarray:
+        m = np.zeros(self.capacity, bool)
+        occ = list(self._order)
+        if occ:
+            m[occ] = True
+        return m
+
+    # ------------------------------------------------------------------
+    def _grow(self):
+        old_c = self.capacity
+        # the old scratch row (index old_c) becomes data slot old_c; its
+        # content is irrelevant because every allocated slot is written
+        # before it is read
+        self.rows = jnp.concatenate(
+            [self.rows, jnp.zeros((old_c, self.d), self.rows.dtype)])
+        self.capacity = 2 * old_c
+        # existing free slots are consumed before the newly minted ones
+        self._free = list(range(self.capacity - 1, old_c - 1, -1)) + self._free
+        self.grow_events += 1
+
+    def alloc(self, k: int) -> tuple:
+        """Reserve ``k`` slots; returns (slots, evicted_slots).
+
+        ``slots`` are in allocation order.  ``evicted_slots`` is non-empty
+        only for a full ``grow=False`` cache: the oldest occupied slots, in
+        insertion order, whose entries the caller must drop.
+        """
+        evicted = []
+        while len(self._free) < k:
+            if self.grow:
+                self._grow()
+            elif self._order:
+                old, _ = self._order.popitem(last=False)
+                evicted.append(old)
+                self._free.append(old)
+            else:
+                raise CacheOverflow(
+                    f"need {k} slots, capacity {self.capacity}, nothing to evict")
+        slots = []
+        for _ in range(k):
+            s = self._free.pop()
+            self._order[s] = self._seq
+            self._seq += 1
+            slots.append(s)
+        return slots, evicted
+
+    def free(self, slots) -> None:
+        for s in slots:
+            del self._order[s]          # KeyError on double-free: a real bug
+            self._free.append(s)
+
+    # ------------------------------------------------------------------
+    # Host-facing row IO (tests, host-cache interop; the round pipeline
+    # scatters/gathers in-program instead)
+    # ------------------------------------------------------------------
+    def put(self, slots, rows) -> None:
+        idx = np.asarray(slots, np.int32)
+        self.rows = self.rows.at[idx].set(jnp.asarray(rows, jnp.float32))
+
+    def gather(self, slots) -> np.ndarray:
+        idx = np.asarray(slots, np.int32)
+        return np.asarray(self.rows[idx])

@@ -21,7 +21,8 @@ from repro.core.aggregation import bucket_pad
 from repro.core.staleness import EPS, SCALING_RULES
 from repro.kernels.staleness_agg.staleness_agg import (
     D_BLK, deviation_partials, fused_staleness_aggregate,
-    fused_staleness_apply, sweep_fused_staleness_aggregate, weighted_aggregate)
+    fused_staleness_apply, sweep_fused_staleness_aggregate,
+    sweep_fused_staleness_apply, weighted_aggregate)
 
 
 def staleness_aggregate(updates, fresh, tau, *, rule: str = "relay",
@@ -71,6 +72,33 @@ def sweep_staleness_aggregate(updates, fresh, tau, *, valid=None,
         u, np.asarray(fresh), np.asarray(tau), beta_vec, np.asarray(valid),
         rule=rule, interpret=interpret)
     return agg[:, :d], w
+
+
+def sweep_staleness_apply(params, updates, fresh, tau, *, valid=None,
+                          rule: str = "relay", beta=0.35, server_lr=1.0,
+                          interpret: bool | None = None):
+    """Batched fused server step over a sweep axis: params (S, any-D) fp32,
+    updates (S, n, any-D); ``beta``/``server_lr`` scalars or (S,) vectors.
+
+    Returns (new_params (S, D), weights (S, n)) from ONE launch over a
+    (S, phase, D-block) grid with the params buffer aliased input->output —
+    the sweep-axis extension of ``staleness_apply``.
+    """
+    s, n, d = np.shape(updates)
+    if valid is None:
+        valid = np.ones((s, n), bool)
+    dp = d + ((-d) % D_BLK)
+    u = np.zeros((s, n, dp), np.float32)
+    u[:, :, :d] = np.asarray(updates)
+    p = np.zeros((s, dp), np.float32)
+    p[:, :d] = np.asarray(params)
+    scal = np.stack([np.broadcast_to(np.asarray(beta, np.float32), (s,)),
+                     np.broadcast_to(np.asarray(server_lr, np.float32), (s,))],
+                    axis=1)
+    new_p, w = sweep_fused_staleness_apply(
+        p, u, np.asarray(fresh), np.asarray(tau), np.asarray(valid), scal,
+        rule=rule, interpret=interpret)
+    return new_p[:, :d], w
 
 
 def staleness_apply(params, updates, fresh, tau, *, rule: str = "relay",

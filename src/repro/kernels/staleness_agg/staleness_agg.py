@@ -220,6 +220,100 @@ def _make_sweep_fused_kernel(rule: str):
     return kernel
 
 
+def _make_sweep_fused_apply_kernel(rule: str):
+    """Sweep-axis fused SAA **server step**: grid (S, phase, D blocks), the
+    params buffer aliased input->output.  Phase 0 accumulates each cell's
+    deviation partials (copying params through to the aliased output so the
+    revisited blocks stay defined); phase 1 computes the per-cell Eq. 2
+    weights in-kernel and emits ``params + lr_s * (w_s @ U_s)`` — the whole
+    sweep's aggregation *and* batched server apply in one launch."""
+    def kernel(params_ref, u_ref, fresh_ref, tau_ref, valid_ref, scal_ref,
+               out_ref, num_ref, den_ref, w_ref):
+        p = pl.program_id(1)      # phase: 0 = partials, 1 = apply
+        i = pl.program_id(2)      # D block
+        fresh = fresh_ref[0]      # (n, 1) fp32 {0, 1}
+
+        @pl.when((p == 0) & (i == 0))
+        def _init():
+            num_ref[...] = jnp.zeros_like(num_ref)
+            den_ref[...] = jnp.zeros_like(den_ref)
+            w_ref[...] = jnp.zeros_like(w_ref)
+
+        @pl.when(p == 0)
+        def _partials():
+            num, den = _deviation_increments(u_ref[0], fresh)
+            num_ref[0] += num
+            den_ref[0] += den
+            # copy-through: the output aliases params, so phase 0's
+            # write-back must preserve the values phase 1 re-reads
+            out_ref[...] = params_ref[...]
+
+        @pl.when((p == 1) & (i == 0))
+        def _weights():
+            w = _compute_weights(rule, fresh, tau_ref[0], scal_ref[0, 0],
+                                 num_ref[0], den_ref[0], valid_ref[0])
+            w_ref[...] = w.reshape(w_ref.shape)
+
+        @pl.when(p == 1)
+        def _apply():
+            agg = jnp.dot(w_ref[0], u_ref[0],
+                          preferred_element_type=jnp.float32)
+            out_ref[...] = params_ref[...] + scal_ref[0, 1] * agg
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("rule", "interpret"))
+def sweep_fused_staleness_apply(params, updates, fresh, tau, valid, scal, *,
+                                rule="relay", interpret=None):
+    """Batched fused server step: new_params[s] = params[s] + lr_s * (w_s @ U_s).
+
+    params: (S, D) fp32, D % D_BLK == 0, aliased input->output; updates:
+    (S, n, D) fp32; fresh/valid: (S, n) bool; tau: (S, n) int; scal: (S, 2)
+    fp32 rows ``(beta_s, server_lr_s)``.  One kernel launch computes every
+    cell's deviation partials, in-kernel Eq. 2 weights and aggregate, and
+    applies the aggregate to the cell's parameter row in place.  Returns
+    (new_params (S, D), weights (S, n)); all-invalid cells get zero weights
+    and therefore keep their parameter bits.
+    """
+    interpret = _resolve_interpret(interpret)
+    s, n, d = updates.shape
+    assert d % D_BLK == 0 and params.shape == (s, d)
+    grid = (s, 2, d // D_BLK)
+    new_params, num, den, w = pl.pallas_call(
+        _make_sweep_fused_apply_kernel(rule),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, D_BLK), lambda s_, p, i: (s_, i)),
+            pl.BlockSpec((1, n, D_BLK), lambda s_, p, i: (s_, 0, i)),
+            pl.BlockSpec((1, n, 1), lambda s_, p, i: (s_, 0, 0)),
+            pl.BlockSpec((1, n, 1), lambda s_, p, i: (s_, 0, 0)),
+            pl.BlockSpec((1, n, 1), lambda s_, p, i: (s_, 0, 0)),
+            pl.BlockSpec((1, 2), lambda s_, p, i: (s_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, D_BLK), lambda s_, p, i: (s_, i)),
+            pl.BlockSpec((1, n, 1), lambda s_, p, i: (s_, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda s_, p, i: (s_, 0, 0)),
+            pl.BlockSpec((1, 1, n), lambda s_, p, i: (s_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, d), jnp.float32),
+            jax.ShapeDtypeStruct((s, n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((s, 1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((s, 1, n), jnp.float32),
+        ],
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(params.astype(jnp.float32),
+      updates.astype(jnp.float32),
+      fresh.astype(jnp.float32)[..., None],
+      tau.astype(jnp.float32)[..., None],
+      valid.astype(jnp.float32)[..., None],
+      scal.astype(jnp.float32))
+    return new_params, w[:, 0]
+
+
 @functools.partial(jax.jit, static_argnames=("rule", "interpret"))
 def sweep_fused_staleness_aggregate(updates, fresh, tau, beta, valid, *,
                                     rule="relay", interpret=None):

@@ -10,27 +10,44 @@ Simulated time is decoupled from wall-clock: device durations come from the
 heterogeneity profiles, availability from the trace substrate, and every
 round's cohort trains in one vmapped JAX call.
 
-Two substrates, same semantics (parity-tested in tests/test_fastpath_parity.py):
+Three substrates, same semantics (parity-tested in
+tests/test_fastpath_parity.py and tests/test_pipeline_parity.py):
 
-  fast path (default) — the global model lives as a flat (D,) fp32 vector;
-  participant updates are flat (n, D) fp32 rows from the compiled cohort
-  program (``flat_cohort_step``, a pure function of the flat vector that is
-  also vmappable along a leading sweep axis) through the stale cache to
-  aggregation and the flat server step; availability queries go through the
-  struct-of-arrays ``TraceBank``/``ForecasterBank`` with batched
-  searchsorted/bincount math instead of per-learner Python objects;
+  fused device-resident pipeline (default) — the whole device side of a
+  round (cohort training, stale-cache scatter, SAA weights + aggregation,
+  server apply) runs as ONE jitted dispatch per round with donated
+  parameter/cache buffers (``repro.sim.pipeline``); straggler updates live
+  in a device-resident slot cache (``repro.core.stale_cache``), local
+  batches are gathered in-program from a device copy of the dataset, and
+  the only per-round device->host traffic is Oort's stat-utility vector
+  (when an Oort selector is present) plus accuracy/loss every
+  ``eval_every`` rounds;
+
+  flat fast path (``fused_rounds=False``) — the per-stage flat path: flat
+  (n, D) fp32 update rows from the compiled cohort program
+  (``flat_cohort_step``) through a host-side stale cache to the compiled
+  aggregation and flat server step, with one device->host delta copy per
+  round; kept as the stage-by-stage parity baseline;
 
   legacy path (``fast_path=False``) — the original per-learner scalar loops
-  and pytree shuffling, kept as the parity/benchmark baseline.
+  and pytree shuffling, kept as the seed-parity/benchmark baseline.
+
+All paths share the struct-of-arrays ``TraceBank``/``ForecasterBank``
+availability substrate (fast paths) and the same host-side round logic.
 
 The round loop is decomposed into ``_begin_round`` (host: availability,
-selection, batch sampling), ``_train`` (device), ``_collect_updates`` (host:
-arrivals, fresh/stale split), ``_aggregate``/``_apply_update`` (device) and
-``_record_round`` (host bookkeeping + optional eval).  ``run()`` chains them
-for one simulation; ``repro.sweeps.runner`` drives many Simulators through
-the same methods in lockstep, batching the device stages across the sweep
-axis — the host logic is shared code, so batched cells are bit-identical to
-serial runs of the same config/seed.
+selection, batch sampling), ``_schedule_round`` (host: arrival schedule,
+fresh/straggler split, stale-cache landings — all decidable *before*
+training, which is what lets the fused pipeline dispatch one program per
+round), the device stage(s), and ``_record_round`` (host bookkeeping +
+optional eval).  ``run()`` chains them for one simulation;
+``repro.sweeps.runner`` drives many Simulators through the same methods in
+lockstep, batching the device stages across the sweep axis — the host logic
+is shared code, so batched cells are bit-identical to serial runs of the
+same config/seed.  ``target_accuracy`` arms accuracy-target early stop:
+the run ends at the first evaluated round whose accuracy reaches the
+target (checked only on ``eval_every`` boundaries, so serial, flat and
+batched executions stop at the identical round).
 
 Seed-determined world state (dataset, shards, device profiles, availability
 traces, warmed forecasters, initial model) is factored into ``Substrate`` so
@@ -145,6 +162,9 @@ class SimConfig:
     seed: int = 0
     use_agg_kernel: bool = False      # route aggregation through the Pallas kernel
     fast_path: bool = True            # flat (n, D) updates + TraceBank/ForecasterBank
+    fused_rounds: bool = True         # single-dispatch device-resident round pipeline
+    target_accuracy: Optional[float] = None   # accuracy-target early stop (eval rounds)
+    stale_cache_capacity: int = 64    # initial device stale-cache slots (grows 2x)
 
 
 def substrate_key(cfg: SimConfig) -> tuple:
@@ -218,22 +238,46 @@ class _InFlight:
     origin_round: int
     arrival: float
     duration: float
-    delta: object                     # flat (D,) fp32 row (fast) or pytree (legacy)
-    stat_util: float
+    delta: object                     # device-cache slot id (fused), flat (D,)
+    stat_util: float                  # fp32 row (flat) or pytree (legacy)
 
 
 @dataclasses.dataclass
 class RoundPlan:
     """Host-side output of ``_begin_round``: everything the device stage
-    needs for one round's cohort training."""
+    needs for one round's cohort training.  The fused pipeline carries only
+    sample *indices* (``bidx``) and gathers the batches in-program; the
+    per-stage paths materialize ``bx``/``by`` on host.  Both consume the
+    identical RNG draws, so the sampled batches match bit-for-bit."""
     t_now: float
     chosen: list
     n_t: int
     k: int                            # cohort size
-    bx: np.ndarray                    # (k, steps, batch, dim) local batches
-    by: np.ndarray                    # (k, steps, batch)
+    bx: Optional[np.ndarray]          # (k, steps, batch, dim) local batches
+    by: Optional[np.ndarray]          # (k, steps, batch)
     durs: np.ndarray                  # (k,)
     drop_at: np.ndarray               # (k,) mid-round dropout offsets (inf = none)
+    bidx: Optional[np.ndarray] = None  # (k, steps*batch) sample indices (fused)
+
+
+@dataclasses.dataclass
+class RoundSchedule:
+    """Host-side round outcome, decided *before* the device dispatch.
+
+    Everything here depends only on the plan (durations, dropouts, arrival
+    order) and the stale-cache metadata — never on the update values — so
+    the fused pipeline can build its gather/scatter index arrays and launch
+    one program for train + cache + aggregate + apply.  Entries removed from
+    ``Simulator.stale_cache`` (``landing``/``expired``) are returned so the
+    caller can free their device slots or collect their host rows."""
+    t_end: float
+    fresh_rows: list                  # plan-row indices aggregated fresh, arrival order
+    new_stale: list                   # (row, lid, arrival, duration) entering the cache
+    landing: list                     # _InFlight entries landing this round, cache order
+    landing_taus: list                # their staleness (rounds)
+    expired: list                     # over-threshold entries (removed, marked wasted)
+    feedback: list                    # (lid, row, duration) selector feedback, arrival order
+    slots: list = dataclasses.field(default_factory=list)  # set by the pipeline
 
 
 class Simulator:
@@ -352,8 +396,13 @@ class Simulator:
             n_t = self.apt.target(rts)
         n_sel = (int(np.ceil(n_t * cfg.overcommit))
                  if cfg.setting == "OC" else n_t)
-        views = self._views(t_now, available)
-        chosen = self.selector.select(r, views, n_sel, self.rng)
+        if self.selector.needs_views:
+            views = self._views(t_now, available)
+            chosen = self.selector.select(r, views, n_sel, self.rng)
+        else:
+            # view-free selectors (random, safa) skip the forecaster window
+            # queries — pure reads, so state and RNG streams are untouched
+            chosen = self.selector.select_ids(r, available, n_sel, self.rng)
         if not chosen:
             self._t_now += 60.0
             return None
@@ -361,15 +410,23 @@ class Simulator:
 
     def _build_plan(self, chosen, t_now, n_t) -> RoundPlan:
         cfg = self.cfg
-        xs, ys = [], []
+        fused = cfg.fast_path and cfg.fused_rounds
+        takes, xs, ys = [], [], []
         for lid in chosen:
-            bx, by = ln.sample_local_batches(self.data.shards[lid],
-                                             self.data.x_train, self.data.y_train,
-                                             cfg.local_steps, cfg.local_batch, self.rng)
-            xs.append(bx)
-            ys.append(by)
+            if fused:
+                # indices only; the pipeline gathers the rows in-program
+                takes.append(ln.sample_batch_indices(
+                    self.data.shards[lid], cfg.local_steps, cfg.local_batch,
+                    self.rng))
+            else:
+                bx, by = ln.sample_local_batches(
+                    self.data.shards[lid], self.data.x_train,
+                    self.data.y_train, cfg.local_steps, cfg.local_batch,
+                    self.rng)
+                xs.append(bx)
+                ys.append(by)
         durs = self.durations[np.asarray(chosen)]
-        k = len(xs)
+        k = len(chosen)
         if cfg.fast_path:
             nus = self.trace_bank.next_unavailable_after_batch(chosen, t_now)
             rel = nus - t_now
@@ -380,6 +437,9 @@ class Simulator:
                 nu = self.traces[lid].next_unavailable_after(t_now)
                 drop_at.append(nu - t_now if nu - t_now < d else np.inf)
             drop_at = np.array(drop_at)
+        if fused:
+            return RoundPlan(t_now, list(chosen), n_t, k, None, None, durs,
+                             drop_at, bidx=np.asarray(takes, np.int32))
         return RoundPlan(t_now, list(chosen), n_t, k, np.stack(xs),
                          np.stack(ys), durs, drop_at)
 
@@ -407,10 +467,14 @@ class Simulator:
             self.params, plan.bx, plan.by, cfg.local_lr, cfg.prox_mu)
         return deltas, np.asarray(losses), np.asarray(l2s)
 
-    def _collect_updates(self, r: int, plan: RoundPlan, deltas, losses, l2s):
-        """Host post-step: arrival schedule, round end time, fresh/straggler
-        split, stale-cache landing.  Returns (t_end, fresh_updates,
-        stale_updates, stale_taus)."""
+    def _schedule_round(self, r: int, plan: RoundPlan) -> RoundSchedule:
+        """Host post-plan step, decided *before* training: arrival schedule,
+        round end time, fresh/straggler split, stale-cache landings, resource
+        accounting.  None of it reads the update values, so the fused
+        pipeline runs it first and dispatches one device program for the
+        whole round.  Accounting/bookkeeping mutations happen here in the
+        same order the pre-refactor ``_collect_updates`` performed them
+        (float accumulation order is part of the parity contract)."""
         cfg = self.cfg
         t_now, chosen, durs, drop_at = plan.t_now, plan.chosen, plan.durs, plan.drop_at
         n_t = plan.n_t
@@ -440,47 +504,80 @@ class Simulator:
             t_end = t_now + cfg.deadline
 
         # --- split fresh / straggler ------------------------------
-        fresh_updates = []
+        fresh_rows, new_stale, feedback = [], [], []
         for (arr, i) in arrivals:
             lid = chosen[i]
-            delta_i = (deltas[i] if cfg.fast_path
-                       else jax.tree.map(lambda d: d[i], deltas))
-            stat_util = float(cfg.local_steps * cfg.local_batch * l2s[i])
-            self.selector.update_feedback(lid, stat_util=stat_util,
-                                          duration=durs[i], round_idx=r)
+            feedback.append((lid, i, durs[i]))
             if arr <= t_end and (cfg.setting == "DL" or cfg.selector == "safa"
-                                 or len(fresh_updates) < n_t):
-                fresh_updates.append(delta_i)
+                                 or len(fresh_rows) < n_t):
+                fresh_rows.append(i)
                 self.acct.unique.add(lid)
             elif cfg.saa:
-                if cfg.fast_path:
-                    # copy: delta_i is a view into the round's padded
-                    # (m, D) cohort buffer; caching the view would pin
-                    # the whole buffer for the straggler's lifetime
-                    delta_i = np.array(delta_i)
-                self.stale_cache.append(_InFlight(lid, r, arr, durs[i],
-                                                  delta_i, stat_util))
+                new_stale.append((i, lid, arr, durs[i]))
             else:
                 # already charged as used at dispatch; never aggregated
                 self.acct.mark_wasted(float(durs[i]))
 
         # --- stale updates landing this round ---------------------
-        stale_updates, stale_taus = [], []
+        landing, landing_taus, expired = [], [], []
         still_waiting = []
         for f in self.stale_cache:
             if f.arrival <= t_end:
                 tau = r - f.origin_round
                 if (cfg.staleness_threshold is None
                         or tau <= cfg.staleness_threshold):
-                    stale_updates.append(f.delta)
-                    stale_taus.append(tau)
+                    landing.append(f)
+                    landing_taus.append(tau)
                     self.acct.unique.add(f.learner_id)
                 else:
+                    expired.append(f)
                     self.acct.mark_wasted(f.duration)
             else:
                 still_waiting.append(f)
         self.stale_cache = still_waiting
-        return t_end, fresh_updates, stale_updates, stale_taus
+        return RoundSchedule(t_end, fresh_rows, new_stale, landing,
+                             landing_taus, expired, feedback)
+
+    def _apply_feedback(self, r: int, sched: RoundSchedule, l2s) -> None:
+        """Selector feedback for every arrival, in arrival order.  ``l2s``
+        holds the per-row Oort loss stats (None when no selector consumes
+        them — only Oort does — in which case stat_util is reported as 0)."""
+        cfg = self.cfg
+        for (lid, i, dur) in sched.feedback:
+            stat_util = (float(cfg.local_steps * cfg.local_batch * l2s[i])
+                         if l2s is not None else 0.0)
+            self.selector.update_feedback(lid, stat_util=stat_util,
+                                          duration=dur, round_idx=r)
+
+    def _stat_util(self, row: int, l2s) -> float:
+        return (float(self.cfg.local_steps * self.cfg.local_batch * l2s[row])
+                if l2s is not None else 0.0)
+
+    def _collect_updates(self, r: int, plan: RoundPlan, deltas, losses, l2s):
+        """Host post-step for the per-stage paths: schedule the round, apply
+        selector feedback, then materialize the scheduled rows from the
+        round's update values.  Returns (t_end, fresh_updates, stale_updates,
+        stale_taus)."""
+        cfg = self.cfg
+        sched = self._schedule_round(r, plan)
+        self._apply_feedback(r, sched, l2s)
+
+        def row(i):
+            return (deltas[i] if cfg.fast_path
+                    else jax.tree.map(lambda d: d[i], deltas))
+
+        fresh_updates = [row(i) for i in sched.fresh_rows]
+        for (i, lid, arr, dur) in sched.new_stale:
+            delta_i = row(i)
+            if cfg.fast_path:
+                # copy: delta_i is a view into the round's padded (m, D)
+                # cohort buffer; caching the view would pin the whole
+                # buffer for the straggler's lifetime
+                delta_i = np.array(delta_i)
+            self.stale_cache.append(_InFlight(lid, r, arr, dur, delta_i,
+                                              self._stat_util(i, l2s)))
+        stale_updates = [f.delta for f in sched.landing]
+        return sched.t_end, fresh_updates, stale_updates, sched.landing_taus
 
     def _aggregate(self, fresh_updates, stale_updates, stale_taus):
         cfg = self.cfg
@@ -543,6 +640,19 @@ class Simulator:
                       f"wasted={100*self.acct.resource_wasted/max(self.acct.resource_used,1e-9):.0f}%")
         self.acct.records.append(rec)
         self._t_now = t_end
+        return rec
+
+    def _target_reached(self) -> bool:
+        """Accuracy-target early stop: True once the latest recorded round's
+        evaluation reached ``target_accuracy``.  Only eval rounds carry an
+        accuracy (NaN otherwise), so every execution mode — serial, flat,
+        batched sweep — tests the identical round boundaries and stops at
+        the identical round."""
+        target = self.cfg.target_accuracy
+        if target is None or not self.acct.records:
+            return False
+        acc = self.acct.records[-1].accuracy
+        return acc == acc and acc >= target
 
     def _finalize(self) -> Accounting:
         # updates still in flight at the end of training are wasted work
@@ -554,6 +664,9 @@ class Simulator:
 
     # ------------------------------------------------------------------
     def run(self, progress: bool = False):
+        if self.cfg.fast_path and self.cfg.fused_rounds:
+            from repro.sim.pipeline import RoundPipeline
+            return RoundPipeline([self], progress=progress).run()[0]
         self._t_now = 0.0
         for r in range(self.cfg.rounds):
             plan = self._begin_round(r)
@@ -568,4 +681,7 @@ class Simulator:
             self._record_round(r, plan.t_now, t_end, len(plan.chosen),
                                len(fresh_updates), len(stale_updates),
                                progress=progress)
+            if self._target_reached():
+                self.acct.stopped_early = True
+                break
         return self._finalize()

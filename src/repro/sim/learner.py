@@ -93,10 +93,21 @@ def evaluate(params, x, y):
     return acc, loss
 
 
+def sample_batch_indices(shard_idx: np.ndarray, n_steps: int, batch: int,
+                         rng: np.random.Generator) -> np.ndarray:
+    """Sample indices for one learner's fixed-shape local batches (with
+    replacement when the shard is small).  The single RNG draw shared by the
+    host-materialized and device-gather paths, so both consume the identical
+    stream and pick the identical samples."""
+    return rng.choice(shard_idx, size=n_steps * batch,
+                      replace=len(shard_idx) < n_steps * batch)
+
+
 def sample_local_batches(shard_idx: np.ndarray, x: np.ndarray, y: np.ndarray,
                          n_steps: int, batch: int, rng: np.random.Generator):
-    """Fixed-shape local batches (with replacement when the shard is small)."""
-    take = rng.choice(shard_idx, size=n_steps * batch,
-                      replace=len(shard_idx) < n_steps * batch)
+    """Fixed-shape local batches, materialized on host.  The device-resident
+    round pipeline keeps only ``sample_batch_indices``' output and gathers
+    the rows in-program from the device copy of the dataset."""
+    take = sample_batch_indices(shard_idx, n_steps, batch, rng)
     return (x[take].reshape(n_steps, batch, -1),
             y[take].reshape(n_steps, batch))

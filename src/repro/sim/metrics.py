@@ -30,6 +30,7 @@ class SimSummary(TypedDict):
     unique_participants: int     # distinct learners ever aggregated
     final_accuracy: float        # last evaluation (NaN if never evaluated)
     best_accuracy: float         # best evaluation (NaN if never evaluated)
+    stopped_early: bool          # hit SimConfig.target_accuracy before rounds ran out
 
 
 SUMMARY_KEYS = tuple(SimSummary.__annotations__)
@@ -55,6 +56,7 @@ class Accounting:
     resource_used: float = 0.0
     resource_wasted: float = 0.0
     unique: set = dataclasses.field(default_factory=set)
+    stopped_early: bool = False   # accuracy-target early stop fired
 
     def charge(self, seconds: float, wasted: bool):
         self.resource_used += seconds
@@ -88,4 +90,5 @@ class Accounting:
             unique_participants=len(self.unique),
             final_accuracy=accs[-1] if accs else float("nan"),
             best_accuracy=max(accs) if accs else float("nan"),
+            stopped_early=self.stopped_early,
         )

@@ -1,0 +1,525 @@
+"""Device-resident round pipeline: ONE jitted dispatch per simulation round.
+
+``RoundPipeline`` drives S >= 1 Simulators (the serial engine passes
+``[self]``; ``repro.sweeps.runner`` passes a compatibility batch) through a
+round loop whose entire device side — cohort local training, straggler
+scatter into the device stale cache, SAA weights + aggregation, and the
+server apply — is one compiled program with **donated** parameter / cache /
+optimizer buffers.  Host<->device traffic per round:
+
+  host -> device: the round's index arrays (sample indices, row->cell
+      ownership, cache scatter slots, aggregation gather/mask arrays) via
+      explicit ``jax.device_put`` — a few KB of int32/bool, never update
+      rows or batch data (the dataset lives on device for the whole run);
+  device -> host: nothing, unless an Oort selector needs its per-row
+      stat-utility feedback (a (R,) fp32 vector), plus accuracy/loss on
+      ``eval_every`` boundaries.
+
+Because every *decision* of a round (arrival order, round end, fresh vs
+straggler split, cache landings) depends only on durations/dropouts — never
+on update values — ``Simulator._schedule_round`` runs before the dispatch
+and the whole round becomes data-independent index plumbing around one
+launch.  All heavy intermediates (the (R, D) delta rows, the stale rows,
+the (G, n, D) aggregation operand) exist only inside the program.
+
+Parity: gathers/scatters are pure data movement, padding rows are masked to
+exact zeros before aggregation (``bucket_pad``'s layout, bit-for-bit), the
+weights+aggregate unit is the same ``weights_and_aggregate_by_id`` the
+batched sweep path has always vmapped, and the server apply is the same
+formula — so per-cell metrics are bit-identical to the per-stage flat path
+and to serial runs (asserted by tests/test_pipeline_parity.py and the
+benchmarks).
+
+Donation invariants: the stacked params tensor, the cache rows and the
+optimizer state are donated into every round program — after a ``step`` the
+previous round's buffers are dead and must not be touched; the pipeline is
+their only owner and always replaces its references with the returned
+arrays.  ``Simulator.flat_params`` is stale while a pipeline run is in
+flight and is rewritten at ``finalize``.  Dataset/test tensors are *not*
+donated (read-only, reused every round).
+
+Early stop: cells whose latest evaluation reached ``target_accuracy`` leave
+the lockstep batch entirely — no host round logic, no packed rows, no
+aggregation group, no eval slot — so a sweep's per-round cost tracks the
+*live* cells (bucket-padded repacking shrinks every axis), not S x rounds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation as agg
+from repro.core.aggregation import (aggregate_updates, unflatten_update,
+                                    weights_and_aggregate_by_id,
+                                    yogi_apply_flat)
+from repro.core.stale_cache import DeviceStaleCache
+from repro.core.staleness import EPS, RULE_ID
+from repro.sim import learner as ln
+
+ROW_BLOCK = 128   # packed participant-row padding bucket (bucket_block)
+UPD_BLOCK = 32    # per-cell aggregation-row padding bucket (sweep_bucket_pad's)
+
+
+def pipeline_key(cfg) -> tuple:
+    """Config fields every Simulator in one pipeline must share: they fix
+    the compiled round program's static structure or the lockstep cadence.
+    ``repro.sweeps.runner.compat_key`` groups cells by (a superset of) this."""
+    return (cfg.benchmark, cfg.local_steps, cfg.local_batch, cfg.local_lr,
+            cfg.prox_mu, cfg.rounds, cfg.eval_every, cfg.aggregator,
+            cfg.use_agg_kernel,
+            cfg.scaling_rule if cfg.use_agg_kernel else None)
+
+
+@dataclasses.dataclass
+class PipelineStats:
+    """Dispatch / transfer accounting for the hot loop (``--profile``)."""
+    rounds: int = 0
+    dispatches: dict = dataclasses.field(
+        default_factory=lambda: {"round": 0, "eval": 0, "cache_grow": 0})
+    h2d_bytes: int = 0          # per-round index arrays (explicit device_put)
+    d2h_bytes: int = 0          # stat-util + eval fetches
+    init_h2d_bytes: int = 0     # one-time dataset/params uploads
+
+    def as_dict(self) -> dict:
+        per_round = max(self.rounds, 1)
+        return {
+            "rounds": self.rounds,
+            "dispatches": dict(self.dispatches),
+            "dispatches_per_round": round(
+                sum(self.dispatches.values()) / per_round, 3),
+            "h2d_bytes": self.h2d_bytes,
+            "d2h_bytes": self.d2h_bytes,
+            "h2d_bytes_per_round": round(self.h2d_bytes / per_round),
+            "d2h_bytes_per_round": round(self.d2h_bytes / per_round),
+            "init_h2d_bytes": self.init_h2d_bytes,
+        }
+
+
+# ---------------------------------------------------------------------------
+# The fused round program
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=16)
+def _round_program(spec, lr, prox_mu, steps, batch, yogi, use_kernel,
+                   kernel_rule, single):
+    """Build + jit the single-dispatch round program.
+
+    Static over (model spec, local hyperparameters, server optimizer,
+    kernel routing, S==1); the round-varying index arrays arrive packed in
+    TWO device buffers (one int32, one fp32) whose layout is described by
+    the static ``shapes`` tuple — so one explicit ``jax.device_put`` pair
+    covers a round, and XLA recompiles only when a padding bucket first
+    appears.  ``single`` broadcasts the parameters instead of gathering
+    them (the serial engine's S == 1 case; bit-identical either way).
+    """
+    train_unit = functools.partial(ln.local_train_flat, spec=spec, lr=lr,
+                                   prox_mu=prox_mu)
+
+    def prog(params, cache, opt_state, x_tr, y_tr, ints, floats, shapes):
+        r_b, tb, g_b, nf_b, ns_b, all_valid = shapes
+        n_b = nf_b + ns_b
+        o = [0]
+
+        def take(n, shape=None, dtype=None):
+            a = ints[o[0]:o[0] + n]
+            o[0] += n
+            if dtype is not None:
+                a = a.astype(dtype)
+            return a.reshape(shape) if shape is not None else a
+
+        batch_idx = take(r_b * tb, (r_b, tb))
+        row_cell = take(r_b)
+        row_sub = take(r_b)
+        scat_slot = take(r_b)
+        agg_cell = take(g_b)
+        fr_idx = take(g_b * nf_b, (g_b, nf_b))
+        sl_idx = take(g_b * ns_b, (g_b, ns_b))
+        agg_tau = take(g_b * n_b, (g_b, n_b))
+        rule_id = take(g_b)
+        agg_fresh = take(g_b * n_b, (g_b, n_b), bool)
+        agg_valid = take(g_b * n_b, (g_b, n_b), bool)
+        has_g = take(g_b, None, bool)
+        beta_g, lr_g = floats[:g_b], floats[g_b:2 * g_b]
+
+        # --- train: gather batches + per-row params, one vmapped call ---
+        bx = x_tr[row_sub[:, None], batch_idx]            # (R, steps*batch, dim)
+        bx = bx.reshape(r_b, steps, batch, bx.shape[-1])
+        by = y_tr[row_sub[:, None], batch_idx].reshape(r_b, steps, batch)
+        if single:
+            deltas, losses, l2s = jax.vmap(
+                train_unit, in_axes=(None, 0, 0))(params[0], bx, by)
+        else:
+            deltas, losses, l2s = jax.vmap(train_unit)(params[row_cell], bx, by)
+
+        # --- straggler scatter into the cache, then gather ---------------
+        # scatter FIRST so the donated cache updates in place (a gather
+        # before the scatter would force XLA to copy the whole buffer);
+        # this round's scatter slots are disjoint from this round's landing
+        # slots because the pipeline quarantines freed slots for one round
+        cache = cache.at[scat_slot].set(deltas)
+
+        # fresh columns from this round's delta rows, stale columns from
+        # the cache slots; same per-cell row multiset as the per-stage
+        # path's (fresh + stale, zero-padded) stack
+        uf, us = deltas[fr_idx], cache[sl_idx]
+        if not all_valid:
+            # bucket_pad's exact zeros in the padding columns
+            uf = jnp.where(agg_valid[:, :nf_b, None], uf, 0.0)
+            us = jnp.where(agg_valid[:, nf_b:, None], us, 0.0)
+        u = jnp.concatenate([uf, us], axis=1)
+
+        # --- SAA weights + aggregate + server apply ----------------------
+        rows_old = params[agg_cell]                       # (G, D)
+        if use_kernel:
+            from repro.kernels.staleness_agg.staleness_agg import (
+                D_BLK, sweep_fused_staleness_apply,
+                sweep_fused_staleness_aggregate)
+            d = u.shape[-1]
+            pad = (-d) % D_BLK
+            up = jnp.pad(u, ((0, 0), (0, 0), (0, pad)))
+            if yogi:
+                agg_out, _ = sweep_fused_staleness_aggregate(
+                    up, agg_fresh, agg_tau, beta_g, agg_valid,
+                    rule=kernel_rule)
+                agg_out = agg_out[:, :d]
+            else:
+                scal = jnp.stack([beta_g, lr_g], axis=1)
+                new_rows, _ = sweep_fused_staleness_apply(
+                    jnp.pad(rows_old, ((0, 0), (0, pad))), up, agg_fresh,
+                    agg_tau, agg_valid, scal, rule=kernel_rule)
+                new_rows = new_rows[:, :d]
+        elif ns_b == 0:
+            # no stale rows anywhere this round: Eq. 2 degenerates to the
+            # fresh average, so skip the deviation pass entirely.  The
+            # weight vector is bit-identical to the general path's (fresh
+            # rows weigh 1, padding weighs 0, same normalization).
+            w = agg_fresh.astype(jnp.float32)
+            w = w / jnp.maximum(w.sum(axis=1, keepdims=True), EPS)
+            agg_out = jax.vmap(aggregate_updates)(u, w)
+        else:
+            agg_out, _ = jax.vmap(weights_and_aggregate_by_id)(
+                u, agg_fresh, agg_tau, agg_valid, beta_g, rule_id)
+        if yogi:
+            state_rows = jax.tree.map(lambda s: s[agg_cell], opt_state)
+            new_rows, new_state = jax.vmap(yogi_apply_flat)(
+                rows_old, agg_out, state_rows)
+            keep = lambda new, old: jnp.where(
+                has_g.reshape((-1,) + (1,) * (new.ndim - 1)), new, old)
+            opt_state = jax.tree.map(
+                lambda s, ns, os: s.at[agg_cell].set(keep(ns, os)),
+                opt_state, new_state, state_rows)
+        elif not use_kernel:
+            new_rows = rows_old + lr_g[:, None] * agg_out
+        new_rows = jnp.where(has_g[:, None], new_rows, rows_old)
+        params = params.at[agg_cell].set(new_rows)
+        return params, cache, opt_state, losses, l2s
+
+    return jax.jit(prog, donate_argnums=(0, 1, 2), static_argnums=(7,))
+
+
+@functools.lru_cache(maxsize=8)
+def _eval_program(spec):
+    """Batched eval over the live cells: gather their parameter rows and
+    each cell's (possibly shared) test set."""
+    def ev(flat, ti, x_u, y_u):
+        return ln.evaluate(unflatten_update(flat, spec), x_u[ti], y_u[ti])
+
+    def f(params, packed, x_u, y_u):
+        l_b = packed.shape[0] // 2
+        eval_idx, te_idx = packed[:l_b], packed[l_b:]
+        return jax.vmap(ev, in_axes=(0, 0, None, None))(
+            params[eval_idx], te_idx, x_u, y_u)
+
+    return jax.jit(f)
+
+
+# ---------------------------------------------------------------------------
+# Pipeline driver
+# ---------------------------------------------------------------------------
+
+
+class RoundPipeline:
+    def __init__(self, sims: Sequence, progress: bool = False):
+        assert len(sims) >= 1
+        self.sims = list(sims)
+        self.progress = progress
+        cfg0 = sims[0].cfg
+        for sim in sims:
+            assert sim.cfg.fast_path and sim.cfg.fused_rounds, \
+                "RoundPipeline drives the fused fast path only"
+            assert pipeline_key(sim.cfg) == pipeline_key(cfg0), \
+                "incompatible Simulators in one pipeline batch"
+        self.cfg0 = cfg0
+        self.spec = sims[0]._flat_spec
+        self.d = agg.flat_dim(self.spec)
+        self.yogi = cfg0.aggregator == "yogi"
+        self.stats = PipelineStats()
+
+        s = len(sims)
+        # stacked (S+1, D) params; the extra row is scratch that padding
+        # aggregation groups read and write (never a real cell)
+        self.params = jnp.concatenate(
+            [jnp.stack([sim.flat_params for sim in sims]),
+             jnp.zeros((1, self.d), jnp.float32)])
+        if self.yogi:
+            self.opt_state = jax.tree.map(
+                lambda *xs: jnp.stack(xs + (jnp.zeros_like(xs[0]),)),
+                *[sim.flat_opt_state for sim in sims])
+        else:
+            self.opt_state = None
+        self.cache = DeviceStaleCache(
+            self.d, capacity=max(c.cfg.stale_cache_capacity for c in sims),
+            grow=True)
+
+        # one device copy of each distinct substrate's dataset
+        subs = []
+        self.sub_idx = np.zeros(s, np.int32)
+        for i, sim in enumerate(sims):
+            if not any(sim.substrate is sb for sb in subs):
+                subs.append(sim.substrate)
+            self.sub_idx[i] = next(j for j, sb in enumerate(subs)
+                                   if sb is sim.substrate)
+        host = (np.stack([sb.data.x_train for sb in subs]),
+                np.stack([sb.data.y_train for sb in subs]),
+                np.stack([sb.data.x_test for sb in subs]),
+                np.stack([sb.data.y_test for sb in subs]))
+        self.x_tr, self.y_tr, self.x_te, self.y_te = jax.device_put(host)
+        self.stats.init_h2d_bytes = (sum(a.nbytes for a in host)
+                                     + (s + 1) * self.d * 4)
+        # Oort is the only selector that consumes the per-row stat-utility
+        # feedback; without one the round loop fetches nothing per round
+        self._fetch_l2s = any(sim.cfg.selector == "oort" for sim in sims)
+        self._prog = _round_program(
+            self.spec, cfg0.local_lr, cfg0.prox_mu, cfg0.local_steps,
+            cfg0.local_batch, self.yogi, cfg0.use_agg_kernel,
+            cfg0.scaling_rule if cfg0.use_agg_kernel else None,
+            len(sims) == 1)
+        # single-sim non-SAFA cohorts have a near-constant size, so exact
+        # (unpadded) shapes cost at most a handful of compiles and remove
+        # the pow2 bucket's up-to-2x wasted training rows — but only long
+        # runs amortize those compiles; short runs, SAFA cohorts (sizes all
+        # over the place) and sweep batches keep the shared padding buckets.
+        # Padding is masked/discarded everywhere, so the choice never
+        # affects results (bucket_block's contract).
+        self._exact = (len(sims) == 1 and cfg0.selector != "safa"
+                       and cfg0.rounds >= 24)
+        self._eval = _eval_program(self.spec)
+        self.done = [False] * s
+        self._pending_free = []   # freed slots quarantined for one round
+
+    # ------------------------------------------------------------------
+    def run(self, transfer_guard: bool = False):
+        """Drive every round, then finalize.  ``transfer_guard=True`` wraps
+        the round loop in ``jax.transfer_guard("disallow")``: every upload
+        the pipeline performs is an explicit ``device_put``, so any
+        *implicit* host transfer sneaking into the hot path raises — the
+        CI smoke (and ``--profile`` benches) run in this mode."""
+        for sim in self.sims:
+            sim._t_now = 0.0
+        if transfer_guard:
+            with jax.transfer_guard("disallow"):
+                self._run_rounds()
+        else:
+            self._run_rounds()
+        return self.finalize()
+
+    def _run_rounds(self):
+        for r in range(self.cfg0.rounds):
+            if all(self.done):
+                break
+            self.step(r)
+
+    # ------------------------------------------------------------------
+    def step(self, r: int) -> None:
+        """One lockstep round across the live cells: host logic + ONE
+        device dispatch (plus the batched eval on eval rounds)."""
+        sims = self.sims
+        cfg0 = self.cfg0
+        plans = {}
+        for i, sim in enumerate(sims):
+            if self.done[i]:
+                continue
+            p = sim._begin_round(r)
+            if p is not None:
+                plans[i] = p
+        if not plans:
+            return
+        order = list(plans)
+        scheds = {i: sims[i]._schedule_round(r, plans[i]) for i in order}
+
+        # --- slot management ---------------------------------------------
+        # slots freed by landings/expiries are quarantined for one round
+        # (released here, before this round's allocs): a slot gathered this
+        # round is therefore never a scatter target this round, which lets
+        # the program scatter before it gathers and keep the donated cache
+        # update fully in place
+        grow0 = self.cache.grow_events
+        if self._pending_free:
+            self.cache.free(self._pending_free)
+        self._pending_free = [
+            f.delta for i in order
+            for f in scheds[i].landing + scheds[i].expired]
+        for i in order:
+            sc = scheds[i]
+            if sc.new_stale:
+                sc.slots, _ = self.cache.alloc(len(sc.new_stale))
+        self.stats.dispatches["cache_grow"] += self.cache.grow_events - grow0
+
+        # --- pack this round's cohort rows (survivors only) --------------
+        # mid-round dropouts never deliver an update and never feed the
+        # selector, so their rows are excluded from the packed training
+        # call — the per-stage paths train them and discard the result
+        tb = cfg0.local_steps * cfg0.local_batch
+        surv = {i: np.nonzero(~np.isfinite(plans[i].drop_at))[0]
+                for i in order}
+        n_rows = sum(len(surv[i]) for i in order)
+        r_b = (max(n_rows, 1) if self._exact
+               else agg.bucket_block(max(n_rows, 1), ROW_BLOCK))
+        batch_idx = np.zeros((r_b, tb), np.int32)
+        row_cell = np.zeros(r_b, np.int32)
+        row_sub = np.zeros(r_b, np.int32)
+        scat_slot = np.full(r_b, self.cache.trash_slot, np.int32)
+        pos = {}            # (sim, plan row) -> packed row
+        offs = {}           # sim -> start of its packed block
+        off = 0
+        for i in order:
+            p, sc = plans[i], scheds[i]
+            sv = surv[i]
+            offs[i] = off
+            batch_idx[off:off + len(sv)] = p.bidx[sv]
+            row_cell[off:off + len(sv)] = i
+            row_sub[off:off + len(sv)] = self.sub_idx[i]
+            for local, row_i in enumerate(sv):
+                pos[(i, int(row_i))] = off + local
+            for (row_i, _lid, _arr, _dur), slot in zip(sc.new_stale, sc.slots):
+                scat_slot[pos[(i, row_i)]] = slot
+            off += len(sv)
+        if off < r_b:               # padding rows replicate the first real row
+            batch_idx[off:] = batch_idx[0]
+            row_cell[off:] = row_cell[0]
+            row_sub[off:] = row_sub[0]
+
+        # --- aggregation groups: one per cell with updates ---------------
+        # column layout per group: fresh rows in [0, nf_b) (delta gathers),
+        # stale rows in [nf_b, nf_b + ns_b) (cache-slot gathers); padding
+        # columns are invalid and zeroed in-program, so each cell's operand
+        # holds the same row multiset as the per-stage path's padded stack
+        groups = [i for i in order
+                  if scheds[i].fresh_rows or scheds[i].landing]
+        g_b = (max(len(groups), 1) if self._exact
+               else agg.bucket_pow2(max(len(groups), 1)))
+        nf_max = max([len(scheds[i].fresh_rows) for i in groups] + [1])
+        ns_max = max([len(scheds[i].landing) for i in groups] + [0])
+        nf_b = (nf_max if self._exact
+                else agg.bucket_block(nf_max, UPD_BLOCK))
+        ns_b = (ns_max if self._exact
+                else (agg.bucket_pow2(ns_max) if ns_max else 0))
+        n_b = nf_b + ns_b
+        all_valid = bool(
+            groups and g_b == len(groups)
+            and all(len(scheds[i].fresh_rows) == nf_b
+                    and len(scheds[i].landing) == ns_b for i in groups))
+        s_total = len(sims)
+        agg_cell = np.full(g_b, s_total, np.int32)     # scratch params row
+        fr_idx = np.zeros((g_b, nf_b), np.int32)
+        sl_idx = np.zeros((g_b, ns_b), np.int32)
+        agg_fresh = np.zeros((g_b, n_b), np.int32)
+        agg_tau = np.zeros((g_b, n_b), np.int32)
+        agg_valid = np.zeros((g_b, n_b), np.int32)
+        rule_id = np.zeros(g_b, np.int32)
+        has_g = np.zeros(g_b, np.int32)
+        beta_g = np.zeros(g_b, np.float32)
+        lr_g = np.zeros(g_b, np.float32)
+        for g, i in enumerate(groups):
+            sc, cfg = scheds[i], sims[i].cfg
+            for col, row_i in enumerate(sc.fresh_rows):       # arrival order
+                fr_idx[g, col] = pos[(i, row_i)]
+                agg_fresh[g, col] = 1
+                agg_valid[g, col] = 1
+            for col, (f, tau) in enumerate(zip(sc.landing,
+                                               sc.landing_taus)):  # cache order
+                sl_idx[g, col] = f.delta           # cache slot
+                agg_tau[g, nf_b + col] = tau
+                agg_valid[g, nf_b + col] = 1
+            agg_cell[g] = i
+            rule_id[g] = RULE_ID[cfg.scaling_rule]
+            beta_g[g] = cfg.beta
+            lr_g[g] = cfg.server_lr
+            has_g[g] = 1
+
+        # --- ONE dispatch for the whole round ----------------------------
+        ints = np.concatenate([batch_idx.ravel(), row_cell, row_sub,
+                               scat_slot, agg_cell, fr_idx.ravel(),
+                               sl_idx.ravel(), agg_tau.ravel(), rule_id,
+                               agg_fresh.ravel(), agg_valid.ravel(), has_g])
+        floats = np.concatenate([beta_g, lr_g])
+        dev_ints, dev_floats = jax.device_put((ints, floats))
+        self.stats.h2d_bytes += ints.nbytes + floats.nbytes
+        self.stats.dispatches["round"] += 1
+        self.stats.rounds += 1
+        (self.params, self.cache.rows, self.opt_state, _losses, l2s) = \
+            self._prog(self.params, self.cache.rows, self.opt_state,
+                       self.x_tr, self.y_tr, dev_ints, dev_floats,
+                       (r_b, tb, g_b, nf_b, ns_b, all_valid))
+
+        l2s_np = None
+        if self._fetch_l2s:
+            l2s_np = np.asarray(jax.device_get(l2s))
+            self.stats.d2h_bytes += l2s_np.nbytes
+
+        # --- host bookkeeping: feedback, cache entries, records ----------
+        from repro.sim.engine import _InFlight
+        for i in order:
+            sim, sc = sims[i], scheds[i]
+            if l2s_np is None:
+                l2s_i = None
+            else:
+                # re-index the packed survivor rows back to plan rows (the
+                # feedback loop addresses plan rows; dropouts never feed back)
+                l2s_i = np.zeros(plans[i].k, np.float32)
+                l2s_i[surv[i]] = l2s_np[offs[i]:offs[i] + len(surv[i])]
+            sim._apply_feedback(r, sc, l2s_i)
+            for (row_i, lid, arr, dur), slot in zip(sc.new_stale, sc.slots):
+                sim.stale_cache.append(_InFlight(
+                    lid, r, arr, dur, slot, sim._stat_util(row_i, l2s_i)))
+
+        acc = loss = None
+        if sims[order[0]].eval_due(r):
+            l_b = agg.bucket_pow2(len(order))
+            eidx = np.asarray(order + [order[0]] * (l_b - len(order)), np.int32)
+            packed = jax.device_put(np.concatenate([eidx, self.sub_idx[eidx]]))
+            self.stats.dispatches["eval"] += 1
+            a, lo = self._eval(self.params, packed, self.x_te, self.y_te)
+            acc, loss = np.asarray(jax.device_get(a)), np.asarray(jax.device_get(lo))
+            self.stats.h2d_bytes += 2 * eidx.nbytes
+            self.stats.d2h_bytes += acc.nbytes + loss.nbytes
+        for ei, i in enumerate(order):
+            sc = scheds[i]
+            sims[i]._record_round(
+                r, plans[i].t_now, sc.t_end, len(plans[i].chosen),
+                len(sc.fresh_rows), len(sc.landing),
+                acc_loss=(acc[ei], loss[ei]) if acc is not None else None,
+                progress=self.progress)
+            if sims[i]._target_reached():
+                sims[i].acct.stopped_early = True
+                self.done[i] = True
+
+    # ------------------------------------------------------------------
+    def finalize(self):
+        """Write the device state back to the Simulators and finalize each.
+        After this the pipeline's donated-buffer chain ends; the returned
+        Accountings are the same objects ``Simulator.run`` yields."""
+        accts = []
+        for i, sim in enumerate(self.sims):
+            sim.flat_params = self.params[i]
+            if self.yogi:
+                sim.flat_opt_state = jax.tree.map(lambda x: x[i],
+                                                  self.opt_state)
+            accts.append(sim._finalize())
+        return accts

@@ -13,6 +13,14 @@ Axes resolve through a registry: an axis is either a registered named axis
 (``policy``, ``hardware``, ``availability``, ...) mapping a value to a dict
 of config-field updates, or any raw ``SimConfig`` field name.  New axes
 register with ``register_axis``.
+
+Accuracy-target early stop rides the raw-field mechanism: put
+``target_accuracy`` in ``base`` (one bar for the whole grid) or use it as
+an axis (``axes={"target_accuracy": [0.6, 0.7]}``) — cells that reach
+their target leave the lockstep batch at that eval round (shrinking
+bucket-padded repacking in the runner), and
+``SweepResults.resource_to_target()`` tabulates the per-cell cost of
+reaching the bar.
 """
 from __future__ import annotations
 

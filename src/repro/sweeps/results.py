@@ -82,6 +82,30 @@ class SweepResults:
             rows.append(row)
         return rows
 
+    def resource_to_target(self) -> list[dict]:
+        """Per-cell resource-to-target rows for accuracy-target sweeps
+        (``SimConfig.target_accuracy`` / ``SweepSpec`` base or axis).
+
+        For cells that stopped early, ``rounds``/``resource_used``/
+        ``sim_time`` are the cost of *reaching* the target (the engine
+        freezes accrual at the stop round); cells that ran out of rounds
+        report their full cost with ``reached = False`` — the paper-style
+        "resources to a fixed quality bar" comparison, one row per cell.
+        """
+        rows = []
+        for r in self.results:
+            s = r.summary
+            rows.append({
+                "cell": r.cell.name,
+                **{a: r.cell.coord(a) for a in self.axes},
+                "reached": bool(s["stopped_early"]),
+                "rounds": s["rounds"],
+                "sim_time": s["sim_time"],
+                "resource_used": s["resource_used"],
+                "final_accuracy": s["final_accuracy"],
+            })
+        return rows
+
     def to_json_dict(self) -> dict:
         return {"cells": [{"name": r.cell.name,
                            "coords": dict(r.cell.coords),

@@ -1,19 +1,27 @@
 """Batched multi-simulation executor over the flat fast path.
 
-``SweepRunner`` drives S compatible simulations in lockstep: each round,
+``SweepRunner`` drives S compatible simulations in lockstep.  Each round,
 every cell's host state machine (availability census, selection, batch
 sampling, arrival schedule — the Simulator's own ``_begin_round`` /
-``_collect_updates`` / ``_record_round`` methods, shared code with serial
-runs) executes per cell, while the device stages are batched across the
-sweep axis:
+``_schedule_round`` / ``_record_round`` methods, shared code with serial
+runs) executes per cell, while the device side is batched across the sweep
+axis.  Two executors:
 
-  * cohort training packs every live cell's real participant rows into ONE
-    (R, steps, batch, dim) call with per-row parameters gathered from the
-    stacked (S, D) model tensor (``engine.flat_cohort_step``'s unit vmapped
-    over packed rows; R padded to a power-of-two bucket);
-  * aggregation stacks the cells' fresh+stale updates into (S, n, D) and
-    runs one vmapped SAA program (or the sweep-grid Pallas kernel);
-  * the server step and evaluation apply to all S cells in one call.
+  * fused device-resident pipeline (default, ``repro.sim.pipeline``): the
+    whole round — packed cohort training with per-row parameters, straggler
+    scatter into the shared device stale cache, gathered (G, n, D) SAA
+    aggregation and the batched server apply — is ONE jitted dispatch with
+    donated buffers.  Update rows never visit the host; per-round traffic
+    is index arrays down and (with an Oort cell) a stat-utility vector
+    back.  Cells that hit their ``target_accuracy`` drop out of the
+    lockstep batch entirely (shrinking bucket-padded repacking), so a
+    sweep's cost tracks live cells rather than S x rounds;
+
+  * per-stage batched path (``fused_rounds=False`` cells): the PR-2
+    executor — packed train call, host-side update collection,
+    ``sweep_bucket_pad`` + one vmapped SAA program (or the sweep-grid
+    Pallas kernel), batched server step + eval — kept as the stage-by-stage
+    parity/benchmark baseline.
 
 Rows are independent under vmap and reductions are padding-invariant (zero
 rows contribute exact zeros), so every cell's metrics are **bit-identical**
@@ -22,8 +30,8 @@ to a serial ``Simulator.run`` of the same config/seed — asserted by
 
 Cells sharing a substrate key (benchmark, mapping, n_learners, seed,
 availability) also share one ``Substrate`` build — the dominant cost of a
-serial sweep — which is where most of the batched speedup comes from on
-small hosts; the packed device stages amortize dispatch and padding on top.
+serial sweep — and the fused pipeline additionally shares one device copy
+of each substrate's dataset across its cells.
 """
 from __future__ import annotations
 
@@ -41,6 +49,7 @@ from repro.core import aggregation as agg
 from repro.core.aggregation import unflatten_update, yogi_apply_flat
 from repro.sim import learner as ln
 from repro.sim.engine import Simulator, Substrate, substrate_key
+from repro.sim.pipeline import RoundPipeline, pipeline_key
 from repro.sweeps.grid import Cell
 from repro.sweeps.results import CellResult, SweepResults
 
@@ -52,14 +61,11 @@ def compat_key(cfg) -> tuple:
     """Cells sharing this key run in one lockstep batch: fields that fix the
     compiled programs' shapes/static arguments or the lockstep cadence.
     Everything else (selector, SAA, APT, setting, hardware, seeds, beta,
-    server_lr, and — on the jnp path — scaling_rule, which is a traced
-    per-cell ``lax.switch`` operand) varies freely within a batch; the
-    Pallas sweep kernel is compiled per rule, so kernel-backed cells split
-    by rule."""
-    return (cfg.benchmark, cfg.local_steps, cfg.local_batch, cfg.local_lr,
-            cfg.prox_mu, cfg.rounds, cfg.eval_every, cfg.aggregator,
-            cfg.use_agg_kernel,
-            cfg.scaling_rule if cfg.use_agg_kernel else None)
+    server_lr, target_accuracy, and — on the jnp path — scaling_rule, which
+    is a traced per-cell ``lax.switch`` operand) varies freely within a
+    batch; the Pallas sweep kernel is compiled per rule, so kernel-backed
+    cells split by rule.  Fused and per-stage cells never share a batch."""
+    return pipeline_key(cfg) + (cfg.fused_rounds,)
 
 
 @functools.lru_cache(maxsize=8)
@@ -120,6 +126,7 @@ class SweepRunner:
     cells: Sequence[Cell]
     progress: bool = False
     substrate_cache: Optional[dict] = None
+    last_stats: Optional[dict] = None     # fused-pipeline transfer/dispatch stats
 
     def __post_init__(self):
         for c in self.cells:
@@ -151,8 +158,32 @@ class SweepRunner:
     # ------------------------------------------------------------------
     def _run_batch(self, batch: Sequence[Cell]):
         cfgs = [c.config for c in batch]
-        cfg0 = cfgs[0]
         sims = [Simulator(cfg, substrate=self.substrate(cfg)) for cfg in cfgs]
+        if cfgs[0].fused_rounds:        # uniform within a compat batch
+            pipe = RoundPipeline(sims, progress=self.progress)
+            accts = pipe.run()
+            stats = pipe.stats.as_dict()
+            if self.last_stats is None:
+                self.last_stats = stats
+            else:                       # accumulate across compat batches
+                for k in ("rounds", "h2d_bytes", "d2h_bytes", "init_h2d_bytes"):
+                    self.last_stats[k] += stats[k]
+                for k, v in stats["dispatches"].items():
+                    self.last_stats["dispatches"][k] = \
+                        self.last_stats["dispatches"].get(k, 0) + v
+                # re-derive the per-round views from the merged counters
+                per_round = max(self.last_stats["rounds"], 1)
+                self.last_stats["dispatches_per_round"] = round(
+                    sum(self.last_stats["dispatches"].values()) / per_round, 3)
+                for k in ("h2d_bytes", "d2h_bytes"):
+                    self.last_stats[f"{k}_per_round"] = round(
+                        self.last_stats[k] / per_round)
+            return accts
+        return self._run_batch_stages(sims, cfgs)
+
+    def _run_batch_stages(self, sims, cfgs):
+        """The PR-2 per-stage batched executor (``fused_rounds=False``)."""
+        cfg0 = cfgs[0]
         s_total = len(sims)
         spec = sims[0]._flat_spec
         d = len(np.asarray(sims[0].flat_params))
@@ -176,8 +207,12 @@ class SweepRunner:
         beta = np.array([cfg.beta for cfg in cfgs], np.float32)
         lr_vec = np.array([cfg.server_lr for cfg in cfgs], np.float32)
 
+        done = [False] * s_total
         for r in range(cfg0.rounds):
-            plans = [sim._begin_round(r) for sim in sims]
+            if all(done):
+                break
+            plans = [None if done[i] else sim._begin_round(r)
+                     for i, sim in enumerate(sims)]
             live = [i for i in range(s_total) if plans[i] is not None]
             if not live:
                 continue
@@ -251,6 +286,9 @@ class SweepRunner:
                     r, plans[i].t_now, t_end, len(plans[i].chosen), n_fresh,
                     n_stale, acc_loss=(acc[i], loss[i]) if acc is not None else None,
                     progress=self.progress)
+                if sims[i]._target_reached():
+                    sims[i].acct.stopped_early = True
+                    done[i] = True
 
         accts = []
         for i, sim in enumerate(sims):

@@ -1,0 +1,98 @@
+"""Accuracy-target early stop: resource accrual freezes at the stop round,
+summaries match a serial run truncated at the same round, and mixed
+finished/live cells in one sweep batch stay parity-correct as the lockstep
+buckets shrink."""
+import dataclasses
+
+import numpy as np
+
+from repro.sim import SimConfig, Simulator
+from repro.sweeps import Cell, SweepRunner
+from repro.sweeps.runner import summaries_equal
+
+BASE = dict(n_learners=40, rounds=30, eval_every=3, n_target=5,
+            mapping="label_uniform", saa=True)
+
+# this config crosses ~0.5 accuracy around round 20 of 30, so the target
+# stops several eval windows before the round budget
+TARGET = 0.45
+
+
+def _cells(*cfgs):
+    return [Cell(name=f"cell{i}", coords=(("seed", c.seed),), config=c)
+            for i, c in enumerate(cfgs)]
+
+
+def test_engine_stops_at_first_target_eval():
+    cfg = SimConfig(seed=0, target_accuracy=TARGET, **BASE)
+    acct = Simulator(cfg).run()
+    s = acct.summary()
+    assert s["stopped_early"], s
+    assert s["rounds"] < BASE["rounds"]
+    last = acct.records[-1]
+    assert last.accuracy == last.accuracy and last.accuracy >= TARGET
+    # the stop round is an eval round — earlier rounds never trigger
+    for rec in acct.records[:-1]:
+        assert not (rec.accuracy == rec.accuracy and rec.accuracy >= TARGET
+                    and rec is not acct.records[-1])
+
+
+def test_early_stop_prefix_matches_untargeted_run():
+    """A targeted run is the untargeted run truncated at the stop round:
+    identical per-round records up to and including the stop round, and no
+    resource accrual afterwards."""
+    cfg = SimConfig(seed=0, target_accuracy=TARGET, **BASE)
+    full = Simulator(dataclasses.replace(cfg, target_accuracy=None)).run()
+    part = Simulator(cfg).run()
+    n = len(part.records)
+    assert n < len(full.records)
+    for rp, rf in zip(part.records, full.records[:n]):
+        assert (rp.sim_time, rp.n_fresh, rp.n_stale, rp.resource_used,
+                rp.resource_wasted) == \
+               (rf.sim_time, rf.n_fresh, rf.n_stale, rf.resource_used,
+                rf.resource_wasted)
+        assert (rp.accuracy == rf.accuracy
+                or (rp.accuracy != rp.accuracy and rf.accuracy != rf.accuracy))
+    # resource_used frozen at the stop round (in-flight work may still be
+    # marked wasted at finalize, but nothing new is charged)
+    assert part.resource_used == full.records[n - 1].resource_used
+
+
+def test_early_stop_fused_flat_parity():
+    cfg = SimConfig(seed=1, target_accuracy=TARGET, **BASE)
+    fused = Simulator(cfg).run().summary()
+    flat = Simulator(dataclasses.replace(cfg, fused_rounds=False)).run().summary()
+    assert summaries_equal(dict(fused), dict(flat)), (fused, flat)
+
+
+def test_mixed_finished_live_batch_matches_serial():
+    """One batch mixing cells that stop at different rounds (and one that
+    never stops): every cell's summary is bit-identical to its serial run,
+    so shrinking the lockstep batch never perturbs the surviving cells."""
+    cfgs = [
+        SimConfig(seed=0, target_accuracy=TARGET, **BASE),
+        SimConfig(seed=0, target_accuracy=None, **BASE),          # never stops
+        SimConfig(seed=1, target_accuracy=TARGET, selector="priority", **BASE),
+        SimConfig(seed=0, target_accuracy=1.1, **BASE),           # unreachable
+    ]
+    batched = SweepRunner(_cells(*cfgs)).run()
+    stopped = [r.summary["stopped_early"] for r in batched]
+    assert any(stopped) and not all(stopped), stopped
+    for res, cfg in zip(batched, cfgs):
+        serial = Simulator(cfg).run().summary()
+        assert summaries_equal(dict(res.summary), dict(serial)), \
+            (res.summary, serial)
+
+
+def test_finished_cells_stop_accruing_resource():
+    """After a cell stops, later rounds of the surviving batch add nothing
+    to its accounting."""
+    cfgs = [SimConfig(seed=0, target_accuracy=TARGET, **BASE),
+            SimConfig(seed=0, target_accuracy=None, **BASE)]
+    batched = SweepRunner(_cells(*cfgs)).run()
+    es, full = batched[0], batched[1]
+    assert es.summary["stopped_early"] and not full.summary["stopped_early"]
+    assert es.summary["rounds"] < full.summary["rounds"]
+    assert es.summary["resource_used"] < full.summary["resource_used"]
+    # and its records end at the stop round
+    assert len(es.acct.records) == es.summary["rounds"]

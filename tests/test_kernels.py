@@ -73,6 +73,33 @@ def test_fused_staleness_apply_in_place_step():
                                rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.parametrize("rule", ["equal", "relay"])
+def test_sweep_staleness_apply_matches_aggregate_kernel(rule):
+    """Sweep-axis fused server step == the sweep aggregate kernel's result
+    applied with per-cell lr (same blockwise partials math, params buffer
+    aliased input->output), and an all-invalid cell keeps its bits."""
+    rng = np.random.default_rng(7)
+    S, n, D = 3, 6, 4096 + 33
+    U = rng.standard_normal((S, n, D)).astype(np.float32)
+    params = rng.standard_normal((S, D)).astype(np.float32)
+    fresh = rng.random((S, n)) < 0.5
+    fresh[:, 0] = True
+    tau = np.where(fresh, 0, rng.integers(1, 5, (S, n))).astype(np.int32)
+    valid = np.ones((S, n), bool)
+    valid[2] = False                                  # all-invalid cell
+    beta = np.array([0.2, 0.35, 0.5], np.float32)
+    lr = np.array([1.0, 0.5, 2.0], np.float32)
+    agg_k, w_k = agg_ops.sweep_staleness_aggregate(U, fresh, tau, valid=valid,
+                                                   rule=rule, beta=beta)
+    new_p, w_a = agg_ops.sweep_staleness_apply(params, U, fresh, tau,
+                                               valid=valid, rule=rule,
+                                               beta=beta, server_lr=lr)
+    np.testing.assert_array_equal(np.asarray(w_a), np.asarray(w_k))
+    np.testing.assert_array_equal(
+        np.asarray(new_p), params + lr[:, None] * np.asarray(agg_k))
+    np.testing.assert_array_equal(np.asarray(new_p)[2], params[2])
+
+
 def test_staleness_agg_deviation_partials():
     from repro.kernels.staleness_agg.staleness_agg import deviation_partials
     from repro.kernels.staleness_agg.ref import deviation_partials_ref

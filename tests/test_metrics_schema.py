@@ -7,7 +7,7 @@ from repro.sim.metrics import SUMMARY_KEYS, Accounting, RoundRecord, SimSummary
 
 EXPECTED_KEYS = ("rounds", "sim_time", "resource_used", "resource_wasted",
                  "waste_fraction", "unique_participants", "final_accuracy",
-                 "best_accuracy")
+                 "best_accuracy", "stopped_early")
 
 
 def test_summary_keys_are_pinned():
@@ -37,6 +37,9 @@ def test_populated_summary_schema_and_types():
     assert s["sim_time"] == 55.0
     assert s["waste_fraction"] == 20.0 / 120.0
     assert s["final_accuracy"] == 0.5 == s["best_accuracy"]
+    assert s["stopped_early"] is False
+    acct.stopped_early = True
+    assert acct.summary()["stopped_early"] is True
 
 
 def test_simulator_summary_conforms():
@@ -44,4 +47,4 @@ def test_simulator_summary_conforms():
                             n_target=3)).run().summary()
     assert tuple(s) == EXPECTED_KEYS
     for k in EXPECTED_KEYS:
-        assert isinstance(s[k], (int, float)), k
+        assert isinstance(s[k], (int, float)), k   # bool is an int subtype

@@ -1,0 +1,103 @@
+"""Property: the fused device-resident round pipeline (single dispatch per
+round, device stale cache, in-program batch gather, fused aggregate+apply)
+reproduces the per-stage flat path bit for bit — full summary, accuracy
+included — across selectors, settings, aggregators and scaling rules.
+
+Also pins the pipeline's hot-path hygiene: the round loop runs clean under
+``jax.transfer_guard("disallow")`` (every upload is an explicit
+device_put), one round program dispatch per round, and donation safety
+(running twice from fresh Simulators gives identical results).
+"""
+import dataclasses
+
+from _hypothesis_compat import given, settings, st
+from repro.sim import SimConfig, Simulator
+from repro.sim.pipeline import RoundPipeline
+from repro.sweeps.runner import summaries_equal
+
+BASE = dict(n_learners=30, rounds=6, eval_every=3, n_target=4,
+            mapping="label_uniform")
+
+
+def _parity(cfg_fused: SimConfig):
+    cfg_flat = dataclasses.replace(cfg_fused, fused_rounds=False)
+    fused = Simulator(cfg_fused).run()
+    flat = Simulator(cfg_flat).run()
+    assert summaries_equal(dict(fused.summary()), dict(flat.summary())), \
+        (cfg_fused, fused.summary(), flat.summary())
+    # the full per-round schedule must match, not just the summary
+    for rf, rl in zip(fused.records, flat.records):
+        assert (rf.sim_time, rf.n_selected, rf.n_fresh, rf.n_stale,
+                rf.resource_used, rf.resource_wasted) == \
+               (rl.sim_time, rl.n_selected, rl.n_fresh, rl.n_stale,
+                rl.resource_used, rl.resource_wasted)
+
+
+@settings(max_examples=8, deadline=None)
+@given(selector=st.sampled_from(["random", "priority", "safa", "oort"]),
+       saa=st.booleans(),
+       setting=st.sampled_from(["OC", "DL"]),
+       rule=st.sampled_from(["relay", "dynsgd", "equal"]),
+       seed=st.integers(0, 2))
+def test_fused_rounds_match_per_stage_path(selector, saa, setting, rule, seed):
+    _parity(SimConfig(selector=selector, saa=saa, setting=setting,
+                      scaling_rule=rule, seed=seed, deadline=60.0, **BASE))
+
+
+def test_fused_yogi_and_apt_match():
+    _parity(SimConfig(selector="priority", saa=True, apt=True,
+                      aggregator="yogi", seed=1, **BASE))
+
+
+def test_fused_staleness_threshold_match():
+    _parity(SimConfig(selector="safa", saa=True, staleness_threshold=1,
+                      seed=0, **BASE))
+
+
+def test_round_loop_is_transfer_clean():
+    """The fused hot loop performs no implicit host transfers: the round
+    loop runs to completion under jax.transfer_guard('disallow'), with one
+    round-program dispatch per executed round and only explicit uploads."""
+    cfg = SimConfig(selector="priority", saa=True, seed=0, **BASE)
+    Simulator(cfg).run()                     # warm compiles outside the guard
+    pipe = RoundPipeline([Simulator(cfg)])
+    accts = pipe.run(transfer_guard=True)
+    stats = pipe.stats.as_dict()
+    assert stats["dispatches"]["round"] == stats["rounds"] > 0
+    assert accts[0].summary()["rounds"] > 0
+    # per-round host traffic is index arrays only — a few KB, far below the
+    # size of even a single flat update row
+    d = len(Simulator(cfg).flat_params)
+    assert stats["h2d_bytes_per_round"] < min(64 * 1024, d * 4)
+
+
+def test_donated_buffers_fresh_runs_identical():
+    """Donation must never leak state between runs: two fresh Simulators of
+    the same config produce identical summaries."""
+    cfg = SimConfig(selector="random", saa=True, seed=3, **BASE)
+    a = Simulator(cfg).run().summary()
+    b = Simulator(cfg).run().summary()
+    assert summaries_equal(dict(a), dict(b))
+
+
+def test_oort_feedback_fetches_stat_utils():
+    """Oort is the only selector that consumes the per-row stat-utility
+    feedback; with an Oort cell the pipeline fetches it and the selector's
+    utility table fills in (matching the per-stage path bit for bit, which
+    the parity property above already asserts)."""
+    cfg = SimConfig(selector="oort", saa=True, seed=0, **BASE)
+    sim = Simulator(cfg)
+    sim.run()
+    assert len(sim.selector._stat_util) > 0
+    assert all(v >= 0.0 for v in sim.selector._stat_util.values())
+
+
+def test_pipeline_rejects_incompatible_batch():
+    c1 = SimConfig(seed=0, **BASE)
+    c2 = dataclasses.replace(c1, local_lr=0.01)
+    try:
+        RoundPipeline([Simulator(c1), Simulator(c2)])
+    except AssertionError as e:
+        assert "incompatible" in str(e)
+    else:
+        raise AssertionError("incompatible batch accepted")

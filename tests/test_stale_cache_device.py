@@ -1,0 +1,134 @@
+"""Device-resident stale cache: slot accounting, eviction order, mask
+correctness, and value parity with a host-list reference model under
+hypothesis-driven round traces (real hypothesis when installed, the
+deterministic shim otherwise)."""
+import numpy as np
+
+from _hypothesis_compat import given, settings, st
+from repro.core.stale_cache import CacheOverflow, DeviceStaleCache
+
+D = 8
+
+
+def _row(rng):
+    return rng.standard_normal(D).astype(np.float32)
+
+
+def test_alloc_free_roundtrip_and_masks():
+    c = DeviceStaleCache(D, capacity=4)
+    s1, ev = c.alloc(3)
+    assert ev == [] and s1 == [0, 1, 2] and len(c) == 3
+    assert list(np.nonzero(c.valid_mask())[0]) == [0, 1, 2]
+    c.free([1])
+    assert len(c) == 2 and not c.valid_mask()[1]
+    s2, _ = c.alloc(2)                      # refills 1 (LIFO) then 3
+    assert set(s2) == {1, 3} and len(c) == 4
+    assert c.valid_mask().all()
+    assert c.trash_slot == 4
+
+
+def test_rows_roundtrip_exact_bits():
+    rng = np.random.default_rng(0)
+    c = DeviceStaleCache(D, capacity=8)
+    slots, _ = c.alloc(5)
+    rows = np.stack([_row(rng) for _ in slots])
+    c.put(slots, rows)
+    np.testing.assert_array_equal(c.gather(slots), rows)
+    # overwrite one slot; others keep their exact bits
+    c.put([slots[2]], rows[:1])
+    np.testing.assert_array_equal(c.gather([slots[2]])[0], rows[0])
+    np.testing.assert_array_equal(c.gather([slots[0]])[0], rows[0])
+    np.testing.assert_array_equal(c.gather([slots[4]])[0], rows[4])
+
+
+def test_growth_preserves_rows_and_trash_moves():
+    rng = np.random.default_rng(1)
+    c = DeviceStaleCache(D, capacity=2, grow=True)
+    slots, _ = c.alloc(2)
+    rows = np.stack([_row(rng), _row(rng)])
+    c.put(slots, rows)
+    more, ev = c.alloc(3)                   # forces growth 2 -> 4 -> 8
+    assert ev == [] and c.capacity == 8 and c.grow_events == 2
+    assert c.trash_slot == 8
+    np.testing.assert_array_equal(c.gather(slots), rows)
+    assert len(set(slots + more)) == 5      # no slot handed out twice
+
+
+def test_eviction_order_is_insertion_order():
+    c = DeviceStaleCache(D, capacity=3, grow=False)
+    a, _ = c.alloc(3)
+    _, ev1 = c.alloc(1)                     # evicts the oldest: a[0]
+    assert ev1 == [a[0]]
+    _, ev2 = c.alloc(2)                     # then a[1], a[2]
+    assert ev2 == [a[1], a[2]]
+    with_room, ev3 = c.alloc(0)
+    assert with_room == [] and ev3 == []
+
+
+def test_eviction_overflow_raises():
+    c = DeviceStaleCache(D, capacity=2, grow=False)
+    c.alloc(2)
+    try:
+        c.alloc(3)                          # can't evict enough for 3 > cap
+    except CacheOverflow:
+        pass
+    else:
+        raise AssertionError("expected CacheOverflow")
+
+
+def test_double_free_raises():
+    c = DeviceStaleCache(D, capacity=2)
+    s, _ = c.alloc(1)
+    c.free(s)
+    try:
+        c.free(s)
+    except KeyError:
+        pass
+    else:
+        raise AssertionError("double free must raise")
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000), capacity=st.integers(2, 6),
+       grow=st.booleans(), ops=st.integers(10, 40))
+def test_random_round_traces_match_host_model(seed, capacity, grow, ops):
+    """Random put/land(free)/evict traces: the device cache's live contents
+    and masks always match a host-side dict model, and every gathered row
+    is bit-identical to what was put."""
+    rng = np.random.default_rng(seed)
+    c = DeviceStaleCache(D, capacity=capacity, grow=grow)
+    model = {}                              # slot -> row (host reference)
+    order = []                              # insertion order of live slots
+    for _ in range(ops):
+        if model and rng.random() < 0.4:
+            # land: free a random live slot
+            k = min(len(model), 1 + int(rng.integers(2)))
+            victims = [order.pop(int(rng.integers(len(order))))
+                       for _ in range(k)]
+            c.free(victims)
+            for v in victims:
+                del model[v]
+        else:
+            k = 1 + int(rng.integers(2))
+            if not grow and k > c.capacity:
+                continue
+            slots, evicted = c.alloc(k)
+            assert evicted == order[:len(evicted)]   # oldest-first eviction
+            for e in evicted:
+                del model[e]
+            order = order[len(evicted):]
+            rows = np.stack([_row(rng) for _ in slots])
+            c.put(slots, rows)
+            for s_, r_ in zip(slots, rows):
+                model[s_] = r_
+                order.append(s_)
+        # invariants after every op
+        assert len(c) == len(model)
+        assert set(c.occupied()) == set(model)
+        assert c.occupied() == order
+        mask = c.valid_mask()
+        assert set(np.nonzero(mask)[0]) == set(model)
+        if model:
+            live = sorted(model)
+            np.testing.assert_array_equal(c.gather(live),
+                                          np.stack([model[s_] for s_ in live]))
