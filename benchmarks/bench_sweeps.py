@@ -1,5 +1,6 @@
 """Sweep throughput benchmark: fused batched executor vs the per-stage
-batched executor vs serial Simulator.run, plus accuracy-target early stop.
+batched executor vs serial Simulator.run, plus accuracy-target early stop
+and the sharded / multi-round-chunked execution variants.
 
 Times a selector x SAA x hardware x seed grid at S in {4, 16, 64} cells
 (n_learners=100) through three executions:
@@ -17,8 +18,13 @@ must be bit-identical between the fused batched run and the serial run.
 An early-stop row then re-runs the largest grid with ``target_accuracy``
 set: cells that reach the target drop out of the lockstep batch (shrinking
 bucket-padded repacking), and the row records the wall-clock saving and
-per-cell parity against early-stopped serial runs.  Writes
-``BENCH_sweeps.json`` at the repo root for the perf trajectory.
+per-cell parity against early-stopped serial runs.  Variant rows re-run
+the largest grid sharded over the local device mesh (``shard=True``),
+chunked (``rounds_per_dispatch=8``: K rounds per dispatch via lax.scan),
+and both combined — each parity-asserted against the plain batched
+results.  Writes ``BENCH_sweeps.json`` at the repo root for the perf
+trajectory; ``benchmarks/check_regression.py`` compares a fresh smoke run
+against the checked-in rows.
 
 Usage:
   PYTHONPATH=src python -m benchmarks.bench_sweeps             # full sweep
@@ -34,7 +40,10 @@ import pathlib
 import sys
 import time
 
+import jax
+
 from repro.sweeps import SweepSpec, SweepRunner, assert_parity, run_serial
+from repro.sweeps.runner import summaries_equal
 
 ROUNDS, EVAL_EVERY = 12, 6
 
@@ -83,12 +92,16 @@ def _run_batched(cells):
     return (results, runner.last_stats), time.time() - t0
 
 
-def bench(sizes, n_learners: int, rounds: int) -> list[dict]:
-    out = []
+def bench(sizes, n_learners: int, rounds: int) -> tuple[list[dict], dict]:
+    """Returns (rows, measured) where ``measured[s_cells]`` is the fused
+    run's (results, wall) — reusable as a variant baseline when the variant
+    grid is the same grid (saves re-measuring it)."""
+    out, measured = [], {}
     for s_cells in sizes:
         cells = grid(s_cells, n_learners, rounds).expand()
         assert len(cells) == s_cells
         (results, stats), fused_wall = _best_of(lambda: _run_batched(cells))
+        measured[s_cells] = (results, fused_wall)
         (_, _), stage_wall = _best_of(
             lambda: _run_batched(_stage_cells(cells)))
         serial_summaries, serial_wall = _best_of(lambda: run_serial(cells))
@@ -110,7 +123,7 @@ def bench(sizes, n_learners: int, rounds: int) -> list[dict]:
         print(f"sweeps/S={s_cells},{1e3 * fused_wall / s_cells:.0f},"
               f"batched={fused_wall:.2f}s;stages={stage_wall:.2f}s;"
               f"serial={serial_wall:.2f}s;speedup={row['speedup']}x")
-    return out
+    return out, measured
 
 
 def bench_early_stop(s_cells: int, n_learners: int, rounds: int,
@@ -147,19 +160,101 @@ def bench_early_stop(s_cells: int, n_learners: int, rounds: int,
     return row
 
 
+def bench_variants(s_cells: int, n_learners: int, rounds: int,
+                   baseline=None) -> list[dict]:
+    """Sharded / chunked execution variants, each parity-asserted (bitwise,
+    per cell) against the plain batched run of the same grid.
+
+    The grid is **Oort-free**: an Oort cell's per-round stat-utility
+    feedback forces ``rounds_per_dispatch=1`` for its whole compat batch,
+    which would silently turn the chunked variants into K=1 re-measurements.
+    On a single-device host the sharded variants run the shard_map path on
+    a trivial 1-device mesh (the multi-device CI leg forces 4 CPU devices
+    via ``XLA_FLAGS=--xla_force_host_platform_device_count``); chunking
+    dispatches ``rounds_per_dispatch=8`` rounds per launch, so its win
+    tracks per-dispatch overhead — small on CPU, the point on real
+    accelerator backends.
+    """
+    axes = {
+        4: {"selector": ["random", "priority"], "saa": [False, True]},
+        16: {"selector": ["random", "priority"], "saa": [False, True],
+             "hardware": ["HS1", "HS2", "HS3", "HS4"]},
+        64: {"selector": ["random", "priority", "safa"],
+             "saa": [False, True], "hardware": ["HS1", "HS2", "HS3", "HS4"]},
+    }[s_cells]
+    seeds = (0, 1) if s_cells == 64 else (0,)
+    base = dict(n_learners=n_learners, rounds=rounds, eval_every=EVAL_EVERY,
+                mapping="label_uniform")
+    cells = SweepSpec(axes=axes, base=base, seeds=seeds).expand()
+    # the S=4 variant grid IS grid(4), so bench() already measured its
+    # baseline; the larger variant grid is Oort-free and needs its own
+    if baseline is not None and len(baseline[0]) == len(cells):
+        baseline, base_wall = baseline
+    else:
+        (baseline, _), base_wall = _best_of(lambda: _run_batched(cells))
+
+    def chunked(cs):
+        return [dataclasses.replace(
+            c, config=dataclasses.replace(c.config, rounds_per_dispatch=8))
+            for c in cs]
+
+    variants = {
+        "sharded": (cells, dict(shard=True)),
+        "chunked": (chunked(cells), {}),
+        "sharded_chunked": (chunked(cells), dict(shard=True)),
+    }
+    out = []
+    for name, (vcells, kw) in variants.items():
+        def run():
+            t0 = time.time()
+            runner = SweepRunner(vcells, **kw)
+            return (runner.run(), runner.last_stats), time.time() - t0
+        (results, stats), wall = _best_of(run)
+        for a, b in zip(baseline, results):
+            assert summaries_equal(dict(a.summary), dict(b.summary)), \
+                f"{name} parity violation at {a.cell.name}"
+        row = {
+            "variant": name,
+            "s_cells": len(vcells),
+            "n_learners": n_learners,
+            "rounds": rounds,
+            "n_devices": len(jax.devices()),
+            "rounds_per_dispatch": stats["rounds_per_dispatch"],
+            "batched_wall_s": round(wall, 3),
+            "baseline_wall_s": round(base_wall, 3),
+            "speedup_vs_baseline": round(base_wall / max(wall, 1e-9), 2),
+            "dispatches_per_round": stats["dispatches_per_round"],
+            "parity": True,
+        }
+        out.append(row)
+        print(f"sweeps_{name}/S={len(vcells)},{1e3 * wall / len(vcells):.0f},"
+              f"wall={wall:.2f}s;baseline={base_wall:.2f}s;"
+              f"devices={row['n_devices']};"
+              f"disp_per_round={row['dispatches_per_round']}")
+    return out
+
+
 def main() -> None:
     smoke = "--smoke" in sys.argv
     profile = "--profile" in sys.argv
     sizes = (4,) if smoke else (4, 16, 64)
-    n_learners = 60 if smoke else 100
-    rounds = 6 if smoke else ROUNDS
-    rows = bench(sizes, n_learners, rounds)
+    # smoke shares the full run's S=4 grid config, so the checked-in full
+    # rows double as the regression guard's baseline for CI smoke runs
+    n_learners, rounds = 100, ROUNDS
+    rows, measured = bench(sizes, n_learners, rounds)
+    # early-stop and variant rows cover the smallest and largest grid: the
+    # small grid is the config CI smoke re-measures (the regression guard
+    # matches rows by config), the large one is the headline measurement
+    es_sizes = (sizes[0],) if len(sizes) == 1 else (sizes[0], sizes[-1])
     result = {
         "bench": "sweeps",
         "mode": "smoke" if smoke else "full",
         "sweep": rows,
-        "early_stop": [bench_early_stop(sizes[-1], n_learners, rounds,
-                                        target=0.1 if smoke else 0.2)],
+        "early_stop": [bench_early_stop(s, n_learners, rounds, target=0.2)
+                       for s in es_sizes],
+        "variants": [row for s in es_sizes
+                     for row in bench_variants(s, n_learners, rounds,
+                                               baseline=measured.get(s))],
     }
     if profile:
         result["pipeline_profile"] = rows[-1]["pipeline_stats"]

@@ -1,0 +1,126 @@
+"""Benchmark regression guard: compare a fresh (smoke) bench run against
+the checked-in ``BENCH_*.json`` baselines.
+
+Philosophy: **fail on parity mismatches, not on noise.**  Parity flags in
+the *current* files must all be true — a false one means the executors
+diverged, which no amount of scheduler noise excuses.  Performance metrics
+(engine rounds/sec, sweep wall seconds) are compared only between rows
+whose configuration keys match exactly, with a generous multiplicative
+tolerance (default 2x) that absorbs CI-runner variance; rows without a
+matching baseline are reported and skipped.  Metrics where bigger is
+better (rounds/sec) fail when ``current < baseline / tol``; smaller-is-
+better metrics (wall seconds) fail when ``current > baseline * tol``.
+
+Usage (the CI copies the checked-in files aside before the benches
+overwrite them):
+
+  cp BENCH_engine.json BENCH_sweeps.json .bench_baseline/
+  PYTHONPATH=src python -m benchmarks.bench_engine --smoke
+  PYTHONPATH=src python -m benchmarks.bench_sweeps --smoke
+  PYTHONPATH=src python -m benchmarks.check_regression \
+      --baseline-dir .bench_baseline [--current-dir .] [--tolerance 2.0]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+# (file, section, match keys, metric, higher_is_better) — one spec per
+# comparable row family
+COMPARISONS = [
+    ("BENCH_engine.json", "engine", ("n_learners", "rounds"),
+     lambda r: r["fused"]["rounds_per_sec"], True, "fused rounds/sec"),
+    ("BENCH_engine.json", "engine", ("n_learners", "rounds"),
+     lambda r: r["flat"]["rounds_per_sec"], True, "flat rounds/sec"),
+    ("BENCH_sweeps.json", "sweep", ("s_cells", "n_learners", "rounds"),
+     lambda r: r["batched_wall_s"], False, "batched wall s"),
+    ("BENCH_sweeps.json", "early_stop",
+     ("s_cells", "n_learners", "rounds", "target_accuracy"),
+     lambda r: r["batched_wall_s"], False, "early-stop wall s"),
+    ("BENCH_sweeps.json", "variants",
+     ("variant", "s_cells", "n_learners", "rounds", "n_devices"),
+     lambda r: r["batched_wall_s"], False, "variant wall s"),
+]
+
+
+def _walk_parity(node, path, failures):
+    """Every ``parity`` flag anywhere in the current payload must be true."""
+    if isinstance(node, dict):
+        for k, v in node.items():
+            if k == "parity" and v is not True:
+                failures.append(f"parity flag false at {path}")
+            _walk_parity(v, f"{path}.{k}", failures)
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            _walk_parity(v, f"{path}[{i}]", failures)
+
+
+def _row_key(row: dict, keys: tuple):
+    try:
+        return tuple(row[k] for k in keys)
+    except KeyError:
+        return None
+
+
+def check(baseline_dir: pathlib.Path, current_dir: pathlib.Path,
+          tolerance: float) -> int:
+    failures, skipped, compared = [], [], []
+    current_cache = {}
+    for fname, section, keys, metric, hib, label in COMPARISONS:
+        cur_path = current_dir / fname
+        base_path = baseline_dir / fname
+        if not cur_path.exists():
+            failures.append(f"missing current file {cur_path}")
+            continue
+        if fname not in current_cache:
+            current_cache[fname] = json.loads(cur_path.read_text())
+            _walk_parity(current_cache[fname], fname, failures)
+        cur = current_cache[fname]
+        if not base_path.exists():
+            skipped.append(f"{fname}:{section} — no baseline file")
+            continue
+        base = json.loads(base_path.read_text())
+        base_rows = {_row_key(r, keys): r for r in base.get(section, [])}
+        for row in cur.get(section, []):
+            key = _row_key(row, keys)
+            ref = base_rows.get(key)
+            tag = f"{section}{list(key) if key else ''} {label}"
+            if ref is None:
+                skipped.append(f"{tag} — no matching baseline row")
+                continue
+            c, b = metric(row), metric(ref)
+            if hib:
+                ok, detail = c >= b / tolerance, f"{c} vs baseline {b}"
+            else:
+                ok, detail = c <= b * tolerance, f"{c}s vs baseline {b}s"
+            (compared if ok else failures).append(
+                f"{tag}: {detail}" + ("" if ok else
+                                      f" (beyond {tolerance}x tolerance)"))
+
+    for line in compared:
+        print(f"OK    {line}")
+    for line in skipped:
+        print(f"SKIP  {line}")
+    for line in failures:
+        print(f"FAIL  {line}", file=sys.stderr)
+    print(f"# {len(compared)} compared, {len(skipped)} skipped, "
+          f"{len(failures)} failures (tolerance {tolerance}x)")
+    return 1 if failures else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline-dir", required=True, type=pathlib.Path,
+                    help="directory holding the checked-in BENCH_*.json")
+    ap.add_argument("--current-dir", default=".", type=pathlib.Path,
+                    help="directory holding the fresh bench outputs")
+    ap.add_argument("--tolerance", type=float, default=2.0,
+                    help="multiplicative noise tolerance (default 2x)")
+    args = ap.parse_args(argv)
+    return check(args.baseline_dir, args.current_dir, args.tolerance)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

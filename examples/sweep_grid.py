@@ -7,16 +7,22 @@ the resource-to-accuracy comparison the paper reports in Figs. 6/7.
 
   PYTHONPATH=src python examples/sweep_grid.py            # full demo grid
   PYTHONPATH=src python examples/sweep_grid.py --smoke    # tiny CI grid
+  PYTHONPATH=src python examples/sweep_grid.py --smoke --sharded
+      # sweep axis over the local device mesh (forced-multi-device CI leg)
+
+``--smoke`` re-runs every cell serially and **exits non-zero** on any
+per-cell metric divergence — the CI step is a real parity gate, not a demo.
 """
 import sys
 import time
 
-from repro.sweeps import SweepRunner, SweepSpec
+from repro.sweeps import SweepRunner, SweepSpec, assert_parity, run_serial
 from repro.sweeps.report import savings_line, text_table
 
 
-def main():
+def main() -> int:
     smoke = "--smoke" in sys.argv
+    sharded = "--sharded" in sys.argv
     spec = SweepSpec(
         axes={"selector": ["random", "priority"] if smoke
               else ["random", "oort", "priority", "safa"],
@@ -29,19 +35,29 @@ def main():
         seeds=(0,) if smoke else (0, 1))
     cells = spec.expand()
     print(f"=== sweep: {len(cells)} cells, shared-seed pairing over "
-          f"{len(spec.seeds)} seed(s) ===")
+          f"{len(spec.seeds)} seed(s){' [sharded]' if sharded else ''} ===")
 
     t0 = time.time()
-    results = SweepRunner(cells).run()
+    results = SweepRunner(cells, shard=sharded).run()
     print(f"(batched wall: {time.time() - t0:.1f}s for {len(cells)} "
           f"simulations)\n")
+
+    if smoke:
+        serial_summaries, _ = run_serial(cells)
+        try:
+            assert_parity(results, serial_summaries)
+        except AssertionError as e:
+            print(f"PARITY FAILURE:\n{e}", file=sys.stderr)
+            return 1
+        print("--- per-cell serial parity: OK ---\n")
 
     print("--- resource-to-accuracy (mean over seeds) ---")
     print(text_table(results))
     print()
     print(savings_line(results, {"selector": "priority", "saa": True},
                        {"selector": "random", "saa": False}))
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

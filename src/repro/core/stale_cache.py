@@ -10,7 +10,8 @@ pipeline scatters a round's straggler deltas into their slots and gathers
 landing slots straight into the aggregation operand — the delta never
 leaves the device.
 
-Slot discipline:
+Slot discipline (one implementation, ``_SlotSpace``, shared by the
+single-tensor cache below and the sharded per-shard accounting):
 
 - ``alloc(k)`` reserves ``k`` slots.  With ``grow=True`` (the engine's
   setting) a full cache doubles its capacity — parity with the unbounded
@@ -22,6 +23,9 @@ Slot discipline:
   handed out LIFO; the policy only has to be deterministic — slot choice
   never affects values, because a slot's row is always scatter-written in
   the round its entry is created, before any gather reads it.
+- growth appends slots: existing ids stay valid, and the old scratch/trash
+  row (index ``old capacity``) becomes a data slot whose stale content is
+  irrelevant — every allocated slot is written before it is read.
 - ``valid_mask()`` exposes the occupancy mask over data slots (the scratch
   row is never valid).
 
@@ -43,6 +47,39 @@ class CacheOverflow(RuntimeError):
     """alloc() on a full, non-growing cache with nothing to evict."""
 
 
+class _SlotSpace:
+    """Free-list + insertion-order accounting for one slot space
+    ``[0, capacity)`` — the single home of the slot-discipline invariants
+    documented in the module docstring."""
+
+    def __init__(self, capacity: int):
+        # pop() hands out ascending slot ids for a fresh space
+        self.free = list(range(capacity - 1, -1, -1))
+        self.order: "OrderedDict[int, int]" = OrderedDict()   # slot -> seq
+
+    def __len__(self) -> int:
+        return len(self.order)
+
+    def extend(self, old_capacity: int, new_capacity: int) -> None:
+        """Append the minted slot ids; existing free slots are consumed
+        before the new ones (they sit deeper in the LIFO free list)."""
+        self.free[:0] = range(new_capacity - 1, old_capacity - 1, -1)
+
+    def take(self, seq: int) -> int:
+        s = self.free.pop()
+        self.order[s] = seq
+        return s
+
+    def release(self, slot: int) -> None:
+        del self.order[slot]          # KeyError on double-free: a real bug
+        self.free.append(slot)
+
+    def pop_oldest(self) -> int:
+        old, _ = self.order.popitem(last=False)
+        self.free.append(old)
+        return old
+
+
 class DeviceStaleCache:
     def __init__(self, d: int, capacity: int = 64, grow: bool = True):
         if capacity < 1:
@@ -51,15 +88,13 @@ class DeviceStaleCache:
         self.capacity = int(capacity)
         self.grow = grow
         self.rows = jnp.zeros((self.capacity + 1, self.d), jnp.float32)
-        # pop() hands out ascending slot ids for a fresh cache
-        self._free = list(range(self.capacity - 1, -1, -1))
-        self._order: "OrderedDict[int, int]" = OrderedDict()   # slot -> seq
+        self._space = _SlotSpace(self.capacity)
         self._seq = 0
         self.grow_events = 0
 
     # ------------------------------------------------------------------
     def __len__(self) -> int:
-        return len(self._order)
+        return len(self._space)
 
     @property
     def trash_slot(self) -> int:
@@ -68,11 +103,11 @@ class DeviceStaleCache:
 
     def occupied(self) -> list:
         """Occupied slot ids in insertion (= eviction) order."""
-        return list(self._order)
+        return list(self._space.order)
 
     def valid_mask(self) -> np.ndarray:
         m = np.zeros(self.capacity, bool)
-        occ = list(self._order)
+        occ = list(self._space.order)
         if occ:
             m[occ] = True
         return m
@@ -80,14 +115,12 @@ class DeviceStaleCache:
     # ------------------------------------------------------------------
     def _grow(self):
         old_c = self.capacity
-        # the old scratch row (index old_c) becomes data slot old_c; its
-        # content is irrelevant because every allocated slot is written
-        # before it is read
+        # the old scratch row (index old_c) becomes data slot old_c (see
+        # the module docstring's growth invariant)
         self.rows = jnp.concatenate(
             [self.rows, jnp.zeros((old_c, self.d), self.rows.dtype)])
         self.capacity = 2 * old_c
-        # existing free slots are consumed before the newly minted ones
-        self._free = list(range(self.capacity - 1, old_c - 1, -1)) + self._free
+        self._space.extend(old_c, self.capacity)
         self.grow_events += 1
 
     def alloc(self, k: int) -> tuple:
@@ -98,28 +131,23 @@ class DeviceStaleCache:
         insertion order, whose entries the caller must drop.
         """
         evicted = []
-        while len(self._free) < k:
+        while len(self._space.free) < k:
             if self.grow:
                 self._grow()
-            elif self._order:
-                old, _ = self._order.popitem(last=False)
-                evicted.append(old)
-                self._free.append(old)
+            elif self._space.order:
+                evicted.append(self._space.pop_oldest())
             else:
                 raise CacheOverflow(
                     f"need {k} slots, capacity {self.capacity}, nothing to evict")
         slots = []
         for _ in range(k):
-            s = self._free.pop()
-            self._order[s] = self._seq
+            slots.append(self._space.take(self._seq))
             self._seq += 1
-            slots.append(s)
         return slots, evicted
 
     def free(self, slots) -> None:
         for s in slots:
-            del self._order[s]          # KeyError on double-free: a real bug
-            self._free.append(s)
+            self._space.release(s)
 
     # ------------------------------------------------------------------
     # Host-facing row IO (tests, host-cache interop; the round pipeline
@@ -132,3 +160,76 @@ class DeviceStaleCache:
     def gather(self, slots) -> np.ndarray:
         idx = np.asarray(slots, np.int32)
         return np.asarray(self.rows[idx])
+
+
+class ShardedSlotAccounts:
+    """Host-side slot accounting for a *sharded* stale cache.
+
+    The sharded round pipeline keeps the cache rows as one
+    ``(n_shards, capacity + 1, D)`` tensor sharded over the leading mesh
+    axis; each shard's local slot space ``[0, capacity)`` (plus the local
+    scratch row at index ``capacity``) is an independent ``_SlotSpace``,
+    so a cell's stragglers always live in its own shard and the in-program
+    scatter/gather stays shard-local.
+
+    Capacity is uniform across shards (the device tensor is rectangular):
+    when any shard's allocation outgrows its free list, ``alloc`` doubles
+    ``capacity`` for *every* shard and reports it via the returned ``grew``
+    flag — the pipeline then rebuilds the device tensor (growth appends
+    slots, so existing local slot ids stay valid).  Per-shard discipline
+    is ``DeviceStaleCache``'s ``grow=True`` mode: same ``_SlotSpace``,
+    nothing evicted.
+    """
+
+    def __init__(self, n_shards: int, capacity: int = 64):
+        if n_shards < 1 or capacity < 1:
+            raise ValueError("n_shards and capacity must be >= 1")
+        self.n_shards = int(n_shards)
+        self.capacity = int(capacity)
+        self._spaces = [_SlotSpace(self.capacity)
+                        for _ in range(self.n_shards)]
+        self._seq = 0
+        self.grow_events = 0
+
+    def __len__(self) -> int:
+        return sum(len(sp) for sp in self._spaces)
+
+    @property
+    def trash_slot(self) -> int:
+        """Each shard's local scratch row index."""
+        return self.capacity
+
+    def shard_len(self, shard: int) -> int:
+        return len(self._spaces[shard])
+
+    def _grow(self) -> None:
+        old_c = self.capacity
+        self.capacity = 2 * old_c
+        for sp in self._spaces:
+            sp.extend(old_c, self.capacity)
+        self.grow_events += 1
+
+    def alloc(self, shard: int, k: int) -> tuple:
+        """Reserve ``k`` local slots on ``shard``; returns (slots, grew)."""
+        grew = False
+        while len(self._spaces[shard].free) < k:
+            self._grow()
+            grew = True
+        slots = []
+        for _ in range(k):
+            slots.append(self._spaces[shard].take(self._seq))
+            self._seq += 1
+        return slots, grew
+
+    def free(self, shard: int, slots) -> None:
+        for s in slots:
+            self._spaces[shard].release(s)
+
+    def occupied(self, shard: int) -> list:
+        """Occupied local slot ids on ``shard`` in insertion order."""
+        return list(self._spaces[shard].order)
+
+    def flat_index(self, shard: int, slot: int) -> int:
+        """Row index of (shard, local slot) in the flattened
+        ``(n_shards * (capacity + 1), D)`` view of the cache tensor."""
+        return shard * (self.capacity + 1) + slot

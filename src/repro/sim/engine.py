@@ -165,6 +165,9 @@ class SimConfig:
     fused_rounds: bool = True         # single-dispatch device-resident round pipeline
     target_accuracy: Optional[float] = None   # accuracy-target early stop (eval rounds)
     stale_cache_capacity: int = 64    # initial device stale-cache slots (grows 2x)
+    rounds_per_dispatch: int = 1      # K rounds per device dispatch (lax.scan chunk);
+                                      # host decisions are prescheduled K ahead, chunks
+                                      # break at eval rounds; bit-identical to K=1
 
 
 def substrate_key(cfg: SimConfig) -> tuple:
@@ -618,12 +621,15 @@ class Simulator:
                                                   self.data.y_test)
         return ln.evaluate(self.params, self.data.x_test, self.data.y_test)
 
-    def _record_round(self, r: int, t_start: float, t_end: float,
-                      n_selected: int, n_fresh: int, n_stale: int,
-                      acc_loss=None, progress: bool = False):
-        """Bookkeeping tail of a round: round-duration estimate, RoundRecord,
-        optional evaluation (``acc_loss`` supplies precomputed metrics when a
-        sweep batch evaluated all cells in one call)."""
+    def _advance_round_state(self, r: int, t_start: float, t_end: float,
+                             n_selected: int, n_fresh: int, n_stale: int):
+        """The host part of ``_record_round`` that the *next* round's
+        ``_begin_round`` depends on: round-duration estimate, the appended
+        RoundRecord (accuracy NaN until an evaluation fills it), and the
+        clock.  The chunked pipeline calls this during prescheduling — K
+        rounds ahead of the device dispatch — and fills the eval fields
+        afterwards via ``_fill_round_eval``; values are identical to the
+        unchunked sequence because nothing here reads update values."""
         duration = t_end - t_start
         self.mu = (self.apt.update_round_duration(duration)
                    if self.apt is not None else
@@ -631,15 +637,30 @@ class Simulator:
         rec = RoundRecord(r, t_end, n_selected, n_fresh, n_stale,
                           self.acct.resource_used, self.acct.resource_wasted,
                           len(self.acct.unique))
-        if self.eval_due(r):
-            acc, loss = self._evaluate() if acc_loss is None else acc_loss
-            rec.accuracy, rec.loss = float(acc), float(loss)
-            if progress:
-                print(f"  round {r:4d} t={t_end/60:7.1f}min acc={rec.accuracy:.3f} "
-                      f"used={self.acct.resource_used/60:.0f}min "
-                      f"wasted={100*self.acct.resource_wasted/max(self.acct.resource_used,1e-9):.0f}%")
         self.acct.records.append(rec)
         self._t_now = t_end
+        return rec
+
+    def _fill_round_eval(self, rec, acc, loss, progress: bool = False):
+        """Write an evaluation's metrics into an already-appended record."""
+        rec.accuracy, rec.loss = float(acc), float(loss)
+        if progress:
+            print(f"  round {rec.round_idx:4d} t={rec.sim_time/60:7.1f}min "
+                  f"acc={rec.accuracy:.3f} "
+                  f"used={self.acct.resource_used/60:.0f}min "
+                  f"wasted={100*self.acct.resource_wasted/max(self.acct.resource_used,1e-9):.0f}%")
+
+    def _record_round(self, r: int, t_start: float, t_end: float,
+                      n_selected: int, n_fresh: int, n_stale: int,
+                      acc_loss=None, progress: bool = False):
+        """Bookkeeping tail of a round: round-duration estimate, RoundRecord,
+        optional evaluation (``acc_loss`` supplies precomputed metrics when a
+        sweep batch evaluated all cells in one call)."""
+        rec = self._advance_round_state(r, t_start, t_end, n_selected,
+                                        n_fresh, n_stale)
+        if self.eval_due(r):
+            acc, loss = self._evaluate() if acc_loss is None else acc_loss
+            self._fill_round_eval(rec, acc, loss, progress=progress)
         return rec
 
     def _target_reached(self) -> bool:

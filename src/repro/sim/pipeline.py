@@ -1,4 +1,5 @@
-"""Device-resident round pipeline: ONE jitted dispatch per simulation round.
+"""Device-resident round pipeline: ONE jitted dispatch per simulation round
+(or per K-round chunk), optionally sharded over a sweep-axis device mesh.
 
 ``RoundPipeline`` drives S >= 1 Simulators (the serial engine passes
 ``[self]``; ``repro.sweeps.runner`` passes a compatibility batch) through a
@@ -22,21 +23,48 @@ and the whole round becomes data-independent index plumbing around one
 launch.  All heavy intermediates (the (R, D) delta rows, the stale rows,
 the (G, n, D) aggregation operand) exist only inside the program.
 
+Multi-round chunking (``SimConfig.rounds_per_dispatch`` = K > 1): the host
+state machine is *prescheduled* K rounds ahead — legal because nothing it
+decides reads update values — and the K rounds run as one ``lax.scan`` over
+the round body with the donated params/cache/optimizer buffers threaded
+through the scan carry.  Chunks always break at ``eval_every`` boundaries,
+so evaluation, accuracy-target early stop and (for Oort) the stat-utility
+feedback keep their exact round semantics; per-cell results are
+bit-identical to K=1 (asserted by tests/test_chunked_sharded.py).  An Oort
+selector needs its per-round device feedback before the *next* round's
+selection, so its presence forces K=1.
+
+Sweep-axis sharding (``mesh=`` a 1-D ``jax.sharding.Mesh`` over axis "s",
+see ``repro.sweeps.sharding``): cells are placed in balanced contiguous
+blocks of a ``(n_shards, s_loc + 1, D)`` params tensor (one scratch row per
+shard), the stale cache becomes ``(n_shards, c_loc + 1, D)`` with per-shard
+slot accounting (``ShardedSlotAccounts``), and the chunk program runs under
+``shard_map`` — each shard executes the identical round body on its own
+cells' packed rows, so no collectives appear in the hot loop.  Early-stop
+repacking is shard-aware: when the live set shrinks enough that the
+bucketed per-shard capacity drops, live cells are compacted across shard
+boundaries (stopped cells vacate whole per-shard bucket steps) and the
+state tensors are rebuilt by a resharding gather — pure data movement,
+bit-identical per cell to the unsharded run.
+
 Parity: gathers/scatters are pure data movement, padding rows are masked to
 exact zeros before aggregation (``bucket_pad``'s layout, bit-for-bit), the
 weights+aggregate unit is the same ``weights_and_aggregate_by_id`` the
 batched sweep path has always vmapped, and the server apply is the same
 formula — so per-cell metrics are bit-identical to the per-stage flat path
 and to serial runs (asserted by tests/test_pipeline_parity.py and the
-benchmarks).
+benchmarks), for every (mesh, K) combination.
 
 Donation invariants: the stacked params tensor, the cache rows and the
-optimizer state are donated into every round program — after a ``step`` the
-previous round's buffers are dead and must not be touched; the pipeline is
-their only owner and always replaces its references with the returned
-arrays.  ``Simulator.flat_params`` is stale while a pipeline run is in
-flight and is rewritten at ``finalize``.  Dataset/test tensors are *not*
-donated (read-only, reused every round).
+optimizer state are donated into every round/chunk program — after a
+dispatch the previous buffers are dead and must not be touched; the
+pipeline is their only owner and always replaces its references with the
+returned arrays.  Inside a chunk the same invariant holds step-to-step:
+the scan carry owns the buffers, and host code never observes the
+intermediate rounds' states.  ``Simulator.flat_params`` is stale while a
+pipeline run is in flight and is rewritten at ``finalize``.  Dataset/test
+tensors are *not* donated (read-only, reused every round; replicated
+across the mesh when sharded).
 
 Early stop: cells whose latest evaluation reached ``target_accuracy`` leave
 the lockstep batch entirely — no host round logic, no packed rows, no
@@ -47,17 +75,19 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core import aggregation as agg
 from repro.core.aggregation import (aggregate_updates, unflatten_update,
                                     weights_and_aggregate_by_id,
                                     yogi_apply_flat)
-from repro.core.stale_cache import DeviceStaleCache
+from repro.core.stale_cache import DeviceStaleCache, ShardedSlotAccounts
 from repro.core.staleness import EPS, RULE_ID
 from repro.sim import learner as ln
 
@@ -72,7 +102,8 @@ def pipeline_key(cfg) -> tuple:
     return (cfg.benchmark, cfg.local_steps, cfg.local_batch, cfg.local_lr,
             cfg.prox_mu, cfg.rounds, cfg.eval_every, cfg.aggregator,
             cfg.use_agg_kernel,
-            cfg.scaling_rule if cfg.use_agg_kernel else None)
+            cfg.scaling_rule if cfg.use_agg_kernel else None,
+            cfg.rounds_per_dispatch)
 
 
 @dataclasses.dataclass
@@ -80,10 +111,13 @@ class PipelineStats:
     """Dispatch / transfer accounting for the hot loop (``--profile``)."""
     rounds: int = 0
     dispatches: dict = dataclasses.field(
-        default_factory=lambda: {"round": 0, "eval": 0, "cache_grow": 0})
+        default_factory=lambda: {"round": 0, "eval": 0, "cache_grow": 0,
+                                 "repack": 0})
     h2d_bytes: int = 0          # per-round index arrays (explicit device_put)
-    d2h_bytes: int = 0          # stat-util + eval fetches
+    d2h_bytes: int = 0          # stat-util + eval + repack-eviction fetches
     init_h2d_bytes: int = 0     # one-time dataset/params uploads
+    n_shards: int = 1
+    rounds_per_dispatch: int = 1
 
     def as_dict(self) -> dict:
         per_round = max(self.rounds, 1)
@@ -97,130 +131,218 @@ class PipelineStats:
             "h2d_bytes_per_round": round(self.h2d_bytes / per_round),
             "d2h_bytes_per_round": round(self.d2h_bytes / per_round),
             "init_h2d_bytes": self.init_h2d_bytes,
+            "n_shards": self.n_shards,
+            "rounds_per_dispatch": self.rounds_per_dispatch,
         }
 
 
 # ---------------------------------------------------------------------------
-# The fused round program
+# The fused round body (shared by the unsharded and sharded chunk programs
+# — one set of numerics, two launch wrappers)
 # ---------------------------------------------------------------------------
 
 
+def _round_body(params, cache, opt_state, x_tr, y_tr, ints, floats, shapes,
+                *, train_unit, steps, batch, yogi, use_kernel, kernel_rule,
+                single):
+    """One round's device work on one (local) params/cache block.
+
+    params: (rows, D) — cell rows plus one scratch row; cache: (C + 1, D)
+    slot rows plus the trash row; ints/floats: the round's packed index
+    arrays whose layout is described by the static ``shapes`` tuple.
+    ``single`` broadcasts the parameters instead of gathering them (the
+    serial engine's S == 1 case; bit-identical either way).
+    """
+    r_b, tb, g_b, nf_b, ns_b, all_valid = shapes
+    n_b = nf_b + ns_b
+    o = [0]
+
+    def take(n, shape=None, dtype=None):
+        a = ints[o[0]:o[0] + n]
+        o[0] += n
+        if dtype is not None:
+            a = a.astype(dtype)
+        return a.reshape(shape) if shape is not None else a
+
+    batch_idx = take(r_b * tb, (r_b, tb))
+    row_cell = take(r_b)
+    row_sub = take(r_b)
+    scat_slot = take(r_b)
+    agg_cell = take(g_b)
+    fr_idx = take(g_b * nf_b, (g_b, nf_b))
+    sl_idx = take(g_b * ns_b, (g_b, ns_b))
+    agg_tau = take(g_b * n_b, (g_b, n_b))
+    rule_id = take(g_b)
+    agg_fresh = take(g_b * n_b, (g_b, n_b), bool)
+    agg_valid = take(g_b * n_b, (g_b, n_b), bool)
+    has_g = take(g_b, None, bool)
+    beta_g, lr_g = floats[:g_b], floats[g_b:2 * g_b]
+
+    # --- train: gather batches + per-row params, one vmapped call ---
+    bx = x_tr[row_sub[:, None], batch_idx]            # (R, steps*batch, dim)
+    bx = bx.reshape(r_b, steps, batch, bx.shape[-1])
+    by = y_tr[row_sub[:, None], batch_idx].reshape(r_b, steps, batch)
+    if single:
+        deltas, losses, l2s = jax.vmap(
+            train_unit, in_axes=(None, 0, 0))(params[0], bx, by)
+    else:
+        deltas, losses, l2s = jax.vmap(train_unit)(params[row_cell], bx, by)
+
+    # --- straggler scatter into the cache, then gather ---------------
+    # scatter FIRST so the donated cache updates in place (a gather
+    # before the scatter would force XLA to copy the whole buffer);
+    # this round's scatter slots are disjoint from this round's landing
+    # slots because the pipeline quarantines freed slots for one round
+    cache = cache.at[scat_slot].set(deltas)
+
+    # fresh columns from this round's delta rows, stale columns from
+    # the cache slots; same per-cell row multiset as the per-stage
+    # path's (fresh + stale, zero-padded) stack
+    uf, us = deltas[fr_idx], cache[sl_idx]
+    if not all_valid:
+        # bucket_pad's exact zeros in the padding columns
+        uf = jnp.where(agg_valid[:, :nf_b, None], uf, 0.0)
+        us = jnp.where(agg_valid[:, nf_b:, None], us, 0.0)
+    u = jnp.concatenate([uf, us], axis=1)
+
+    # --- SAA weights + aggregate + server apply ----------------------
+    rows_old = params[agg_cell]                       # (G, D)
+    if use_kernel:
+        from repro.kernels.staleness_agg.staleness_agg import (
+            D_BLK, sweep_fused_staleness_apply,
+            sweep_fused_staleness_aggregate)
+        d = u.shape[-1]
+        pad = (-d) % D_BLK
+        up = jnp.pad(u, ((0, 0), (0, 0), (0, pad)))
+        if yogi:
+            agg_out, _ = sweep_fused_staleness_aggregate(
+                up, agg_fresh, agg_tau, beta_g, agg_valid,
+                rule=kernel_rule)
+            agg_out = agg_out[:, :d]
+        else:
+            scal = jnp.stack([beta_g, lr_g], axis=1)
+            new_rows, _ = sweep_fused_staleness_apply(
+                jnp.pad(rows_old, ((0, 0), (0, pad))), up, agg_fresh,
+                agg_tau, agg_valid, scal, rule=kernel_rule)
+            new_rows = new_rows[:, :d]
+    elif ns_b == 0:
+        # no stale rows anywhere this round: Eq. 2 degenerates to the
+        # fresh average, so skip the deviation pass entirely.  The
+        # weight vector is bit-identical to the general path's (fresh
+        # rows weigh 1, padding weighs 0, same normalization).
+        w = agg_fresh.astype(jnp.float32)
+        w = w / jnp.maximum(w.sum(axis=1, keepdims=True), EPS)
+        agg_out = jax.vmap(aggregate_updates)(u, w)
+    else:
+        agg_out, _ = jax.vmap(weights_and_aggregate_by_id)(
+            u, agg_fresh, agg_tau, agg_valid, beta_g, rule_id)
+    if yogi:
+        state_rows = jax.tree.map(lambda s: s[agg_cell], opt_state)
+        new_rows, new_state = jax.vmap(yogi_apply_flat)(
+            rows_old, agg_out, state_rows)
+        keep = lambda new, old: jnp.where(
+            has_g.reshape((-1,) + (1,) * (new.ndim - 1)), new, old)
+        opt_state = jax.tree.map(
+            lambda s, ns, os: s.at[agg_cell].set(keep(ns, os)),
+            opt_state, new_state, state_rows)
+    elif not use_kernel:
+        new_rows = rows_old + lr_g[:, None] * agg_out
+    new_rows = jnp.where(has_g[:, None], new_rows, rows_old)
+    params = params.at[agg_cell].set(new_rows)
+    return params, cache, opt_state, losses, l2s
+
+
 @functools.lru_cache(maxsize=16)
-def _round_program(spec, lr, prox_mu, steps, batch, yogi, use_kernel,
+def _chunk_program(spec, lr, prox_mu, steps, batch, yogi, use_kernel,
                    kernel_rule, single):
-    """Build + jit the single-dispatch round program.
+    """K-round chunk program (unsharded): ``lax.scan`` of the round body
+    with the donated params/cache/optimizer buffers as the scan carry and
+    the K prescheduled rounds' index arrays as the scanned inputs.  One
+    dispatch covers K rounds; the per-step math is the op-for-op round
+    body, so results are bitwise those of K single dispatches — K=1 (the
+    default) is simply a scan of length one, the only round driver.
 
     Static over (model spec, local hyperparameters, server optimizer,
     kernel routing, S==1); the round-varying index arrays arrive packed in
     TWO device buffers (one int32, one fp32) whose layout is described by
     the static ``shapes`` tuple — so one explicit ``jax.device_put`` pair
-    covers a round, and XLA recompiles only when a padding bucket first
-    appears.  ``single`` broadcasts the parameters instead of gathering
-    them (the serial engine's S == 1 case; bit-identical either way).
+    covers a chunk, and XLA recompiles only when a padding bucket first
+    appears.
     """
     train_unit = functools.partial(ln.local_train_flat, spec=spec, lr=lr,
                                    prox_mu=prox_mu)
+    body = functools.partial(_round_body, train_unit=train_unit, steps=steps,
+                             batch=batch, yogi=yogi, use_kernel=use_kernel,
+                             kernel_rule=kernel_rule, single=single)
 
-    def prog(params, cache, opt_state, x_tr, y_tr, ints, floats, shapes):
-        r_b, tb, g_b, nf_b, ns_b, all_valid = shapes
-        n_b = nf_b + ns_b
-        o = [0]
+    def prog(params, cache, opt_state, x_tr, y_tr, ints_k, floats_k, shapes):
+        def step(carry, xs):
+            p, c, o = carry
+            p, c, o, losses, l2s = body(p, c, o, x_tr, y_tr, xs[0], xs[1],
+                                        shapes)
+            return (p, c, o), (losses, l2s)
 
-        def take(n, shape=None, dtype=None):
-            a = ints[o[0]:o[0] + n]
-            o[0] += n
-            if dtype is not None:
-                a = a.astype(dtype)
-            return a.reshape(shape) if shape is not None else a
-
-        batch_idx = take(r_b * tb, (r_b, tb))
-        row_cell = take(r_b)
-        row_sub = take(r_b)
-        scat_slot = take(r_b)
-        agg_cell = take(g_b)
-        fr_idx = take(g_b * nf_b, (g_b, nf_b))
-        sl_idx = take(g_b * ns_b, (g_b, ns_b))
-        agg_tau = take(g_b * n_b, (g_b, n_b))
-        rule_id = take(g_b)
-        agg_fresh = take(g_b * n_b, (g_b, n_b), bool)
-        agg_valid = take(g_b * n_b, (g_b, n_b), bool)
-        has_g = take(g_b, None, bool)
-        beta_g, lr_g = floats[:g_b], floats[g_b:2 * g_b]
-
-        # --- train: gather batches + per-row params, one vmapped call ---
-        bx = x_tr[row_sub[:, None], batch_idx]            # (R, steps*batch, dim)
-        bx = bx.reshape(r_b, steps, batch, bx.shape[-1])
-        by = y_tr[row_sub[:, None], batch_idx].reshape(r_b, steps, batch)
-        if single:
-            deltas, losses, l2s = jax.vmap(
-                train_unit, in_axes=(None, 0, 0))(params[0], bx, by)
-        else:
-            deltas, losses, l2s = jax.vmap(train_unit)(params[row_cell], bx, by)
-
-        # --- straggler scatter into the cache, then gather ---------------
-        # scatter FIRST so the donated cache updates in place (a gather
-        # before the scatter would force XLA to copy the whole buffer);
-        # this round's scatter slots are disjoint from this round's landing
-        # slots because the pipeline quarantines freed slots for one round
-        cache = cache.at[scat_slot].set(deltas)
-
-        # fresh columns from this round's delta rows, stale columns from
-        # the cache slots; same per-cell row multiset as the per-stage
-        # path's (fresh + stale, zero-padded) stack
-        uf, us = deltas[fr_idx], cache[sl_idx]
-        if not all_valid:
-            # bucket_pad's exact zeros in the padding columns
-            uf = jnp.where(agg_valid[:, :nf_b, None], uf, 0.0)
-            us = jnp.where(agg_valid[:, nf_b:, None], us, 0.0)
-        u = jnp.concatenate([uf, us], axis=1)
-
-        # --- SAA weights + aggregate + server apply ----------------------
-        rows_old = params[agg_cell]                       # (G, D)
-        if use_kernel:
-            from repro.kernels.staleness_agg.staleness_agg import (
-                D_BLK, sweep_fused_staleness_apply,
-                sweep_fused_staleness_aggregate)
-            d = u.shape[-1]
-            pad = (-d) % D_BLK
-            up = jnp.pad(u, ((0, 0), (0, 0), (0, pad)))
-            if yogi:
-                agg_out, _ = sweep_fused_staleness_aggregate(
-                    up, agg_fresh, agg_tau, beta_g, agg_valid,
-                    rule=kernel_rule)
-                agg_out = agg_out[:, :d]
-            else:
-                scal = jnp.stack([beta_g, lr_g], axis=1)
-                new_rows, _ = sweep_fused_staleness_apply(
-                    jnp.pad(rows_old, ((0, 0), (0, pad))), up, agg_fresh,
-                    agg_tau, agg_valid, scal, rule=kernel_rule)
-                new_rows = new_rows[:, :d]
-        elif ns_b == 0:
-            # no stale rows anywhere this round: Eq. 2 degenerates to the
-            # fresh average, so skip the deviation pass entirely.  The
-            # weight vector is bit-identical to the general path's (fresh
-            # rows weigh 1, padding weighs 0, same normalization).
-            w = agg_fresh.astype(jnp.float32)
-            w = w / jnp.maximum(w.sum(axis=1, keepdims=True), EPS)
-            agg_out = jax.vmap(aggregate_updates)(u, w)
-        else:
-            agg_out, _ = jax.vmap(weights_and_aggregate_by_id)(
-                u, agg_fresh, agg_tau, agg_valid, beta_g, rule_id)
-        if yogi:
-            state_rows = jax.tree.map(lambda s: s[agg_cell], opt_state)
-            new_rows, new_state = jax.vmap(yogi_apply_flat)(
-                rows_old, agg_out, state_rows)
-            keep = lambda new, old: jnp.where(
-                has_g.reshape((-1,) + (1,) * (new.ndim - 1)), new, old)
-            opt_state = jax.tree.map(
-                lambda s, ns, os: s.at[agg_cell].set(keep(ns, os)),
-                opt_state, new_state, state_rows)
-        elif not use_kernel:
-            new_rows = rows_old + lr_g[:, None] * agg_out
-        new_rows = jnp.where(has_g[:, None], new_rows, rows_old)
-        params = params.at[agg_cell].set(new_rows)
+        (params, cache, opt_state), (losses, l2s) = jax.lax.scan(
+            step, (params, cache, opt_state), (ints_k, floats_k))
         return params, cache, opt_state, losses, l2s
 
     return jax.jit(prog, donate_argnums=(0, 1, 2), static_argnums=(7,))
+
+
+@functools.lru_cache(maxsize=16)
+def _sharded_chunk_program(spec, lr, prox_mu, steps, batch, yogi, use_kernel,
+                           kernel_rule, mesh):
+    """K-round chunk program sharded over the sweep axis: ``shard_map``
+    over the 1-D ``mesh`` with the chunk scan inside.  Each shard owns a
+    ``(s_loc + 1, D)`` params block, a ``(c_loc + 1, D)`` cache block and
+    its own packed index arrays — the round body is shard-local (no
+    collectives), so every cell's math is op-for-op the unsharded body's
+    and the sweep-axis Pallas kernels simply see a grid over the local S.
+    Datasets are replicated; losses/l2s come back concatenated along the
+    row axis (shard j's rows at ``[j * r_b, (j+1) * r_b)``)."""
+    train_unit = functools.partial(ln.local_train_flat, spec=spec, lr=lr,
+                                   prox_mu=prox_mu)
+    body = functools.partial(_round_body, train_unit=train_unit, steps=steps,
+                             batch=batch, yogi=yogi, use_kernel=use_kernel,
+                             kernel_rule=kernel_rule, single=False)
+    opt_spec = ({"m": P("s"), "v": P("s"), "t": P("s")} if yogi else None)
+
+    def prog(params3, cache3, opt_state, x_tr, y_tr, ints3, floats3, shapes):
+        def per_shard(p3, c3, o3, x_tr, y_tr, i3, f3):
+            p, c = p3[0], c3[0]
+            o = jax.tree.map(lambda a: a[0], o3)
+
+            def step(carry, xs):
+                p, c, o = carry
+                p, c, o, losses, l2s = body(p, c, o, x_tr, y_tr, xs[0],
+                                            xs[1], shapes)
+                return (p, c, o), (losses, l2s)
+
+            (p, c, o), (losses, l2s) = jax.lax.scan(
+                step, (p, c, o), (i3[:, 0], f3[:, 0]))
+            return (p[None], c[None], jax.tree.map(lambda a: a[None], o),
+                    losses, l2s)
+
+        return shard_map(
+            per_shard, mesh=mesh,
+            in_specs=(P("s"), P("s"), opt_spec, P(), P(),
+                      P(None, "s"), P(None, "s")),
+            out_specs=(P("s"), P("s"), opt_spec, P(None, "s"), P(None, "s")),
+            check_rep=False,
+        )(params3, cache3, opt_state, x_tr, y_tr, ints3, floats3)
+
+    return jax.jit(prog, donate_argnums=(0, 1, 2), static_argnums=(7,))
+
+
+@functools.lru_cache(maxsize=2)
+def _row_fetch_program():
+    """Jitted row gather from a (n_shards, rows_loc, ...) tensor's flattened
+    row space — eager advanced indexing would sneak implicit scalar uploads
+    past the transfer guard; inside jit the constants live in the program."""
+    @jax.jit
+    def f(arr, idx):
+        return arr.reshape((-1,) + arr.shape[2:])[idx]
+    return f
 
 
 @functools.lru_cache(maxsize=8)
@@ -244,8 +366,21 @@ def _eval_program(spec):
 # ---------------------------------------------------------------------------
 
 
+@dataclasses.dataclass
+class _RoundWork:
+    """One prescheduled round of a chunk: the host state machine has already
+    advanced past it (plans drawn, schedules fixed, slots allocated,
+    records appended); only the device dispatch and the eval fill remain."""
+    r: int
+    order: list
+    plans: dict
+    scheds: dict
+    surv: dict
+    recs: dict
+
+
 class RoundPipeline:
-    def __init__(self, sims: Sequence, progress: bool = False):
+    def __init__(self, sims: Sequence, progress: bool = False, mesh=None):
         assert len(sims) >= 1
         self.sims = list(sims)
         self.progress = progress
@@ -259,25 +394,69 @@ class RoundPipeline:
         self.spec = sims[0]._flat_spec
         self.d = agg.flat_dim(self.spec)
         self.yogi = cfg0.aggregator == "yogi"
-        self.stats = PipelineStats()
+        self.mesh = mesh
+        self.n_shards = int(mesh.shape["s"]) if mesh is not None else 1
+        self.stats = PipelineStats(n_shards=self.n_shards)
 
         s = len(sims)
-        # stacked (S+1, D) params; the extra row is scratch that padding
-        # aggregation groups read and write (never a real cell)
-        self.params = jnp.concatenate(
-            [jnp.stack([sim.flat_params for sim in sims]),
-             jnp.zeros((1, self.d), jnp.float32)])
-        if self.yogi:
-            self.opt_state = jax.tree.map(
-                lambda *xs: jnp.stack(xs + (jnp.zeros_like(xs[0]),)),
-                *[sim.flat_opt_state for sim in sims])
-        else:
-            self.opt_state = None
-        self.cache = DeviceStaleCache(
-            self.d, capacity=max(c.cfg.stale_cache_capacity for c in sims),
-            grow=True)
+        # Oort is the only selector that consumes the per-row stat-utility
+        # feedback; without one the round loop fetches nothing per round
+        self._fetch_l2s = any(sim.cfg.selector == "oort" for sim in sims)
+        # Oort's selection feedback is device data needed before the next
+        # round's host decisions, so it caps prescheduling at one round
+        self.k_rounds = (1 if self._fetch_l2s
+                         else max(1, int(cfg0.rounds_per_dispatch)))
+        self.stats.rounds_per_dispatch = self.k_rounds
 
-        # one device copy of each distinct substrate's dataset
+        if self.mesh is None:
+            # stacked (S+1, D) params; the extra row is scratch that padding
+            # aggregation groups read and write (never a real cell)
+            self.placement = None
+            self.params = jnp.concatenate(
+                [jnp.stack([sim.flat_params for sim in sims]),
+                 jnp.zeros((1, self.d), jnp.float32)])
+            if self.yogi:
+                self.opt_state = jax.tree.map(
+                    lambda *xs: jnp.stack(xs + (jnp.zeros_like(xs[0]),)),
+                    *[sim.flat_opt_state for sim in sims])
+            else:
+                self.opt_state = None
+            self.cache = DeviceStaleCache(
+                self.d, capacity=max(c.cfg.stale_cache_capacity for c in sims),
+                grow=True)
+            self.accounts = None
+        else:
+            from repro.sweeps.sharding import (Placement, chunk_spec,
+                                               replicated_spec, shard_spec)
+            self.placement = Placement.build(range(s), self.n_shards)
+            self._shard_spec = shard_spec(mesh)
+            self._rep_spec = replicated_spec(mesh)
+            self._chunk_spec = chunk_spec(mesh)
+            self.params = jax.device_put(
+                self._stack_rows([np.asarray(sim.flat_params)
+                                  for sim in sims], (self.d,), np.float32),
+                self._shard_spec)
+            if self.yogi:
+                leaves = [sim.flat_opt_state for sim in sims]
+                self.opt_state = jax.tree.map(
+                    lambda *xs: jax.device_put(
+                        self._stack_rows([np.asarray(x) for x in xs],
+                                         np.shape(xs[0]), np.asarray(xs[0]).dtype),
+                        self._shard_spec),
+                    *leaves)
+            else:
+                self.opt_state = None
+            self.cache = None
+            self.accounts = ShardedSlotAccounts(
+                self.n_shards,
+                capacity=max(c.cfg.stale_cache_capacity for c in sims))
+            self.cache_rows = jax.device_put(
+                jnp.zeros((self.n_shards, self.accounts.capacity + 1, self.d),
+                          jnp.float32), self._shard_spec)
+            self._saved = {}      # evicted done cells' final rows (host)
+
+        # one device copy of each distinct substrate's dataset (replicated
+        # across the mesh when sharded: shard-local batch gathers)
         subs = []
         self.sub_idx = np.zeros(s, np.int32)
         for i, sim in enumerate(sims):
@@ -289,29 +468,43 @@ class RoundPipeline:
                 np.stack([sb.data.y_train for sb in subs]),
                 np.stack([sb.data.x_test for sb in subs]),
                 np.stack([sb.data.y_test for sb in subs]))
-        self.x_tr, self.y_tr, self.x_te, self.y_te = jax.device_put(host)
+        if self.mesh is None:
+            self.x_tr, self.y_tr, self.x_te, self.y_te = jax.device_put(host)
+        else:
+            self.x_tr, self.y_tr, self.x_te, self.y_te = (
+                jax.device_put(a, self._rep_spec) for a in host)
         self.stats.init_h2d_bytes = (sum(a.nbytes for a in host)
-                                     + (s + 1) * self.d * 4)
-        # Oort is the only selector that consumes the per-row stat-utility
-        # feedback; without one the round loop fetches nothing per round
-        self._fetch_l2s = any(sim.cfg.selector == "oort" for sim in sims)
-        self._prog = _round_program(
-            self.spec, cfg0.local_lr, cfg0.prox_mu, cfg0.local_steps,
-            cfg0.local_batch, self.yogi, cfg0.use_agg_kernel,
-            cfg0.scaling_rule if cfg0.use_agg_kernel else None,
-            len(sims) == 1)
+                                     + (s + self.n_shards) * self.d * 4)
+        prog_args = (self.spec, cfg0.local_lr, cfg0.prox_mu, cfg0.local_steps,
+                     cfg0.local_batch, self.yogi, cfg0.use_agg_kernel,
+                     cfg0.scaling_rule if cfg0.use_agg_kernel else None)
+        if self.mesh is not None:
+            self._prog = _sharded_chunk_program(*prog_args, mesh)
+        else:
+            self._prog = _chunk_program(*prog_args, len(sims) == 1)
         # single-sim non-SAFA cohorts have a near-constant size, so exact
         # (unpadded) shapes cost at most a handful of compiles and remove
         # the pow2 bucket's up-to-2x wasted training rows — but only long
         # runs amortize those compiles; short runs, SAFA cohorts (sizes all
-        # over the place) and sweep batches keep the shared padding buckets.
-        # Padding is masked/discarded everywhere, so the choice never
-        # affects results (bucket_block's contract).
-        self._exact = (len(sims) == 1 and cfg0.selector != "safa"
+        # over the place), sweep batches and chunked/sharded dispatches
+        # keep the shared padding buckets.  Padding is masked/discarded
+        # everywhere, so the choice never affects results (bucket_block's
+        # contract).
+        self._exact = (self.mesh is None and self.k_rounds == 1
+                       and len(sims) == 1 and cfg0.selector != "safa"
                        and cfg0.rounds >= 24)
         self._eval = _eval_program(self.spec)
         self.done = [False] * s
         self._pending_free = []   # freed slots quarantined for one round
+
+    def _stack_rows(self, rows: list, trailing: tuple, dtype) -> np.ndarray:
+        """Place per-cell host rows into the (n_shards, s_loc + 1, ...)
+        layout of the current placement (scratch/padding rows zero)."""
+        pl = self.placement
+        out = np.zeros((pl.n_shards, pl.s_loc + 1) + tuple(trailing), dtype)
+        for i, row in enumerate(rows):
+            out[pl.shard_of[i], pl.slot_of[i]] = row
+        return out
 
     # ------------------------------------------------------------------
     def run(self, transfer_guard: bool = False):
@@ -330,17 +523,34 @@ class RoundPipeline:
         return self.finalize()
 
     def _run_rounds(self):
-        for r in range(self.cfg0.rounds):
-            if all(self.done):
-                break
-            self.step(r)
+        r = 0
+        while r < self.cfg0.rounds and not all(self.done):
+            # a chunk is K prescheduled rounds, broken early at eval
+            # boundaries so evaluation / early stop / Oort feedback keep
+            # their exact round semantics
+            rounds = []
+            while len(rounds) < self.k_rounds:
+                rounds.append(r)
+                if self.sims[0].eval_due(r):
+                    break
+                r += 1
+            r = rounds[-1] + 1
+            self._run_chunk(rounds)
 
     # ------------------------------------------------------------------
-    def step(self, r: int) -> None:
-        """One lockstep round across the live cells: host logic + ONE
-        device dispatch (plus the batched eval on eval rounds)."""
+    # The round driver: preschedule a K-round chunk (K=1 by default),
+    # dispatch it as one program, run the post-dispatch tail
+    # ------------------------------------------------------------------
+    def _shard_of(self, i: int) -> int:
+        return self.placement.shard_of[i] if self.mesh is not None else 0
+
+    def _preschedule(self, r: int) -> Optional[_RoundWork]:
+        """Run one round's host state machine to completion — plans,
+        schedules, slot allocation, selector feedback, record append — so
+        the next round's decisions can be taken before this round's device
+        work has run.  (Oort feedback is deferred to post-dispatch; its
+        presence forces K=1, so no later round preschedules before it.)"""
         sims = self.sims
-        cfg0 = self.cfg0
         plans = {}
         for i, sim in enumerate(sims):
             if self.done[i]:
@@ -349,166 +559,373 @@ class RoundPipeline:
             if p is not None:
                 plans[i] = p
         if not plans:
-            return
+            return None
         order = list(plans)
         scheds = {i: sims[i]._schedule_round(r, plans[i]) for i in order}
 
-        # --- slot management ---------------------------------------------
-        # slots freed by landings/expiries are quarantined for one round
-        # (released here, before this round's allocs): a slot gathered this
-        # round is therefore never a scatter target this round, which lets
-        # the program scatter before it gathers and keep the donated cache
-        # update fully in place
-        grow0 = self.cache.grow_events
-        if self._pending_free:
-            self.cache.free(self._pending_free)
-        self._pending_free = [
-            f.delta for i in order
-            for f in scheds[i].landing + scheds[i].expired]
-        for i in order:
-            sc = scheds[i]
-            if sc.new_stale:
-                sc.slots, _ = self.cache.alloc(len(sc.new_stale))
-        self.stats.dispatches["cache_grow"] += self.cache.grow_events - grow0
+        # slot management: release the previous round's quarantined slots,
+        # then this round's allocs — a slot gathered this round is never a
+        # scatter target this round, so the in-program scatter-then-gather
+        # stays collision-free (see the cache comment in _round_body)
+        if self.mesh is None:
+            grow0 = self.cache.grow_events
+            if self._pending_free:
+                self.cache.free(self._pending_free)
+            self._pending_free = [
+                f.delta for i in order
+                for f in scheds[i].landing + scheds[i].expired]
+            for i in order:
+                sc = scheds[i]
+                if sc.new_stale:
+                    sc.slots, _ = self.cache.alloc(len(sc.new_stale))
+            self.stats.dispatches["cache_grow"] += \
+                self.cache.grow_events - grow0
+        else:
+            grow0 = self.accounts.grow_events
+            for shard, slot in self._pending_free:
+                self.accounts.free(shard, [slot])
+            self._pending_free = [
+                f.delta for i in order
+                for f in scheds[i].landing + scheds[i].expired]
+            for i in order:
+                sc = scheds[i]
+                if sc.new_stale:
+                    shard = self.placement.shard_of[i]
+                    slots, _ = self.accounts.alloc(shard, len(sc.new_stale))
+                    sc.slots = [(shard, sl) for sl in slots]
+            self.stats.dispatches["cache_grow"] += \
+                self.accounts.grow_events - grow0
 
-        # --- pack this round's cohort rows (survivors only) --------------
-        # mid-round dropouts never deliver an update and never feed the
-        # selector, so their rows are excluded from the packed training
-        # call — the per-stage paths train them and discard the result
-        tb = cfg0.local_steps * cfg0.local_batch
         surv = {i: np.nonzero(~np.isfinite(plans[i].drop_at))[0]
                 for i in order}
-        n_rows = sum(len(surv[i]) for i in order)
-        r_b = (max(n_rows, 1) if self._exact
-               else agg.bucket_block(max(n_rows, 1), ROW_BLOCK))
-        batch_idx = np.zeros((r_b, tb), np.int32)
-        row_cell = np.zeros(r_b, np.int32)
-        row_sub = np.zeros(r_b, np.int32)
-        scat_slot = np.full(r_b, self.cache.trash_slot, np.int32)
-        pos = {}            # (sim, plan row) -> packed row
-        offs = {}           # sim -> start of its packed block
-        off = 0
-        for i in order:
-            p, sc = plans[i], scheds[i]
-            sv = surv[i]
-            offs[i] = off
-            batch_idx[off:off + len(sv)] = p.bidx[sv]
-            row_cell[off:off + len(sv)] = i
-            row_sub[off:off + len(sv)] = self.sub_idx[i]
-            for local, row_i in enumerate(sv):
-                pos[(i, int(row_i))] = off + local
-            for (row_i, _lid, _arr, _dur), slot in zip(sc.new_stale, sc.slots):
-                scat_slot[pos[(i, row_i)]] = slot
-            off += len(sv)
-        if off < r_b:               # padding rows replicate the first real row
-            batch_idx[off:] = batch_idx[0]
-            row_cell[off:] = row_cell[0]
-            row_sub[off:] = row_sub[0]
 
-        # --- aggregation groups: one per cell with updates ---------------
-        # column layout per group: fresh rows in [0, nf_b) (delta gathers),
-        # stale rows in [nf_b, nf_b + ns_b) (cache-slot gathers); padding
-        # columns are invalid and zeroed in-program, so each cell's operand
-        # holds the same row multiset as the per-stage path's padded stack
-        groups = [i for i in order
-                  if scheds[i].fresh_rows or scheds[i].landing]
-        g_b = (max(len(groups), 1) if self._exact
-               else agg.bucket_pow2(max(len(groups), 1)))
-        nf_max = max([len(scheds[i].fresh_rows) for i in groups] + [1])
-        ns_max = max([len(scheds[i].landing) for i in groups] + [0])
-        nf_b = (nf_max if self._exact
-                else agg.bucket_block(nf_max, UPD_BLOCK))
-        ns_b = (ns_max if self._exact
-                else (agg.bucket_pow2(ns_max) if ns_max else 0))
+        if not self._fetch_l2s:
+            from repro.sim.engine import _InFlight
+            for i in order:
+                sim, sc = sims[i], scheds[i]
+                sim._apply_feedback(r, sc, None)
+                for (row_i, lid, arr, dur), slot in zip(sc.new_stale,
+                                                        sc.slots):
+                    sim.stale_cache.append(
+                        _InFlight(lid, r, arr, dur, slot, 0.0))
+
+        recs = {i: sims[i]._advance_round_state(
+            r, plans[i].t_now, scheds[i].t_end, len(plans[i].chosen),
+            len(scheds[i].fresh_rows), len(scheds[i].landing))
+            for i in order}
+        return _RoundWork(r, order, plans, scheds, surv, recs)
+
+    def _materialize(self, works):
+        """Build the chunk's packed index arrays: per round and per shard,
+        the same layout the single-round driver packs, padded to one
+        chunk-global bucket set so the scan's inputs are rectangular.
+        Returns (ints (K, n_shards, L), floats (K, n_shards, F), shapes,
+        offs) where ``offs[(k, i)]`` locates cell ``i``'s packed rows in
+        the round-k loss/l2s vector (shard rows are concatenated)."""
+        cfg0 = self.cfg0
+        sims = self.sims
+        tb = cfg0.local_steps * cfg0.local_batch
+        nsh = self.n_shards
+        mesh = self.mesh
+        if mesh is None:
+            scratch = len(sims)
+            trash = self.cache.trash_slot
+            slot_of = lambda i: i
+        else:
+            scratch = self.placement.scratch_slot
+            trash = self.accounts.trash_slot
+            slot_of = self.placement.slot_of.__getitem__
+
+        # chunk-global padding buckets (uniform scan/shard shapes)
+        max_rows, max_g, nf_max, ns_max = 1, 1, 1, 0
+        for w in works:
+            rows_js, g_js = [0] * nsh, [0] * nsh
+            for i in w.order:
+                j = self._shard_of(i)
+                rows_js[j] += len(w.surv[i])
+                sc = w.scheds[i]
+                if sc.fresh_rows or sc.landing:
+                    g_js[j] += 1
+                    nf_max = max(nf_max, len(sc.fresh_rows))
+                    ns_max = max(ns_max, len(sc.landing))
+            max_rows = max(max_rows, *rows_js)
+            max_g = max(max_g, *g_js)
+        if self._exact:     # long serial runs: unpadded shapes (see __init__)
+            r_b, g_b, nf_b = max_rows, max_g, nf_max
+            ns_b = ns_max if ns_max else 0
+        else:
+            r_b = agg.bucket_block(max_rows, ROW_BLOCK)
+            g_b = agg.bucket_pow2(max_g)
+            nf_b = agg.bucket_block(nf_max, UPD_BLOCK)
+            ns_b = agg.bucket_pow2(ns_max) if ns_max else 0
         n_b = nf_b + ns_b
-        all_valid = bool(
-            groups and g_b == len(groups)
-            and all(len(scheds[i].fresh_rows) == nf_b
-                    and len(scheds[i].landing) == ns_b for i in groups))
-        s_total = len(sims)
-        agg_cell = np.full(g_b, s_total, np.int32)     # scratch params row
-        fr_idx = np.zeros((g_b, nf_b), np.int32)
-        sl_idx = np.zeros((g_b, ns_b), np.int32)
-        agg_fresh = np.zeros((g_b, n_b), np.int32)
-        agg_tau = np.zeros((g_b, n_b), np.int32)
-        agg_valid = np.zeros((g_b, n_b), np.int32)
-        rule_id = np.zeros(g_b, np.int32)
-        has_g = np.zeros(g_b, np.int32)
-        beta_g = np.zeros(g_b, np.float32)
-        lr_g = np.zeros(g_b, np.float32)
-        for g, i in enumerate(groups):
-            sc, cfg = scheds[i], sims[i].cfg
-            for col, row_i in enumerate(sc.fresh_rows):       # arrival order
-                fr_idx[g, col] = pos[(i, row_i)]
-                agg_fresh[g, col] = 1
-                agg_valid[g, col] = 1
-            for col, (f, tau) in enumerate(zip(sc.landing,
-                                               sc.landing_taus)):  # cache order
-                sl_idx[g, col] = f.delta           # cache slot
-                agg_tau[g, nf_b + col] = tau
-                agg_valid[g, nf_b + col] = 1
-            agg_cell[g] = i
-            rule_id[g] = RULE_ID[cfg.scaling_rule]
-            beta_g[g] = cfg.beta
-            lr_g[g] = cfg.server_lr
-            has_g[g] = 1
+        # a fully-populated single-round unsharded dispatch skips the
+        # in-program padding masks entirely (they would be identities)
+        all_valid = False
+        if mesh is None and len(works) == 1:
+            w0 = works[0]
+            groups0 = [i for i in w0.order
+                       if w0.scheds[i].fresh_rows or w0.scheds[i].landing]
+            all_valid = bool(
+                groups0 and g_b == len(groups0)
+                and all(len(w0.scheds[i].fresh_rows) == nf_b
+                        and len(w0.scheds[i].landing) == ns_b
+                        for i in groups0))
+        shapes = (r_b, tb, g_b, nf_b, ns_b, all_valid)
 
-        # --- ONE dispatch for the whole round ----------------------------
-        ints = np.concatenate([batch_idx.ravel(), row_cell, row_sub,
-                               scat_slot, agg_cell, fr_idx.ravel(),
-                               sl_idx.ravel(), agg_tau.ravel(), rule_id,
-                               agg_fresh.ravel(), agg_valid.ravel(), has_g])
-        floats = np.concatenate([beta_g, lr_g])
-        dev_ints, dev_floats = jax.device_put((ints, floats))
+        floats_all = np.zeros((len(works), nsh, 2 * g_b), np.float32)
+        chunks = []
+        offs = {}
+        for k_idx, w in enumerate(works):
+            per_shard = []
+            for j in range(nsh):
+                batch_idx = np.zeros((r_b, tb), np.int32)
+                row_cell = np.full(r_b, scratch, np.int32)
+                row_sub = np.zeros(r_b, np.int32)
+                scat_slot = np.full(r_b, trash, np.int32)
+                pos = {}
+                off = 0
+                cells_j = [i for i in w.order if self._shard_of(i) == j]
+                for i in cells_j:
+                    p, sc, sv = w.plans[i], w.scheds[i], w.surv[i]
+                    batch_idx[off:off + len(sv)] = p.bidx[sv]
+                    row_cell[off:off + len(sv)] = slot_of(i)
+                    row_sub[off:off + len(sv)] = self.sub_idx[i]
+                    offs[(k_idx, i)] = j * r_b + off
+                    for local, row_i in enumerate(sv):
+                        pos[(i, int(row_i))] = off + local
+                    for (row_i, _l, _a, _d), slot in zip(sc.new_stale,
+                                                         sc.slots):
+                        scat_slot[pos[(i, row_i)]] = (slot if mesh is None
+                                                      else slot[1])
+                    off += len(sv)
+                if 0 < off < r_b:   # padding replicates the first real row
+                    batch_idx[off:] = batch_idx[0]
+                    row_cell[off:] = row_cell[0]
+                    row_sub[off:] = row_sub[0]
+
+                groups = [i for i in cells_j
+                          if w.scheds[i].fresh_rows or w.scheds[i].landing]
+                agg_cell = np.full(g_b, scratch, np.int32)
+                fr_idx = np.zeros((g_b, nf_b), np.int32)
+                sl_idx = np.zeros((g_b, ns_b), np.int32)
+                agg_fresh = np.zeros((g_b, n_b), np.int32)
+                agg_tau = np.zeros((g_b, n_b), np.int32)
+                agg_valid = np.zeros((g_b, n_b), np.int32)
+                rule_id = np.zeros(g_b, np.int32)
+                has_g = np.zeros(g_b, np.int32)
+                beta_g = np.zeros(g_b, np.float32)
+                lr_g = np.zeros(g_b, np.float32)
+                for g, i in enumerate(groups):
+                    sc, cfg = w.scheds[i], sims[i].cfg
+                    for col, row_i in enumerate(sc.fresh_rows):
+                        fr_idx[g, col] = pos[(i, row_i)]
+                        agg_fresh[g, col] = 1
+                        agg_valid[g, col] = 1
+                    for col, (f, tau) in enumerate(zip(sc.landing,
+                                                       sc.landing_taus)):
+                        sl_idx[g, col] = (f.delta if mesh is None
+                                          else f.delta[1])
+                        agg_tau[g, nf_b + col] = tau
+                        agg_valid[g, nf_b + col] = 1
+                    agg_cell[g] = slot_of(i)
+                    rule_id[g] = RULE_ID[cfg.scaling_rule]
+                    beta_g[g] = cfg.beta
+                    lr_g[g] = cfg.server_lr
+                    has_g[g] = 1
+                per_shard.append(np.concatenate(
+                    [batch_idx.ravel(), row_cell, row_sub, scat_slot,
+                     agg_cell, fr_idx.ravel(), sl_idx.ravel(),
+                     agg_tau.ravel(), rule_id, agg_fresh.ravel(),
+                     agg_valid.ravel(), has_g]))
+                floats_all[k_idx, j] = np.concatenate([beta_g, lr_g])
+            chunks.append(np.stack(per_shard))
+        ints_all = np.stack(chunks)        # already int32 throughout
+        return ints_all, floats_all, shapes, offs
+
+    def _run_chunk(self, rounds) -> None:
+        """Preschedule up to K rounds, dispatch them as one scan program,
+        then run the post-dispatch tail (Oort feedback, eval fill, early
+        stop, shard repack) for the chunk."""
+        works = []
+        for r in rounds:
+            w = self._preschedule(r)
+            if w is not None:
+                works.append(w)
+        if not works:
+            return
+        sims = self.sims
+        ints, floats, shapes, offs = self._materialize(works)
+
+        if self.mesh is None:
+            dev_ints, dev_floats = jax.device_put(
+                (ints[:, 0], floats[:, 0]))
+            cache_rows = self.cache.rows
+        else:
+            # the host accounting may have grown mid-chunk; bring the
+            # device tensor to the final capacity before the dispatch
+            # (appended slots only — existing local slot ids stay valid)
+            if self.cache_rows.shape[1] != self.accounts.capacity + 1:
+                from repro.sweeps.sharding import reshard_rows
+                old_rows = self.cache_rows.shape[1]
+                cmap = np.full(self.n_shards * (self.accounts.capacity + 1),
+                               old_rows - 1, np.int32)   # any defined row
+                for j in range(self.n_shards):
+                    base_new = j * (self.accounts.capacity + 1)
+                    base_old = j * old_rows
+                    for sl in range(old_rows - 1):
+                        cmap[base_new + sl] = base_old + sl
+                self.cache_rows = reshard_rows(
+                    self.cache_rows, cmap,
+                    (self.n_shards, self.accounts.capacity + 1),
+                    self._shard_spec)
+            dev_ints = jax.device_put(ints, self._chunk_spec)
+            dev_floats = jax.device_put(floats, self._chunk_spec)
+            cache_rows = self.cache_rows
         self.stats.h2d_bytes += ints.nbytes + floats.nbytes
         self.stats.dispatches["round"] += 1
-        self.stats.rounds += 1
-        (self.params, self.cache.rows, self.opt_state, _losses, l2s) = \
-            self._prog(self.params, self.cache.rows, self.opt_state,
-                       self.x_tr, self.y_tr, dev_ints, dev_floats,
-                       (r_b, tb, g_b, nf_b, ns_b, all_valid))
+        self.stats.rounds += len(works)
+        (params, cache_rows, self.opt_state, _losses, l2s) = \
+            self._prog(self.params, cache_rows, self.opt_state,
+                       self.x_tr, self.y_tr, dev_ints, dev_floats, shapes)
+        self.params = params
+        if self.mesh is None:
+            self.cache.rows = cache_rows
+        else:
+            self.cache_rows = cache_rows
 
-        l2s_np = None
+        # --- deferred Oort feedback (K forced to 1) -----------------------
         if self._fetch_l2s:
+            from repro.sim.engine import _InFlight
             l2s_np = np.asarray(jax.device_get(l2s))
             self.stats.d2h_bytes += l2s_np.nbytes
+            (w,) = works
+            for i in w.order:
+                sim, sc = sims[i], w.scheds[i]
+                l2s_i = np.zeros(w.plans[i].k, np.float32)
+                o0 = offs[(0, i)]
+                l2s_i[w.surv[i]] = l2s_np[0, o0:o0 + len(w.surv[i])]
+                sim._apply_feedback(w.r, sc, l2s_i)
+                for (row_i, lid, arr, dur), slot in zip(sc.new_stale,
+                                                        sc.slots):
+                    sim.stale_cache.append(_InFlight(
+                        lid, w.r, arr, dur, slot,
+                        sim._stat_util(row_i, l2s_i)))
 
-        # --- host bookkeeping: feedback, cache entries, records ----------
-        from repro.sim.engine import _InFlight
-        for i in order:
-            sim, sc = sims[i], scheds[i]
-            if l2s_np is None:
-                l2s_i = None
+        # --- eval fill + early stop at the chunk's eval boundary ----------
+        wl = works[-1]
+        if sims[wl.order[0]].eval_due(wl.r):
+            l_b = agg.bucket_pow2(len(wl.order))
+            cells = wl.order + [wl.order[0]] * (l_b - len(wl.order))
+            if self.mesh is None:
+                rows = np.asarray(cells, np.int32)
+                eval_params = self.params
             else:
-                # re-index the packed survivor rows back to plan rows (the
-                # feedback loop addresses plan rows; dropouts never feed back)
-                l2s_i = np.zeros(plans[i].k, np.float32)
-                l2s_i[surv[i]] = l2s_np[offs[i]:offs[i] + len(surv[i])]
-            sim._apply_feedback(r, sc, l2s_i)
-            for (row_i, lid, arr, dur), slot in zip(sc.new_stale, sc.slots):
-                sim.stale_cache.append(_InFlight(
-                    lid, r, arr, dur, slot, sim._stat_util(row_i, l2s_i)))
-
-        acc = loss = None
-        if sims[order[0]].eval_due(r):
-            l_b = agg.bucket_pow2(len(order))
-            eidx = np.asarray(order + [order[0]] * (l_b - len(order)), np.int32)
-            packed = jax.device_put(np.concatenate([eidx, self.sub_idx[eidx]]))
+                rows = np.asarray([self.placement.flat_row(i)
+                                   for i in cells], np.int32)
+                eval_params = self.params.reshape(-1, self.d)
+            packed = np.concatenate([rows,
+                                     self.sub_idx[np.asarray(cells)]])
+            packed = (jax.device_put(packed) if self.mesh is None
+                      else jax.device_put(packed, self._rep_spec))
             self.stats.dispatches["eval"] += 1
-            a, lo = self._eval(self.params, packed, self.x_te, self.y_te)
-            acc, loss = np.asarray(jax.device_get(a)), np.asarray(jax.device_get(lo))
-            self.stats.h2d_bytes += 2 * eidx.nbytes
+            a, lo = self._eval(eval_params, packed, self.x_te, self.y_te)
+            acc = np.asarray(jax.device_get(a))
+            loss = np.asarray(jax.device_get(lo))
+            self.stats.h2d_bytes += 2 * rows.nbytes
             self.stats.d2h_bytes += acc.nbytes + loss.nbytes
-        for ei, i in enumerate(order):
-            sc = scheds[i]
-            sims[i]._record_round(
-                r, plans[i].t_now, sc.t_end, len(plans[i].chosen),
-                len(sc.fresh_rows), len(sc.landing),
-                acc_loss=(acc[ei], loss[ei]) if acc is not None else None,
-                progress=self.progress)
-            if sims[i]._target_reached():
-                sims[i].acct.stopped_early = True
-                self.done[i] = True
+            for ei, i in enumerate(wl.order):
+                sims[i]._fill_round_eval(wl.recs[i], acc[ei], loss[ei],
+                                         progress=self.progress)
+                if sims[i]._target_reached():
+                    sims[i].acct.stopped_early = True
+                    self.done[i] = True
+        if self.mesh is not None:
+            self._maybe_repack()
+
+    # ------------------------------------------------------------------
+    # Shard-aware repacking (early-stopped cells vacate whole shard
+    # bucket steps; live cells compact across shard boundaries)
+    # ------------------------------------------------------------------
+    def _maybe_repack(self) -> None:
+        from repro.sweeps.sharding import Placement
+        live = [i for i in range(len(self.sims)) if not self.done[i]]
+        if not live:
+            return
+        new_pl = Placement.build(live, self.n_shards)
+        if new_pl.s_loc >= self.placement.s_loc:
+            return
+        self._repack(new_pl, live)
+
+    def _repack(self, new_pl, live) -> None:
+        from repro.sweeps.sharding import reshard_rows
+        old_pl = self.placement
+        d = self.d
+        self.stats.dispatches["repack"] += 1
+
+        # 1. save the evicted (done) cells' final rows to host — their
+        #    device rows disappear with the shrink; finalize reads these
+        evict = [i for i in old_pl.shard_of
+                 if self.done[i] and i not in self._saved]
+        if evict:
+            # replicated: the jitted gather reads sharded operands, so a
+            # single-device index array would force an implicit reshard
+            idx = jax.device_put(
+                np.asarray([old_pl.flat_row(i) for i in evict], np.int32),
+                self._rep_spec)
+            fetch = _row_fetch_program()
+            rows = np.asarray(jax.device_get(fetch(self.params, idx)))
+            opt_rows = None
+            if self.yogi:
+                opt_rows = jax.tree.map(
+                    lambda a: np.asarray(jax.device_get(fetch(a, idx))),
+                    self.opt_state)
+            self.stats.d2h_bytes += rows.nbytes
+            for k, i in enumerate(evict):
+                self._saved[i] = (
+                    rows[k],
+                    jax.tree.map(lambda a: a[k], opt_rows)
+                    if self.yogi else None)
+
+        # 2. migrate params / optimizer rows into the compacted layout
+        head = (self.n_shards, new_pl.s_loc + 1)
+        pmap = np.full(new_pl.total_rows, old_pl.scratch_flat(0), np.int32)
+        for i in live:
+            pmap[new_pl.flat_row(i)] = old_pl.flat_row(i)
+        self.params = reshard_rows(self.params, pmap, head, self._shard_spec)
+        if self.yogi:
+            self.opt_state = jax.tree.map(
+                lambda a: reshard_rows(a, pmap, head, self._shard_spec),
+                self.opt_state)
+
+        # 3. rebuild the sharded cache: every live in-flight entry gets a
+        #    slot on its cell's new shard (allocation may grow capacity),
+        #    then one gather moves the rows
+        new_acc = ShardedSlotAccounts(self.n_shards,
+                                      capacity=self.accounts.capacity)
+        moves = []                        # (in-flight entry, old flat row)
+        old_rows_loc = self.accounts.capacity + 1
+        for i in live:
+            shard = new_pl.shard_of[i]
+            for f in self.sims[i].stale_cache:
+                old_shard, old_slot = f.delta
+                slots, _ = new_acc.alloc(shard, 1)
+                f.delta = (shard, slots[0])
+                moves.append((f, old_shard * old_rows_loc + old_slot))
+        new_rows_loc = new_acc.capacity + 1
+        # default: shard 0's old trash row — any defined row does (padding
+        # slots are always scatter-written before they are ever gathered)
+        cmap = np.full(self.n_shards * new_rows_loc, old_rows_loc - 1,
+                       np.int32)
+        for f, old_flat in moves:
+            shard, slot = f.delta
+            cmap[shard * new_rows_loc + slot] = old_flat
+        self.cache_rows = reshard_rows(
+            self.cache_rows, cmap, (self.n_shards, new_rows_loc),
+            self._shard_spec)
+        self.accounts = new_acc
+        self._pending_free = []   # old slot ids are meaningless now
+        self.placement = new_pl
 
     # ------------------------------------------------------------------
     def finalize(self):
@@ -516,10 +933,27 @@ class RoundPipeline:
         After this the pipeline's donated-buffer chain ends; the returned
         Accountings are the same objects ``Simulator.run`` yields."""
         accts = []
+        if self.mesh is None:
+            for i, sim in enumerate(self.sims):
+                sim.flat_params = self.params[i]
+                if self.yogi:
+                    sim.flat_opt_state = jax.tree.map(lambda x: x[i],
+                                                      self.opt_state)
+                accts.append(sim._finalize())
+            return accts
+        flat = self.params.reshape(-1, self.d)
         for i, sim in enumerate(self.sims):
-            sim.flat_params = self.params[i]
-            if self.yogi:
-                sim.flat_opt_state = jax.tree.map(lambda x: x[i],
-                                                  self.opt_state)
+            if i in self._saved:
+                row, opt_row = self._saved[i]
+                sim.flat_params = jnp.asarray(row)
+                if self.yogi:
+                    sim.flat_opt_state = jax.tree.map(jnp.asarray, opt_row)
+            else:
+                fr = self.placement.flat_row(i)
+                sim.flat_params = flat[fr]
+                if self.yogi:
+                    sim.flat_opt_state = jax.tree.map(
+                        lambda a: a.reshape((-1,) + a.shape[2:])[fr],
+                        self.opt_state)
             accts.append(sim._finalize())
         return accts

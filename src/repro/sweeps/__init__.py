@@ -1,19 +1,24 @@
 """Vectorized scenario sweeps: declarative grids of FL simulations executed
 as one batched program over the flat fast path.
 
-  grid    — named axes (policy, SAA, hardware, availability, mapping, seeds)
-            expanded to concrete ``SimConfig`` cells with shared-seed pairing
-  runner  — lockstep batched executor: packed (S, n, D) training, vmapped /
-            Pallas-kernel SAA aggregation, batched server step + eval;
-            per-cell metrics bit-identical to serial ``Simulator.run``
-  results — struct-of-arrays metric accumulation per cell
-  report  — paper-style resource-to-accuracy tables (text / markdown)
+  grid     — named axes (policy, SAA, hardware, availability, mapping, seeds)
+             expanded to concrete ``SimConfig`` cells with shared-seed pairing
+  runner   — lockstep batched executor: packed (S, n, D) training, vmapped /
+             Pallas-kernel SAA aggregation, batched server step + eval;
+             per-cell metrics bit-identical to serial ``Simulator.run``
+  sharding — sweep-axis device mesh: cell placement over a 1-D
+             ``jax.sharding.Mesh``, shard-aware repacking, row migration
+             (``SweepRunner(cells, shard=True)`` / ``mesh=``)
+  results  — struct-of-arrays metric accumulation per cell
+  report   — paper-style resource-to-accuracy tables (text / markdown)
 
-``python -m repro.sweeps [--smoke]`` runs a demo grid, verifies serial
-parity, and writes ``BENCH_sweeps.json``.
+``python -m repro.sweeps [--smoke] [--sharded] [--rounds-per-dispatch K]``
+runs a demo grid, verifies serial parity, and writes ``BENCH_sweeps.json``.
 """
 from repro.sweeps.grid import (AXES, POLICIES, Cell, SweepSpec,  # noqa: F401
                                axis_updates, register_axis)
 from repro.sweeps.results import CellResult, SweepResults  # noqa: F401
 from repro.sweeps.runner import (SweepRunner, assert_parity,  # noqa: F401
                                  compat_key, run_batched, run_serial)
+from repro.sweeps.sharding import (Placement, local_capacity,  # noqa: F401
+                                   sweep_mesh)

@@ -11,6 +11,7 @@ serial wall-clock) at the repo root.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import pathlib
 
@@ -37,17 +38,33 @@ def demo_spec(smoke: bool) -> SweepSpec:
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true", help="small CI grid")
+    ap.add_argument("--sharded", action="store_true",
+                    help="shard the sweep axis over the local device mesh")
+    ap.add_argument("--rounds-per-dispatch", type=int, default=1,
+                    help="K rounds per device dispatch (lax.scan chunking)")
     ap.add_argument("--out", default=None, help="BENCH_sweeps.json path")
     args = ap.parse_args(argv)
 
     spec = demo_spec(args.smoke)
     cells = spec.expand()
+    if args.rounds_per_dispatch != 1:
+        cells = [dataclasses.replace(c, config=dataclasses.replace(
+            c.config, rounds_per_dispatch=args.rounds_per_dispatch))
+            for c in cells]
+    if args.sharded:
+        import jax
+        print(f"# sharding the sweep axis over {len(jax.devices())} device(s)")
     print(f"# sweep: {len(cells)} cells "
           f"({' x '.join(f'{a}[{len(v)}]' for a, v in spec.axes.items())}"
           f" x seeds[{len(spec.seeds)}])")
 
-    results, batched_wall = run_batched(cells)
-    serial_summaries, serial_wall = run_serial(cells)
+    results, batched_wall = run_batched(cells, shard=args.sharded)
+    # the serial reference stays at K=1: an independent ground truth for the
+    # chunked run, not the same prescheduling machinery run twice
+    serial_cells = ([dataclasses.replace(c, config=dataclasses.replace(
+        c.config, rounds_per_dispatch=1)) for c in cells]
+        if args.rounds_per_dispatch != 1 else cells)
+    serial_summaries, serial_wall = run_serial(serial_cells)
     assert_parity(results, serial_summaries)
     speedup = serial_wall / max(batched_wall, 1e-9)
     print(f"# batched {batched_wall:.2f}s vs serial {serial_wall:.2f}s "
@@ -62,6 +79,8 @@ def main(argv=None) -> None:
     payload = {
         "bench": "sweeps",
         "mode": "smoke" if args.smoke else "demo",
+        "sharded": args.sharded,
+        "rounds_per_dispatch": args.rounds_per_dispatch,
         "cells": len(cells),
         "batched_wall_s": round(batched_wall, 3),
         "serial_wall_s": round(serial_wall, 3),

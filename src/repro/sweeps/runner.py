@@ -122,11 +122,20 @@ def _sweep_yogi_fn():
 
 @dataclasses.dataclass
 class SweepRunner:
-    """Expand cells (``SweepSpec.expand()``) and run them batched."""
+    """Expand cells (``SweepSpec.expand()``) and run them batched.
+
+    ``shard=True`` places each compatibility batch's sweep axis on a 1-D
+    device mesh (``repro.sweeps.sharding.sweep_mesh`` over all local
+    devices; pass ``mesh=`` for an explicit one) — cells run shard-local
+    round programs under ``shard_map`` with bit-identical per-cell results.
+    Multi-round chunking is per-cell config (``SimConfig.rounds_per_dispatch``).
+    """
     cells: Sequence[Cell]
     progress: bool = False
     substrate_cache: Optional[dict] = None
     last_stats: Optional[dict] = None     # fused-pipeline transfer/dispatch stats
+    shard: bool = False
+    mesh: Optional[object] = None         # jax.sharding.Mesh over axis "s"
 
     def __post_init__(self):
         for c in self.cells:
@@ -135,6 +144,15 @@ class SweepRunner:
                                  "requires fast_path=True")
         if self.substrate_cache is None:
             self.substrate_cache = {}
+        if self.shard and self.mesh is None:
+            from repro.sweeps.sharding import sweep_mesh
+            self.mesh = sweep_mesh()
+        if self.mesh is not None:
+            for c in self.cells:
+                if not c.config.fused_rounds:
+                    raise ValueError(
+                        f"cell {c.name}: sweep-axis sharding requires the "
+                        "fused pipeline (fused_rounds=True)")
 
     def substrate(self, cfg) -> Substrate:
         key = substrate_key(cfg)
@@ -160,7 +178,7 @@ class SweepRunner:
         cfgs = [c.config for c in batch]
         sims = [Simulator(cfg, substrate=self.substrate(cfg)) for cfg in cfgs]
         if cfgs[0].fused_rounds:        # uniform within a compat batch
-            pipe = RoundPipeline(sims, progress=self.progress)
+            pipe = RoundPipeline(sims, progress=self.progress, mesh=self.mesh)
             accts = pipe.run()
             stats = pipe.stats.as_dict()
             if self.last_stats is None:
@@ -313,10 +331,10 @@ def run_serial(cells: Sequence[Cell]):
     return summaries, time.time() - t0
 
 
-def run_batched(cells: Sequence[Cell]):
+def run_batched(cells: Sequence[Cell], shard: bool = False, mesh=None):
     """Returns (SweepResults, wall seconds) — wall includes substrate builds."""
     t0 = time.time()
-    results = SweepRunner(cells).run()
+    results = SweepRunner(cells, shard=shard, mesh=mesh).run()
     return results, time.time() - t0
 
 

@@ -1,0 +1,154 @@
+"""Sweep-axis device sharding: mesh, cell placement, and migration.
+
+The sweep subsystem's `(S, ...)` leading axis is the natural device axis:
+cells are independent simulations, so the fused round program partitions
+over a 1-D ``jax.sharding.Mesh`` with axis ``"s"`` without any cross-cell
+collectives — each shard runs the identical round body on its own slice of
+cells, caches, and index arrays (``shard_map`` in ``repro.sim.pipeline``).
+
+This module owns the host-side layout machinery:
+
+``sweep_mesh``
+    Build the 1-D mesh over the local devices.  On a single-device host the
+    mesh degenerates to one shard (the sharded code path stays exercisable
+    everywhere); CI forces a multi-device CPU host via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
+
+``Placement``
+    The cell -> (shard, local slot) assignment.  Cells are split into
+    balanced contiguous blocks (ascending cell index), every shard's local
+    arrays are padded to one shared power-of-two bucket ``s_loc`` plus one
+    scratch row (the padding target for empty aggregation groups), so the
+    global params/optimizer tensors are rectangular
+    ``(n_shards, s_loc + 1, D)`` and shard cleanly.
+
+Shard-aware repacking: when early-stopped cells shrink the live set enough
+that the *bucketed* per-shard capacity drops, the pipeline rebuilds a
+smaller ``Placement`` — live cells are compacted across shard boundaries
+so stopped cells vacate their slots in whole per-shard bucket steps, and
+every shard's padded work shrinks together (lockstep SPMD wall-time tracks
+the busiest shard, so the shrink only pays off when all shards shed rows).
+Migration is pure data movement (``reshard_rows``: one gather with the
+target sharding), so repacking never changes any cell's bits.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.aggregation import bucket_pow2
+
+SWEEP_AXIS = "s"
+
+
+def sweep_mesh(devices=None) -> Mesh:
+    """1-D device mesh over the sweep axis (all local devices by default)."""
+    devs = jax.devices() if devices is None else list(devices)
+    return Mesh(np.array(devs), (SWEEP_AXIS,))
+
+
+def shard_spec(mesh: Mesh) -> NamedSharding:
+    """Leading-axis sharding for the (n_shards, ...) state tensors."""
+    return NamedSharding(mesh, P(SWEEP_AXIS))
+
+
+def replicated_spec(mesh: Mesh) -> NamedSharding:
+    """Full replication (datasets / test sets / index maps)."""
+    return NamedSharding(mesh, P())
+
+
+def chunk_spec(mesh: Mesh) -> NamedSharding:
+    """(K, n_shards, L) per-round index arrays: sharded on the middle axis."""
+    return NamedSharding(mesh, P(None, SWEEP_AXIS))
+
+
+def local_capacity(n_cells: int, n_shards: int) -> int:
+    """Bucketed per-shard cell capacity: the power-of-two bucket of the
+    balanced split's largest shard (>= 1 even for an empty live set)."""
+    return bucket_pow2(max(-(-max(n_cells, 1) // n_shards), 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """Cell -> (shard, local slot) assignment over a 1-D sweep mesh.
+
+    ``s_loc`` is the shared per-shard cell capacity (scratch row excluded);
+    the global row of a cell in the flattened ``(n_shards * (s_loc+1), D)``
+    view is ``shard * (s_loc + 1) + slot``, and each shard's scratch row
+    (index ``s_loc`` locally) is the write target of padding aggregation
+    groups — never a real cell.
+    """
+    n_shards: int
+    s_loc: int
+    shard_of: dict
+    slot_of: dict
+    shards: tuple           # shard -> tuple of its cells, ascending
+
+    @staticmethod
+    def build(cells, n_shards: int) -> "Placement":
+        cells = sorted(cells)
+        n = len(cells)
+        s_loc = local_capacity(n, n_shards)
+        sizes = [n // n_shards + (1 if j < n % n_shards else 0)
+                 for j in range(n_shards)]
+        shard_of, slot_of, shards, off = {}, {}, [], 0
+        for j, size in enumerate(sizes):
+            block = cells[off:off + size]
+            off += size
+            shards.append(tuple(block))
+            for slot, c in enumerate(block):
+                shard_of[c] = j
+                slot_of[c] = slot
+        return Placement(n_shards, s_loc, shard_of, slot_of, tuple(shards))
+
+    @property
+    def scratch_slot(self) -> int:
+        return self.s_loc
+
+    @property
+    def rows_per_shard(self) -> int:
+        return self.s_loc + 1
+
+    @property
+    def total_rows(self) -> int:
+        return self.n_shards * (self.s_loc + 1)
+
+    def flat_row(self, cell) -> int:
+        return self.shard_of[cell] * (self.s_loc + 1) + self.slot_of[cell]
+
+    def scratch_flat(self, shard: int) -> int:
+        return shard * (self.s_loc + 1) + self.s_loc
+
+
+# ---------------------------------------------------------------------------
+# Migration: gather rows of a (n_shards, rows_loc, ...) tensor into a new
+# layout under the same sharding.  Used for repacking (placement shrink) and
+# for sharded stale-cache growth; both are pure data movement.
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=16)
+def _reshard_fn(sharding: NamedSharding):
+    @functools.partial(jax.jit, out_shardings=sharding, static_argnums=(2,))
+    def f(arr, new_to_old, head):
+        flat = arr.reshape((-1,) + arr.shape[2:])
+        return flat[new_to_old].reshape(head + arr.shape[2:])
+    return f
+
+
+def reshard_rows(arr, new_to_old: np.ndarray, head: tuple,
+                 sharding: NamedSharding):
+    """``out[shard, slot] = arr.flat_rows[new_to_old[shard * rows + slot]]``.
+
+    arr: (n_shards, rows_loc, ...) device tensor; new_to_old: flat int32 map
+    of length ``head[0] * head[1]`` into the *old* flattened row space;
+    returns a (head[0], head[1], ...) tensor placed under ``sharding``.
+    The map upload is an explicit ``device_put`` (transfer-guard clean).
+    """
+    idx = jax.device_put(np.asarray(new_to_old, np.int32),
+                         NamedSharding(sharding.mesh, P()))
+    return _reshard_fn(sharding)(arr, idx, tuple(head))

@@ -1,0 +1,69 @@
+"""The benchmark regression guard fails on parity mismatches and on
+beyond-tolerance slowdowns, but not on noise or missing baselines."""
+import json
+import sys
+import pathlib
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks.check_regression import check
+
+
+def _engine(rps_fused, rps_flat=300.0, parity=True):
+    return {"bench": "engine", "mode": "smoke", "engine": [{
+        "n_learners": 100, "rounds": 10,
+        "fused": {"rounds_per_sec": rps_fused},
+        "flat": {"rounds_per_sec": rps_flat},
+        "parity": parity,
+    }]}
+
+
+def _sweeps(wall, parity=True, s_cells=4):
+    return {"bench": "sweeps", "mode": "smoke", "sweep": [{
+        "s_cells": s_cells, "n_learners": 100, "rounds": 12,
+        "batched_wall_s": wall, "parity": parity,
+    }], "early_stop": [], "variants": []}
+
+
+def _write(tmp_path, name, base, cur):
+    b, c = tmp_path / "base", tmp_path / "cur"
+    b.mkdir(exist_ok=True), c.mkdir(exist_ok=True)
+    (b / name).write_text(json.dumps(base))
+    (c / name).write_text(json.dumps(cur))
+    return b, c
+
+
+def test_noise_within_tolerance_passes(tmp_path):
+    _write(tmp_path, "BENCH_engine.json", _engine(400.0), _engine(250.0))
+    b, c = _write(tmp_path, "BENCH_sweeps.json", _sweeps(1.0), _sweeps(1.8))
+    assert check(b, c, 2.0) == 0
+
+
+def test_slowdown_beyond_tolerance_fails(tmp_path):
+    b, c = _write(tmp_path, "BENCH_engine.json",
+                  _engine(400.0), _engine(150.0))
+    (b / "BENCH_sweeps.json").write_text(json.dumps(_sweeps(1.0)))
+    (c / "BENCH_sweeps.json").write_text(json.dumps(_sweeps(1.0)))
+    assert check(b, c, 2.0) == 1
+
+
+def test_sweep_wall_regression_fails(tmp_path):
+    _write(tmp_path, "BENCH_engine.json", _engine(400.0), _engine(400.0))
+    b, c = _write(tmp_path, "BENCH_sweeps.json", _sweeps(1.0), _sweeps(2.5))
+    assert check(b, c, 2.0) == 1
+
+
+def test_parity_false_fails_regardless_of_speed(tmp_path):
+    _write(tmp_path, "BENCH_engine.json",
+           _engine(400.0), _engine(1000.0, parity=False))
+    b, c = _write(tmp_path, "BENCH_sweeps.json", _sweeps(1.0), _sweeps(0.5))
+    assert check(b, c, 2.0) == 1
+
+
+def test_unmatched_rows_are_skipped_not_failed(tmp_path):
+    # baseline rows at a different grid config: nothing comparable -> OK
+    _write(tmp_path, "BENCH_engine.json", _engine(400.0), _engine(100.0)
+           | {"engine": [{**_engine(100.0)["engine"][0], "rounds": 99}]})
+    b, c = _write(tmp_path, "BENCH_sweeps.json",
+                  _sweeps(1.0, s_cells=64), _sweeps(9.9, s_cells=4))
+    assert check(b, c, 2.0) == 0

@@ -1,0 +1,280 @@
+"""Properties of the chunked (K rounds per dispatch) and sweep-axis-sharded
+round pipeline:
+
+- ``rounds_per_dispatch = K`` is bit-identical to K=1 — full summary and
+  per-round records — across selectors, aggregators, staleness thresholds
+  and accuracy-target early stop (chunks break at eval boundaries, so the
+  round semantics never change);
+- placing the sweep axis on a 1-D device mesh (``shard_map`` over "s") is
+  bit-identical per cell to the unsharded run, including shard-awkward
+  shapes: S not divisible by the device count, S=1 on a multi-device mesh,
+  and early-stop shrinking that repacks live cells across shard boundaries;
+- the sharded + chunked hot loop stays clean under
+  ``jax.transfer_guard("disallow")``;
+- ``ShardedSlotAccounts`` keeps per-shard slot discipline (LIFO reuse,
+  uniform growth, no double-free).
+
+The mesh spans all local devices: on the default CI leg that is one device
+(the sharded code path with a trivial mesh); the multi-device CI leg forces
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` so the same tests
+exercise real 4-way sharding, cross-shard repacking included.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core.stale_cache import ShardedSlotAccounts
+from repro.sim import SimConfig, Simulator
+from repro.sim.pipeline import RoundPipeline
+from repro.sweeps import Cell, SweepRunner, SweepSpec, sweep_mesh
+from repro.sweeps.runner import summaries_equal
+from repro.sweeps.sharding import Placement, local_capacity
+
+BASE = dict(n_learners=30, rounds=8, eval_every=4, n_target=4,
+            mapping="label_uniform")
+
+
+def _records_equal(a, b) -> bool:
+    if len(a.records) != len(b.records):
+        return False
+    for ra, rb in zip(a.records, b.records):
+        ka = (ra.round_idx, ra.sim_time, ra.n_selected, ra.n_fresh,
+              ra.n_stale, ra.resource_used, ra.resource_wasted,
+              ra.unique_participants)
+        kb = (rb.round_idx, rb.sim_time, rb.n_selected, rb.n_fresh,
+              rb.n_stale, rb.resource_used, rb.resource_wasted,
+              rb.unique_participants)
+        accs = (ra.accuracy == rb.accuracy
+                or (ra.accuracy != ra.accuracy and rb.accuracy != rb.accuracy))
+        if ka != kb or not accs:
+            return False
+    return True
+
+
+def _chunk_parity(cfg: SimConfig, k: int):
+    ck = dataclasses.replace(cfg, rounds_per_dispatch=k)
+    a = Simulator(cfg).run()
+    b = Simulator(ck).run()
+    assert summaries_equal(dict(a.summary()), dict(b.summary())), \
+        (cfg, a.summary(), b.summary())
+    assert _records_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Multi-round chunking: K rounds per dispatch == K=1, bitwise
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(selector=st.sampled_from(["random", "priority", "safa", "oort"]),
+       saa=st.booleans(),
+       k=st.sampled_from([3, 8]),
+       seed=st.integers(0, 2))
+def test_chunked_rounds_match_k1(selector, saa, k, seed):
+    _chunk_parity(SimConfig(selector=selector, saa=saa, seed=seed,
+                            deadline=60.0, **BASE), k)
+
+
+def test_chunked_yogi_apt_threshold():
+    _chunk_parity(SimConfig(selector="priority", saa=True, apt=True,
+                            aggregator="yogi", seed=1, **BASE), 8)
+    _chunk_parity(SimConfig(selector="safa", saa=True,
+                            staleness_threshold=1, seed=0, **BASE), 8)
+
+
+def test_chunked_early_stop_matches():
+    """Chunks break at eval boundaries, so accuracy-target early stop fires
+    at the identical round — and stops mid-chunk-schedule are impossible."""
+    _chunk_parity(SimConfig(selector="priority", saa=True, seed=0,
+                            target_accuracy=0.15, **BASE), 8)
+
+
+def test_chunked_fewer_dispatches():
+    cfg = SimConfig(selector="priority", saa=True, seed=0,
+                    rounds_per_dispatch=4, **BASE)
+    pipe = RoundPipeline([Simulator(cfg)])
+    pipe.run()
+    st_ = pipe.stats.as_dict()
+    assert st_["rounds"] > 0
+    # 8 rounds with eval_every=4 -> chunks of 4: at most ceil(rounds/4)+1
+    assert st_["dispatches"]["round"] <= -(-st_["rounds"] // 4) + 1
+    assert st_["rounds_per_dispatch"] == 4
+
+
+def test_oort_forces_single_round_chunks():
+    """Oort's stat-utility feedback is device data consumed by the next
+    round's selection, so prescheduling caps at one round."""
+    cfg = SimConfig(selector="oort", saa=True, seed=0,
+                    rounds_per_dispatch=8, **BASE)
+    pipe = RoundPipeline([Simulator(cfg)])
+    pipe.run()
+    st_ = pipe.stats.as_dict()
+    assert st_["rounds_per_dispatch"] == 1
+    assert st_["dispatches"]["round"] == st_["rounds"]
+
+
+# ---------------------------------------------------------------------------
+# Sweep-axis sharding: mesh == unsharded, bitwise
+# ---------------------------------------------------------------------------
+
+
+def _grid(n_cells: int, **base) -> list:
+    axes = {
+        4: {"selector": ["random", "priority"], "saa": [False, True]},
+        5: {"selector": ["random", "priority", "safa", "oort"],
+            "saa": [True]},
+        16: {"selector": ["random", "oort", "priority", "safa"],
+             "saa": [False, True], "hardware": ["HS1", "HS3"]},
+        64: {"selector": ["random", "oort", "priority", "safa"],
+             "saa": [False, True], "hardware": ["HS1", "HS2", "HS3", "HS4"]},
+    }[n_cells]
+    seeds = (0, 1) if n_cells == 64 else (0,)
+    cells = SweepSpec(axes=axes, base={**BASE, **base}, seeds=seeds).expand()
+    return cells[:n_cells]
+
+
+def _sharded_parity(cells, **runner_kw):
+    ref = SweepRunner(cells).run()
+    got = SweepRunner(cells, shard=True, **runner_kw).run()
+    for a, b in zip(ref, got):
+        assert summaries_equal(dict(a.summary), dict(b.summary)), \
+            (a.cell.name, a.summary, b.summary)
+        assert _records_equal(a.acct, b.acct), a.cell.name
+    return got
+
+
+def test_sharded_s64_matches_unsharded():
+    """The acceptance grid: a 64-cell sweep on the full local mesh is
+    bit-identical per cell to the unsharded run (4-way sharded on the
+    multi-device CI leg)."""
+    cells = _grid(64, n_learners=20, rounds=4, eval_every=2)
+    _sharded_parity(cells)
+
+
+def test_sharded_indivisible_s():
+    """S=5 on the local mesh: shard loads differ (e.g. 2/1/1/1 on four
+    devices) and the padded buckets stay uniform across shards."""
+    _sharded_parity(_grid(5))
+
+
+def test_single_cell_on_mesh():
+    """S=1 on a (possibly) multi-device mesh: every other shard runs pure
+    padding rows — results identical to the serial engine."""
+    cfg = SimConfig(selector="priority", saa=True, seed=2, **BASE)
+    a = Simulator(cfg).run()
+    pipe = RoundPipeline([Simulator(cfg)], mesh=sweep_mesh())
+    b = pipe.run()[0]
+    assert summaries_equal(dict(a.summary()), dict(b.summary()))
+    assert _records_equal(a, b)
+
+
+def test_sharded_chunked_matches():
+    """Sharding composes with multi-round chunking: shard_map over the mesh
+    with a K-round scan inside, still bitwise the K=1 unsharded run."""
+    base = dict(n_learners=30, rounds=12, eval_every=3, n_target=4,
+                mapping="label_uniform")
+    cells = _grid(4)
+    cells = [dataclasses.replace(c, config=dataclasses.replace(
+        c.config, **base, rounds_per_dispatch=4)) for c in cells]
+    ref_cells = [dataclasses.replace(c, config=dataclasses.replace(
+        c.config, rounds_per_dispatch=1)) for c in cells]
+    ref = SweepRunner(ref_cells).run()
+    got = SweepRunner(cells, shard=True).run()
+    for a, b in zip(ref, got):
+        assert summaries_equal(dict(a.summary), dict(b.summary)), \
+            (a.cell.name, a.summary, b.summary)
+
+
+def test_sharded_early_stop_repacks_across_shards():
+    """Early-stopped cells leave the batch; once enough stop, the bucketed
+    per-shard capacity drops and live cells compact across shard
+    boundaries.  The repacked run stays bit-identical, and on a multi-device
+    mesh the repack actually fires."""
+    base = dict(n_learners=30, rounds=12, eval_every=3, n_target=4,
+                mapping="label_uniform", target_accuracy=0.12)
+    axes = {"selector": ["random", "priority", "safa"], "saa": [False, True]}
+    cells = SweepSpec(axes=axes, base=base, seeds=(0, 1)).expand()
+
+    ref = SweepRunner(cells).run()
+    runner = SweepRunner(cells, shard=True)
+    got = runner.run()
+    for a, b in zip(ref, got):
+        assert summaries_equal(dict(a.summary), dict(b.summary)), \
+            (a.cell.name, a.summary, b.summary)
+    stopped = sum(1 for r in got if r.summary["stopped_early"])
+    assert stopped >= len(cells) // 2          # the scenario must shrink
+    if len(jax.devices()) > 1:
+        assert runner.last_stats["dispatches"]["repack"] >= 1
+
+
+def test_sharded_kernel_cells():
+    """The sweep-axis Pallas kernel inside shard_map: its grid covers the
+    local S and per-cell results stay bitwise the unsharded kernel's."""
+    _sharded_parity(_grid(4, use_agg_kernel=True, saa=True))
+
+
+def test_sharded_transfer_guard_clean():
+    """The sharded chunked hot loop performs no implicit transfers: index
+    uploads are explicit (sharded) device_puts, eviction fetches explicit
+    device_gets."""
+    cfgs = [c.config for c in _grid(4, rounds_per_dispatch=4)]
+    mesh = sweep_mesh()
+    RoundPipeline([Simulator(c) for c in cfgs], mesh=mesh).run()  # warm
+    pipe = RoundPipeline([Simulator(c) for c in cfgs], mesh=mesh)
+    accts = pipe.run(transfer_guard=True)
+    st_ = pipe.stats.as_dict()
+    assert st_["dispatches"]["round"] > 0
+    assert all(a.summary()["rounds"] > 0 for a in accts)
+
+
+# ---------------------------------------------------------------------------
+# Host-side unit tests: placement + per-shard slot accounting
+# ---------------------------------------------------------------------------
+
+
+def test_placement_balanced_and_bucketed():
+    pl = Placement.build(range(10), 4)
+    assert [len(s) for s in pl.shards] == [3, 3, 2, 2]
+    assert pl.s_loc == local_capacity(10, 4) == 4        # bucket_pow2(3)
+    rows = {pl.flat_row(i) for i in range(10)}
+    assert len(rows) == 10
+    scr = {pl.scratch_flat(j) for j in range(4)}
+    assert not rows & scr                                # scratch never a cell
+    # shrink in whole-shard bucket steps
+    assert Placement.build(range(8), 4).s_loc == 2
+    assert Placement.build(range(3), 4).s_loc == 1
+    assert Placement.build([7], 4).shards[0] == (7,)
+
+
+def test_sharded_slot_accounts_discipline():
+    acc = ShardedSlotAccounts(2, capacity=2)
+    s0, grew = acc.alloc(0, 2)
+    assert s0 == [0, 1] and not grew
+    # shard 1's slot space is independent of shard 0's
+    s1, _ = acc.alloc(1, 1)
+    assert s1 == [0]
+    assert acc.shard_len(0) == 2 and acc.shard_len(1) == 1
+    # growth is uniform: shard 0 is full, so one more alloc doubles both
+    s2, grew = acc.alloc(0, 1)
+    assert grew and acc.capacity == 4 and s2 == [2]
+    assert acc.trash_slot == 4
+    # freed slots are reused LIFO within their shard
+    acc.free(0, [1])
+    s3, _ = acc.alloc(0, 1)
+    assert s3 == [1]
+    with pytest.raises(KeyError):
+        acc.free(0, [0, 0])
+    assert acc.flat_index(1, 3) == 1 * (acc.capacity + 1) + 3
+
+
+def test_sharded_slot_accounts_growth_preserves_ids():
+    acc = ShardedSlotAccounts(3, capacity=1)
+    first = [acc.alloc(j, 1)[0][0] for j in range(3)]
+    assert first == [0, 0, 0]
+    acc.alloc(0, 2)         # forces growth (and only then new ids)
+    assert acc.capacity == 4
+    assert acc.occupied(0) == [0, 1, 2]
+    assert acc.occupied(1) == [0]
