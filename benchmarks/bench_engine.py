@@ -12,8 +12,12 @@ Measures rounds/sec of the full simulation loop at n_learners in {100, 500,
 All three run the same seeds; the harness asserts the simulated
 schedule/accounting metrics are identical across the three (and the fused
 path's full summary — accuracy included — bit-equal to the flat path's)
-before reporting speedups.  Also runs the server-aggregation
-microbenchmark (µs per aggregate) and writes ``BENCH_engine.json``.
+before reporting speedups.  A ``participant`` section times the
+participant-axis-sharded pipeline (``SimConfig.shard_participants``) at
+n in {1000, 10000} learners against the unsharded run (bit-parity
+asserted), the scaling path for 10k+ cohorts.  Also runs the
+server-aggregation microbenchmark (µs per aggregate) and writes
+``BENCH_engine.json``.
 
 Usage:
   PYTHONPATH=src python -m benchmarks.bench_engine             # full sweep
@@ -34,6 +38,7 @@ import numpy as np
 
 from repro.core import aggregation as agg
 from repro.sim import SimConfig, Simulator
+from repro.sim.engine import Substrate
 
 PARITY_KEYS = ("rounds", "sim_time", "resource_used", "resource_wasted",
                "unique_participants")
@@ -106,6 +111,68 @@ def bench_engine(sizes, rounds: int, trials: int = 2) -> list[dict]:
     return out
 
 
+def bench_participant(sizes=((1000, 64), (10000, 256)), rounds: int = 6,
+                      trials: int = 2) -> list[dict]:
+    """Participant-axis sharding at large cohort pools: n in {1000, 10000}
+    learners, cohort rows split over all local devices vs the unsharded
+    pipeline, full-summary bit-parity asserted before any speedup is
+    reported.  Each n shares ONE substrate build across modes and trials
+    (``shard_participants`` is not part of the substrate key), so the rows
+    time the round loop, not 10k-learner world construction.  On a
+    single-device host the mesh is trivial — the row measures shard_map
+    overhead and guards the code path; the parallel win needs a real
+    multi-chip backend (the multi-device CI leg proves correctness).
+    Row configs are identical in smoke and full runs so the regression
+    guard always finds a matching baseline row.
+    """
+    import jax
+    out = []
+    for n, n_target in sizes:
+        cfg = SimConfig(n_learners=n, rounds=rounds, eval_every=rounds // 2,
+                        seed=0, saa=True, setting="OC", selector="priority",
+                        mapping="label_uniform", n_target=n_target)
+        sub = Substrate.build(cfg)
+
+        def run(c):
+            Simulator(c, substrate=sub).run()         # warm the jit caches
+            best = None
+            for _ in range(trials):
+                t0 = time.time()
+                summary = Simulator(c, substrate=sub).run().summary()
+                wall = time.time() - t0
+                if best is None or wall < best["wall_s"]:
+                    best = {
+                        "wall_s": round(wall, 3),
+                        "rounds_per_sec": round(
+                            summary["rounds"] / max(wall, 1e-9), 2),
+                        "summary": {k: (round(v, 6) if isinstance(v, float)
+                                        else v) for k, v in summary.items()},
+                    }
+            return best
+
+        res_u = run(cfg)
+        res_s = run(dataclasses.replace(cfg, shard_participants=True))
+        assert res_u["summary"] == res_s["summary"], \
+            f"participant-sharded divergence at n={n}"
+        rps_u, rps_s = res_u["rounds_per_sec"], res_s["rounds_per_sec"]
+        row = {
+            "n_learners": n,
+            "n_target": n_target,
+            "rounds": rounds,
+            "n_devices": len(jax.devices()),
+            "unsharded": res_u,
+            "sharded": res_s,
+            "speedup_sharded": round(rps_s / max(rps_u, 1e-9), 2),
+            "parity": True,
+        }
+        out.append(row)
+        print(f"participant/n={n},{1e6 / max(rps_s, 1e-9):.0f},"
+              f"sharded={rps_s};unsharded={rps_u};"
+              f"devices={row['n_devices']};"
+              f"speedup={row['speedup_sharded']}x")
+    return out
+
+
 def profile_pipeline(n_learners: int, rounds: int) -> dict:
     """Per-stage dispatch counts and host-transfer bytes of the fused round
     loop, run under ``jax.transfer_guard("disallow")`` — an implicit host
@@ -161,6 +228,8 @@ def main() -> None:
         "bench": "engine",
         "mode": "smoke" if smoke else "full",
         "engine": bench_engine(sizes, rounds, trials=2 if smoke else 3),
+        # identical configs in smoke and full (the guard matches rows)
+        "participant": bench_participant(trials=2),
         "server_agg": bench_server_agg(iters=5 if smoke else 30),
     }
     if profile:

@@ -11,6 +11,11 @@ matching baseline are reported and skipped.  Metrics where bigger is
 better (rounds/sec) fail when ``current < baseline / tol``; smaller-is-
 better metrics (wall seconds) fail when ``current > baseline * tol``.
 
+When ``--summary-out`` is given (or ``$GITHUB_STEP_SUMMARY`` is set, as on
+GitHub Actions), a markdown comparison table — baseline vs fresh, ratio,
+parity flags — is appended there, so regressions are readable straight
+from the Actions run page without downloading artifacts.
+
 Usage (the CI copies the checked-in files aside before the benches
 overwrite them):
 
@@ -24,6 +29,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
 import sys
 
@@ -34,6 +40,14 @@ COMPARISONS = [
      lambda r: r["fused"]["rounds_per_sec"], True, "fused rounds/sec"),
     ("BENCH_engine.json", "engine", ("n_learners", "rounds"),
      lambda r: r["flat"]["rounds_per_sec"], True, "flat rounds/sec"),
+    ("BENCH_engine.json", "participant",
+     ("n_learners", "n_target", "rounds", "n_devices"),
+     lambda r: r["sharded"]["rounds_per_sec"], True,
+     "participant-sharded rounds/sec"),
+    ("BENCH_engine.json", "participant",
+     ("n_learners", "n_target", "rounds", "n_devices"),
+     lambda r: r["unsharded"]["rounds_per_sec"], True,
+     "participant-unsharded rounds/sec"),
     ("BENCH_sweeps.json", "sweep", ("s_cells", "n_learners", "rounds"),
      lambda r: r["batched_wall_s"], False, "batched wall s"),
     ("BENCH_sweeps.json", "early_stop",
@@ -64,22 +78,58 @@ def _row_key(row: dict, keys: tuple):
         return None
 
 
+def _summary_markdown(rows: list, parity_fails: list, tolerance: float) -> str:
+    """Markdown comparison table for ``$GITHUB_STEP_SUMMARY`` — regressions
+    readable from the Actions run page, no artifact download needed."""
+    out = ["## Benchmark regression guard",
+           f"Tolerance {tolerance}x; higher-is-better metrics fail below "
+           f"`baseline / {tolerance}`, lower-is-better above "
+           f"`baseline * {tolerance}`.", ""]
+    if parity_fails:
+        out += ["### :x: Parity failures", ""]
+        out += [f"- `{p}`" for p in parity_fails] + [""]
+    else:
+        out += ["All parity flags true.", ""]
+    out += ["| status | row | metric | baseline | current | ratio |",
+            "|---|---|---|---|---|---|"]
+    icon = {"OK": ":white_check_mark:", "FAIL": ":x:", "SKIP": ":fast_forward:"}
+    for r in rows:
+        base = "—" if r["baseline"] is None else f"{r['baseline']}"
+        curv = "—" if r["current"] is None else f"{r['current']}"
+        ratio = ("—" if not (r["baseline"] and r["current"] is not None)
+                 else f"{r['current'] / r['baseline']:.2f}x")
+        out.append(f"| {icon[r['status']]} {r['status']} | `{r['tag']}` | "
+                   f"{r['label']} | {base} | {curv} | {ratio} |")
+    counts = {s: sum(1 for r in rows if r["status"] == s)
+              for s in ("OK", "SKIP", "FAIL")}
+    out += ["", f"{counts['OK']} compared, {counts['SKIP']} skipped, "
+            f"{counts['FAIL'] + len(parity_fails)} failures."]
+    return "\n".join(out) + "\n"
+
+
 def check(baseline_dir: pathlib.Path, current_dir: pathlib.Path,
-          tolerance: float) -> int:
+          tolerance: float, summary_path=None) -> int:
     failures, skipped, compared = [], [], []
+    parity_fails, rows_md = [], []
     current_cache = {}
     for fname, section, keys, metric, hib, label in COMPARISONS:
         cur_path = current_dir / fname
         base_path = baseline_dir / fname
         if not cur_path.exists():
             failures.append(f"missing current file {cur_path}")
+            rows_md.append({"status": "FAIL", "tag": f"{fname}:{section}",
+                            "label": "missing current file", "baseline": None,
+                            "current": None})
             continue
         if fname not in current_cache:
             current_cache[fname] = json.loads(cur_path.read_text())
-            _walk_parity(current_cache[fname], fname, failures)
+            _walk_parity(current_cache[fname], fname, parity_fails)
         cur = current_cache[fname]
         if not base_path.exists():
             skipped.append(f"{fname}:{section} — no baseline file")
+            rows_md.append({"status": "SKIP", "tag": f"{fname}:{section}",
+                            "label": "no baseline file", "baseline": None,
+                            "current": None})
             continue
         base = json.loads(base_path.read_text())
         base_rows = {_row_key(r, keys): r for r in base.get(section, [])}
@@ -89,15 +139,23 @@ def check(baseline_dir: pathlib.Path, current_dir: pathlib.Path,
             tag = f"{section}{list(key) if key else ''} {label}"
             if ref is None:
                 skipped.append(f"{tag} — no matching baseline row")
+                rows_md.append({"status": "SKIP",
+                                "tag": f"{section}{list(key) if key else ''}",
+                                "label": label, "baseline": None,
+                                "current": metric(row)})
                 continue
             c, b = metric(row), metric(ref)
             if hib:
                 ok, detail = c >= b / tolerance, f"{c} vs baseline {b}"
             else:
                 ok, detail = c <= b * tolerance, f"{c}s vs baseline {b}s"
+            rows_md.append({"status": "OK" if ok else "FAIL",
+                            "tag": f"{section}{list(key)}", "label": label,
+                            "baseline": b, "current": c})
             (compared if ok else failures).append(
                 f"{tag}: {detail}" + ("" if ok else
                                       f" (beyond {tolerance}x tolerance)"))
+    failures = parity_fails + failures
 
     for line in compared:
         print(f"OK    {line}")
@@ -107,6 +165,11 @@ def check(baseline_dir: pathlib.Path, current_dir: pathlib.Path,
         print(f"FAIL  {line}", file=sys.stderr)
     print(f"# {len(compared)} compared, {len(skipped)} skipped, "
           f"{len(failures)} failures (tolerance {tolerance}x)")
+
+    if summary_path:
+        md = _summary_markdown(rows_md, parity_fails, tolerance)
+        with open(summary_path, "a") as f:
+            f.write(md)
     return 1 if failures else 0
 
 
@@ -118,8 +181,13 @@ def main(argv=None) -> int:
                     help="directory holding the fresh bench outputs")
     ap.add_argument("--tolerance", type=float, default=2.0,
                     help="multiplicative noise tolerance (default 2x)")
+    ap.add_argument("--summary-out", default=None,
+                    help="append a markdown comparison table here (defaults "
+                         "to $GITHUB_STEP_SUMMARY when set)")
     args = ap.parse_args(argv)
-    return check(args.baseline_dir, args.current_dir, args.tolerance)
+    return check(args.baseline_dir, args.current_dir, args.tolerance,
+                 summary_path=(args.summary_out
+                               or os.environ.get("GITHUB_STEP_SUMMARY")))
 
 
 if __name__ == "__main__":

@@ -168,9 +168,13 @@ class ShardedSlotAccounts:
     The sharded round pipeline keeps the cache rows as one
     ``(n_shards, capacity + 1, D)`` tensor sharded over the leading mesh
     axis; each shard's local slot space ``[0, capacity)`` (plus the local
-    scratch row at index ``capacity``) is an independent ``_SlotSpace``,
-    so a cell's stragglers always live in its own shard and the in-program
-    scatter/gather stays shard-local.
+    scratch row at index ``capacity``) is an independent ``_SlotSpace``.
+    ``n_shards`` counts *device* shards: under the 2-D ``("s", "p")``
+    round mesh the pipeline runs one slot space per flat ``(s, p)`` shard
+    (``n_shards = n_s * n_p``, s-major) — a cell's stragglers live on its
+    own sweep shard, partitioned over the participant shards that trained
+    them, and the in-program scatter/gather stays shard-local (landings
+    rejoin their cell through the aggregation psum).
 
     Capacity is uniform across shards (the device tensor is rectangular):
     when any shard's allocation outgrows its free list, ``alloc`` doubles

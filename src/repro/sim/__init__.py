@@ -2,3 +2,5 @@
 partitioning, learner local training, resource accounting, and the
 event-driven round engine that reproduces the paper's methodology."""
 from repro.sim.engine import Simulator, SimConfig  # noqa: F401
+from repro.sim.participant_sharding import (participant_mesh,  # noqa: F401
+                                            round_mesh)

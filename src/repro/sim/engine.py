@@ -21,7 +21,12 @@ tests/test_fastpath_parity.py and tests/test_pipeline_parity.py):
   batches are gathered in-program from a device copy of the dataset, and
   the only per-round device->host traffic is Oort's stat-utility vector
   (when an Oort selector is present) plus accuracy/loss every
-  ``eval_every`` rounds;
+  ``eval_every`` rounds.  ``SimConfig.shard_participants`` additionally
+  splits the packed cohort rows over a participant device-mesh axis
+  (``repro.sim.participant_sharding``) for 10k+ learner cohorts — the
+  dataset/trace tensors are replicated across the mesh (each shard
+  gathers its own rows' batches in-program) and per-round results stay
+  bit-identical to the unsharded pipeline;
 
   flat fast path (``fused_rounds=False``) — the per-stage flat path: flat
   (n, D) fp32 update rows from the compiled cohort program
@@ -168,6 +173,11 @@ class SimConfig:
     rounds_per_dispatch: int = 1      # K rounds per device dispatch (lax.scan chunk);
                                       # host decisions are prescheduled K ahead, chunks
                                       # break at eval rounds; bit-identical to K=1
+    shard_participants: int = 0       # shard the packed cohort rows over a device
+                                      # mesh axis "p": 0 = off, N = N shards (clamped
+                                      # to the local device count), True = all local
+                                      # devices.  Fused pipeline only; bit-identical
+                                      # to the unsharded run (one psum per round)
 
 
 def substrate_key(cfg: SimConfig) -> tuple:
@@ -685,6 +695,12 @@ class Simulator:
 
     # ------------------------------------------------------------------
     def run(self, progress: bool = False):
+        if self.cfg.shard_participants and not (self.cfg.fast_path
+                                                and self.cfg.fused_rounds):
+            raise ValueError(
+                "shard_participants requires the fused fast path "
+                "(fast_path=True, fused_rounds=True) — the per-stage and "
+                "legacy substrates have no device-sharded round program")
         if self.cfg.fast_path and self.cfg.fused_rounds:
             from repro.sim.pipeline import RoundPipeline
             return RoundPipeline([self], progress=progress).run()[0]

@@ -1,0 +1,135 @@
+"""Participant-axis device sharding: the 2-D round mesh and row placement.
+
+The fused round pipeline's device work is dominated by the packed cohort
+training rows — independent per-participant local-SGD programs — so the
+participant axis, unlike the sweep axis, parallelizes the hot matmuls
+themselves across devices.  This module owns the host-side layout machinery
+for placing those rows on a mesh; ``repro.sim.pipeline`` runs the sharded
+round program.
+
+Mesh composition
+----------------
+
+The round mesh is always 2-D with axes ``("s", "p")``:
+
+  ``"s"`` — the sweep axis (cells / simulations; PR 4's mesh).  Cell state
+      (params, optimizer rows) is partitioned over it and each shard runs
+      its own cells' rounds with **no** cross-cell communication;
+  ``"p"`` — the participant axis.  Each round's packed cohort rows are
+      split into balanced contiguous blocks over it: every p-shard trains
+      its block of rows shard-locally and holds the straggler-cache slots
+      of the rows it trained.
+
+Either axis may have size 1, so the same program covers sweep-only sharding
+(PR 4, ``n_p = 1``), participant-only sharding of a single simulation
+(``n_s = 1``), and the full 2-D composition.  ``as_round_mesh`` normalizes
+a legacy 1-D ``("s",)`` mesh (``repro.sweeps.sharding.sweep_mesh``) into
+the 2-D form.
+
+Collective-per-round invariant
+------------------------------
+
+Cell parameters are **replicated** along ``"p"`` (placed ``P("s")``): every
+p-shard applies the identical post-aggregation server step, so the replicas
+stay bitwise equal without communication.  The only cross-shard data
+dependency of a round is the SAA aggregation operand — each cell's fresh
+rows and landing cache slots live on whichever p-shards trained them — and
+it is reduced with a single ``jax.lax.psum`` over ``"p"``: each shard
+contributes the columns it owns and exact zeros elsewhere, so the summed
+operand is bit-identical to the unsharded gather (every element has exactly
+one non-zero contributor) and the psum is the ONE collective in the hot
+loop (asserted against the lowered HLO by tests/test_participant_sharding).
+
+Dataset/test tensors are replicated over the whole mesh (read-only: each
+p-shard gathers its own rows' local batches in-program); the per-round
+index arrays are sharded like the cache, one block per (s, p) shard.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+SWEEP_AXIS = "s"
+PART_AXIS = "p"
+
+
+def round_mesh(n_sweep: int = 1, n_participant: int = 1,
+               devices=None) -> Mesh:
+    """2-D ``("s", "p")`` mesh over ``n_sweep * n_participant`` devices."""
+    devs = list(jax.devices() if devices is None else devices)
+    need = n_sweep * n_participant
+    if need > len(devs):
+        raise ValueError(f"round_mesh needs {n_sweep} x {n_participant} = "
+                         f"{need} devices, have {len(devs)}")
+    return Mesh(np.array(devs[:need]).reshape(n_sweep, n_participant),
+                (SWEEP_AXIS, PART_AXIS))
+
+
+def participant_mesh(n_participant=True, devices=None) -> Mesh:
+    """Participant-only round mesh (``n_s = 1``) for single simulations.
+
+    ``n_participant=True`` takes every local device; an int takes that many
+    (clamped to the local device count, so a config asking for 4-way
+    sharding still runs — trivially — on a 1-device host).
+    """
+    devs = list(jax.devices() if devices is None else devices)
+    n_p = len(devs) if n_participant is True else min(int(n_participant),
+                                                     len(devs))
+    return round_mesh(1, max(n_p, 1), devs)
+
+
+def as_round_mesh(mesh: Mesh) -> Mesh:
+    """Normalize any accepted mesh into the 2-D ``("s", "p")`` form.
+
+    Accepts the legacy 1-D ``("s",)`` sweep mesh (becomes ``n_p = 1``), a
+    1-D ``("p",)`` mesh (becomes ``n_s = 1``), or a 2-D ``("s", "p")`` mesh
+    (returned as-is).
+    """
+    names = tuple(mesh.axis_names)
+    if names == (SWEEP_AXIS, PART_AXIS):
+        return mesh
+    devs = mesh.devices
+    if names == (SWEEP_AXIS,):
+        return Mesh(devs.reshape(-1, 1), (SWEEP_AXIS, PART_AXIS))
+    if names == (PART_AXIS,):
+        return Mesh(devs.reshape(1, -1), (SWEEP_AXIS, PART_AXIS))
+    raise ValueError(f"expected a ('s',), ('p',) or ('s', 'p') mesh, "
+                     f"got axes {names}")
+
+
+def split_balanced(n: int, parts: int) -> list:
+    """Balanced contiguous split sizes: ``parts`` blocks covering ``n`` rows,
+    sizes differing by at most one (larger blocks first) — the participant
+    analogue of ``Placement.build``'s cell split."""
+    return [n // parts + (1 if j < n % parts else 0) for j in range(parts)]
+
+
+# ---------------------------------------------------------------------------
+# Placement specs for the round pipeline's device tensors
+# ---------------------------------------------------------------------------
+
+
+def param_spec(mesh: Mesh) -> NamedSharding:
+    """(n_s, s_loc + 1, D) cell params/optimizer rows: partitioned over "s",
+    replicated over "p" (every p-shard applies the identical server step)."""
+    return NamedSharding(mesh, P(SWEEP_AXIS))
+
+
+def cache_spec(mesh: Mesh) -> NamedSharding:
+    """(n_s * n_p, C + 1, D) stale-cache rows: the leading axis is the flat
+    (s, p) shard id (s-major), matching ``ShardedSlotAccounts`` run with
+    ``n_shards = n_s * n_p`` — a straggler's slot lives on the p-shard that
+    trained it."""
+    return NamedSharding(mesh, P((SWEEP_AXIS, PART_AXIS)))
+
+
+def chunk_spec(mesh: Mesh) -> NamedSharding:
+    """(K, n_s * n_p, L) per-round packed index arrays: one block per flat
+    (s, p) shard."""
+    return NamedSharding(mesh, P(None, (SWEEP_AXIS, PART_AXIS)))
+
+
+def replicated_spec(mesh: Mesh) -> NamedSharding:
+    """Full replication (datasets / test sets / eval index maps)."""
+    return NamedSharding(mesh, P())

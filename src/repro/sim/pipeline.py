@@ -34,18 +34,37 @@ bit-identical to K=1 (asserted by tests/test_chunked_sharded.py).  An Oort
 selector needs its per-round device feedback before the *next* round's
 selection, so its presence forces K=1.
 
-Sweep-axis sharding (``mesh=`` a 1-D ``jax.sharding.Mesh`` over axis "s",
-see ``repro.sweeps.sharding``): cells are placed in balanced contiguous
-blocks of a ``(n_shards, s_loc + 1, D)`` params tensor (one scratch row per
-shard), the stale cache becomes ``(n_shards, c_loc + 1, D)`` with per-shard
-slot accounting (``ShardedSlotAccounts``), and the chunk program runs under
-``shard_map`` — each shard executes the identical round body on its own
-cells' packed rows, so no collectives appear in the hot loop.  Early-stop
-repacking is shard-aware: when the live set shrinks enough that the
-bucketed per-shard capacity drops, live cells are compacted across shard
-boundaries (stopped cells vacate whole per-shard bucket steps) and the
-state tensors are rebuilt by a resharding gather — pure data movement,
-bit-identical per cell to the unsharded run.
+Device sharding (``mesh=``): the round program runs under ``shard_map``
+over a 2-D ``("s", "p")`` mesh (``repro.sim.participant_sharding``; a
+legacy 1-D "s" mesh from ``repro.sweeps.sharding`` is normalized, either
+axis may be size 1):
+
+  sweep axis "s" — cells are placed in balanced contiguous blocks of a
+  ``(n_shards, s_loc + 1, D)`` params tensor (one scratch row per shard);
+  each shard executes the identical round body on its own cells' packed
+  rows, with no cross-cell communication.  Early-stop repacking is
+  shard-aware: when the live set shrinks enough that the bucketed
+  per-shard capacity drops, live cells are compacted across shard
+  boundaries (stopped cells vacate whole per-shard bucket steps) and the
+  state tensors are rebuilt by a resharding gather — pure data movement,
+  bit-identical per cell to the unsharded run;
+
+  participant axis "p" — each round's packed cohort rows are split into
+  balanced contiguous blocks over the p-shards
+  (``participant_sharding.split_balanced``), so the local-training
+  matmuls — the CPU-bound hot path — run in parallel across devices and
+  cohorts of tens of thousands of learners fit the round budget.  Cell
+  params/optimizer rows are **replicated** along "p" (every p-shard
+  applies the identical server step, so replicas stay bitwise equal with
+  no communication); the stale cache is partitioned per (s, p) shard — a
+  straggler's slot lives on the p-shard that trained it, wherever its
+  cell's rows land in later rounds.  The only cross-shard data dependency
+  is the SAA aggregation operand (a cell's fresh rows and landing slots
+  live on whichever p-shards trained them): each shard zero-masks the
+  columns it does not own and ONE ``psum`` over "p" reconstructs the full
+  operand — bit-identical to the unsharded gather because every element
+  has exactly one non-zero contributor, and the single collective in the
+  hot loop (tests/test_participant_sharding.py asserts both).
 
 Parity: gathers/scatters are pure data movement, padding rows are masked to
 exact zeros before aggregation (``bucket_pad``'s layout, bit-for-bit), the
@@ -90,6 +109,7 @@ from repro.core.aggregation import (aggregate_updates, unflatten_update,
 from repro.core.stale_cache import DeviceStaleCache, ShardedSlotAccounts
 from repro.core.staleness import EPS, RULE_ID
 from repro.sim import learner as ln
+from repro.sim.participant_sharding import PART_AXIS, split_balanced
 
 ROW_BLOCK = 128   # packed participant-row padding bucket (bucket_block)
 UPD_BLOCK = 32    # per-cell aggregation-row padding bucket (sweep_bucket_pad's)
@@ -103,7 +123,7 @@ def pipeline_key(cfg) -> tuple:
             cfg.prox_mu, cfg.rounds, cfg.eval_every, cfg.aggregator,
             cfg.use_agg_kernel,
             cfg.scaling_rule if cfg.use_agg_kernel else None,
-            cfg.rounds_per_dispatch)
+            cfg.rounds_per_dispatch, cfg.shard_participants)
 
 
 @dataclasses.dataclass
@@ -117,7 +137,11 @@ class PipelineStats:
     d2h_bytes: int = 0          # stat-util + eval + repack-eviction fetches
     init_h2d_bytes: int = 0     # one-time dataset/params uploads
     n_shards: int = 1
+    n_pshards: int = 1
     rounds_per_dispatch: int = 1
+    cross_shard_landings: int = 0   # landings whose aggregation group spans
+                                    # other p-shards — operand rows the psum
+                                    # genuinely merges across shards
 
     def as_dict(self) -> dict:
         per_round = max(self.rounds, 1)
@@ -132,7 +156,9 @@ class PipelineStats:
             "d2h_bytes_per_round": round(self.d2h_bytes / per_round),
             "init_h2d_bytes": self.init_h2d_bytes,
             "n_shards": self.n_shards,
+            "n_pshards": self.n_pshards,
             "rounds_per_dispatch": self.rounds_per_dispatch,
+            "cross_shard_landings": self.cross_shard_landings,
         }
 
 
@@ -144,7 +170,7 @@ class PipelineStats:
 
 def _round_body(params, cache, opt_state, x_tr, y_tr, ints, floats, shapes,
                 *, train_unit, steps, batch, yogi, use_kernel, kernel_rule,
-                single):
+                single, p_axis=None):
     """One round's device work on one (local) params/cache block.
 
     params: (rows, D) — cell rows plus one scratch row; cache: (C + 1, D)
@@ -152,6 +178,15 @@ def _round_body(params, cache, opt_state, x_tr, y_tr, ints, floats, shapes,
     arrays whose layout is described by the static ``shapes`` tuple.
     ``single`` broadcasts the parameters instead of gathering them (the
     serial engine's S == 1 case; bit-identical either way).
+
+    ``p_axis`` names the participant mesh axis when the body runs as one
+    p-shard of a sharded round: the packed rows are this shard's block of
+    the cohort, the cache is this shard's slot partition, and the
+    aggregation operand is reconstructed from the per-shard ownership-
+    masked partials with ONE ``psum`` — the hot loop's only collective.
+    Everything after the psum (weights, aggregate, server apply) is
+    computed identically on every p-shard, which is what keeps the
+    p-replicated params/optimizer rows bitwise in sync.
     """
     r_b, tb, g_b, nf_b, ns_b, all_valid = shapes
     n_b = nf_b + ns_b
@@ -175,6 +210,7 @@ def _round_body(params, cache, opt_state, x_tr, y_tr, ints, floats, shapes,
     rule_id = take(g_b)
     agg_fresh = take(g_b * n_b, (g_b, n_b), bool)
     agg_valid = take(g_b * n_b, (g_b, n_b), bool)
+    agg_mask = take(g_b * n_b, (g_b, n_b), bool)
     has_g = take(g_b, None, bool)
     beta_g, lr_g = floats[:g_b], floats[g_b:2 * g_b]
 
@@ -199,11 +235,21 @@ def _round_body(params, cache, opt_state, x_tr, y_tr, ints, floats, shapes,
     # the cache slots; same per-cell row multiset as the per-stage
     # path's (fresh + stale, zero-padded) stack
     uf, us = deltas[fr_idx], cache[sl_idx]
-    if not all_valid:
-        # bucket_pad's exact zeros in the padding columns
-        uf = jnp.where(agg_valid[:, :nf_b, None], uf, 0.0)
-        us = jnp.where(agg_valid[:, nf_b:, None], us, 0.0)
-    u = jnp.concatenate([uf, us], axis=1)
+    if p_axis is not None:
+        # every operand column is owned by exactly one p-shard (the one
+        # holding its delta row / cache slot): zero the rest and let one
+        # psum reconstruct the full operand — bit-identical to the
+        # unsharded gather, since each element sums one non-zero
+        # contributor with exact zeros
+        uf = jnp.where(agg_mask[:, :nf_b, None], uf, 0.0)
+        us = jnp.where(agg_mask[:, nf_b:, None], us, 0.0)
+        u = jax.lax.psum(jnp.concatenate([uf, us], axis=1), p_axis)
+    else:
+        if not all_valid:
+            # bucket_pad's exact zeros in the padding columns
+            uf = jnp.where(agg_valid[:, :nf_b, None], uf, 0.0)
+            us = jnp.where(agg_valid[:, nf_b:, None], us, 0.0)
+        u = jnp.concatenate([uf, us], axis=1)
 
     # --- SAA weights + aggregate + server apply ----------------------
     rows_old = params[agg_cell]                       # (G, D)
@@ -292,19 +338,24 @@ def _chunk_program(spec, lr, prox_mu, steps, batch, yogi, use_kernel,
 @functools.lru_cache(maxsize=16)
 def _sharded_chunk_program(spec, lr, prox_mu, steps, batch, yogi, use_kernel,
                            kernel_rule, mesh):
-    """K-round chunk program sharded over the sweep axis: ``shard_map``
-    over the 1-D ``mesh`` with the chunk scan inside.  Each shard owns a
-    ``(s_loc + 1, D)`` params block, a ``(c_loc + 1, D)`` cache block and
-    its own packed index arrays — the round body is shard-local (no
-    collectives), so every cell's math is op-for-op the unsharded body's
-    and the sweep-axis Pallas kernels simply see a grid over the local S.
-    Datasets are replicated; losses/l2s come back concatenated along the
-    row axis (shard j's rows at ``[j * r_b, (j+1) * r_b)``)."""
+    """K-round chunk program sharded over the 2-D ``("s", "p")`` round
+    mesh: ``shard_map`` with the chunk scan inside.  Each (s, p) device
+    owns its s-block's ``(s_loc + 1, D)`` params rows (replicated along
+    "p"), a ``(c_loc + 1, D)`` block of the flat per-(s, p)-shard cache,
+    and its own packed index arrays covering the cohort rows it trains.
+    The round body is shard-local except for the single aggregation-
+    operand ``psum`` over "p" (a no-op reduction when ``n_p == 1``, the
+    PR-4 sweep-only case) — every cell's math is op-for-op the unsharded
+    body's and the sweep-axis Pallas kernels simply see a grid over the
+    local S.  Datasets are replicated; losses/l2s come back concatenated
+    along the row axis (flat shard ``f = j * n_p + q`` owns rows
+    ``[f * r_b, (f+1) * r_b)``)."""
     train_unit = functools.partial(ln.local_train_flat, spec=spec, lr=lr,
                                    prox_mu=prox_mu)
     body = functools.partial(_round_body, train_unit=train_unit, steps=steps,
                              batch=batch, yogi=yogi, use_kernel=use_kernel,
-                             kernel_rule=kernel_rule, single=False)
+                             kernel_rule=kernel_rule, single=False,
+                             p_axis=PART_AXIS)
     opt_spec = ({"m": P("s"), "v": P("s"), "t": P("s")} if yogi else None)
 
     def prog(params3, cache3, opt_state, x_tr, y_tr, ints3, floats3, shapes):
@@ -325,9 +376,10 @@ def _sharded_chunk_program(spec, lr, prox_mu, steps, batch, yogi, use_kernel,
 
         return shard_map(
             per_shard, mesh=mesh,
-            in_specs=(P("s"), P("s"), opt_spec, P(), P(),
-                      P(None, "s"), P(None, "s")),
-            out_specs=(P("s"), P("s"), opt_spec, P(None, "s"), P(None, "s")),
+            in_specs=(P("s"), P(("s", "p")), opt_spec, P(), P(),
+                      P(None, ("s", "p")), P(None, ("s", "p"))),
+            out_specs=(P("s"), P(("s", "p")), opt_spec,
+                       P(None, ("s", "p")), P(None, ("s", "p"))),
             check_rep=False,
         )(params3, cache3, opt_state, x_tr, y_tr, ints3, floats3)
 
@@ -377,6 +429,7 @@ class _RoundWork:
     scheds: dict
     surv: dict
     recs: dict
+    rowq: dict      # (cell, plan row) -> (p-shard, local slot) row placement
 
 
 class RoundPipeline:
@@ -394,9 +447,23 @@ class RoundPipeline:
         self.spec = sims[0]._flat_spec
         self.d = agg.flat_dim(self.spec)
         self.yogi = cfg0.aggregator == "yogi"
+        if mesh is None and cfg0.shard_participants:
+            from repro.sim.participant_sharding import participant_mesh
+            mesh = participant_mesh(cfg0.shard_participants)
+        elif mesh is not None:
+            if cfg0.shard_participants:
+                raise ValueError(
+                    "ambiguous participant sharding: an explicit mesh was "
+                    "passed while SimConfig.shard_participants is set — "
+                    "configure one or the other (SweepRunner callers: use "
+                    "SweepRunner(shard_participants=))")
+            from repro.sim.participant_sharding import as_round_mesh
+            mesh = as_round_mesh(mesh)
         self.mesh = mesh
         self.n_shards = int(mesh.shape["s"]) if mesh is not None else 1
-        self.stats = PipelineStats(n_shards=self.n_shards)
+        self.n_pshards = int(mesh.shape["p"]) if mesh is not None else 1
+        self.stats = PipelineStats(n_shards=self.n_shards,
+                                   n_pshards=self.n_pshards)
 
         s = len(sims)
         # Oort is the only selector that consumes the per-row stat-utility
@@ -426,10 +493,14 @@ class RoundPipeline:
                 grow=True)
             self.accounts = None
         else:
-            from repro.sweeps.sharding import (Placement, chunk_spec,
-                                               replicated_spec, shard_spec)
+            from repro.sim.participant_sharding import (cache_spec,
+                                                        chunk_spec,
+                                                        param_spec,
+                                                        replicated_spec)
+            from repro.sweeps.sharding import Placement
             self.placement = Placement.build(range(s), self.n_shards)
-            self._shard_spec = shard_spec(mesh)
+            self._shard_spec = param_spec(mesh)
+            self._cache_spec = cache_spec(mesh)
             self._rep_spec = replicated_spec(mesh)
             self._chunk_spec = chunk_spec(mesh)
             self.params = jax.device_put(
@@ -447,12 +518,14 @@ class RoundPipeline:
             else:
                 self.opt_state = None
             self.cache = None
+            # one slot space per (s, p) shard, flat s-major — a straggler's
+            # slot lives on the p-shard that trained its row
+            nflat = self.n_shards * self.n_pshards
             self.accounts = ShardedSlotAccounts(
-                self.n_shards,
-                capacity=max(c.cfg.stale_cache_capacity for c in sims))
+                nflat, capacity=max(c.cfg.stale_cache_capacity for c in sims))
             self.cache_rows = jax.device_put(
-                jnp.zeros((self.n_shards, self.accounts.capacity + 1, self.d),
-                          jnp.float32), self._shard_spec)
+                jnp.zeros((nflat, self.accounts.capacity + 1, self.d),
+                          jnp.float32), self._cache_spec)
             self._saved = {}      # evicted done cells' final rows (host)
 
         # one device copy of each distinct substrate's dataset (replicated
@@ -562,6 +635,24 @@ class RoundPipeline:
             return None
         order = list(plans)
         scheds = {i: sims[i]._schedule_round(r, plans[i]) for i in order}
+        surv = {i: np.nonzero(~np.isfinite(plans[i].drop_at))[0]
+                for i in order}
+
+        # participant-row placement: each s-shard's packed survivor rows
+        # (cells in order, rows in plan order — the exact row packing
+        # _materialize emits) split into balanced contiguous blocks over
+        # the p-shards.  The trivial 1x1 placement doubles as the
+        # unsharded path's row->packed-position map.
+        rowq = {}
+        for j in range(self.n_shards):
+            rows_j = [(i, int(ri)) for i in order
+                      if self._shard_of(i) == j for ri in surv[i]]
+            off = 0
+            for q, size in enumerate(split_balanced(len(rows_j),
+                                                    self.n_pshards)):
+                for loc in range(size):
+                    rowq[rows_j[off + loc]] = (q, loc)
+                off += size
 
         # slot management: release the previous round's quarantined slots,
         # then this round's allocs — a slot gathered this round is never a
@@ -590,14 +681,19 @@ class RoundPipeline:
             for i in order:
                 sc = scheds[i]
                 if sc.new_stale:
-                    shard = self.placement.shard_of[i]
-                    slots, _ = self.accounts.alloc(shard, len(sc.new_stale))
-                    sc.slots = [(shard, sl) for sl in slots]
+                    # a straggler caches on the (s, p) shard that trains
+                    # its row this round — later rounds read it from there
+                    # via the aggregation psum, wherever the cell's rows
+                    # land by then
+                    j = self.placement.shard_of[i]
+                    slots = []
+                    for (ri, _l, _a, _d) in sc.new_stale:
+                        flat = j * self.n_pshards + rowq[(i, int(ri))][0]
+                        s_ids, _ = self.accounts.alloc(flat, 1)
+                        slots.append((flat, s_ids[0]))
+                    sc.slots = slots
             self.stats.dispatches["cache_grow"] += \
                 self.accounts.grow_events - grow0
-
-        surv = {i: np.nonzero(~np.isfinite(plans[i].drop_at))[0]
-                for i in order}
 
         if not self._fetch_l2s:
             from repro.sim.engine import _InFlight
@@ -613,19 +709,28 @@ class RoundPipeline:
             r, plans[i].t_now, scheds[i].t_end, len(plans[i].chosen),
             len(scheds[i].fresh_rows), len(scheds[i].landing))
             for i in order}
-        return _RoundWork(r, order, plans, scheds, surv, recs)
+        return _RoundWork(r, order, plans, scheds, surv, recs, rowq)
 
     def _materialize(self, works):
-        """Build the chunk's packed index arrays: per round and per shard,
-        the same layout the single-round driver packs, padded to one
-        chunk-global bucket set so the scan's inputs are rectangular.
-        Returns (ints (K, n_shards, L), floats (K, n_shards, F), shapes,
-        offs) where ``offs[(k, i)]`` locates cell ``i``'s packed rows in
-        the round-k loss/l2s vector (shard rows are concatenated)."""
+        """Build the chunk's packed index arrays: per round and per flat
+        (s, p) shard, the same layout the single-round driver packs,
+        padded to one chunk-global bucket set so the scan's inputs are
+        rectangular.  Returns (ints (K, n_s * n_p, L), floats
+        (K, n_s * n_p, F), shapes, offs) where ``offs[(k, i)]`` holds cell
+        ``i``'s survivor rows' positions (aligned with ``surv[i]``) in the
+        round-k loss/l2s vector flattened over (flat shard, local row).
+
+        Aggregation-group metadata (cells, taus, fresh/valid masks, rules,
+        betas) is replicated across a cell's p-shards — the post-psum
+        weights pass must compute identically on all of them — while the
+        gather columns (``fr_idx``/``sl_idx``) and the ownership mask
+        (``agg_mask``) are per p-shard: a shard contributes exactly the
+        operand columns whose delta row or cache slot it owns."""
         cfg0 = self.cfg0
         sims = self.sims
         tb = cfg0.local_steps * cfg0.local_batch
-        nsh = self.n_shards
+        n_p = self.n_pshards
+        nflat = self.n_shards * n_p
         mesh = self.mesh
         if mesh is None:
             scratch = len(sims)
@@ -639,16 +744,16 @@ class RoundPipeline:
         # chunk-global padding buckets (uniform scan/shard shapes)
         max_rows, max_g, nf_max, ns_max = 1, 1, 1, 0
         for w in works:
-            rows_js, g_js = [0] * nsh, [0] * nsh
+            rows_f, g_js = [0] * nflat, [0] * self.n_shards
+            for (i, _ri), (q, _loc) in w.rowq.items():
+                rows_f[self._shard_of(i) * n_p + q] += 1
             for i in w.order:
-                j = self._shard_of(i)
-                rows_js[j] += len(w.surv[i])
                 sc = w.scheds[i]
                 if sc.fresh_rows or sc.landing:
-                    g_js[j] += 1
+                    g_js[self._shard_of(i)] += 1
                     nf_max = max(nf_max, len(sc.fresh_rows))
                     ns_max = max(ns_max, len(sc.landing))
-            max_rows = max(max_rows, *rows_js)
+            max_rows = max(max_rows, *rows_f)
             max_g = max(max_g, *g_js)
         if self._exact:     # long serial runs: unpadded shapes (see __init__)
             r_b, g_b, nf_b = max_rows, max_g, nf_max
@@ -673,42 +778,17 @@ class RoundPipeline:
                         for i in groups0))
         shapes = (r_b, tb, g_b, nf_b, ns_b, all_valid)
 
-        floats_all = np.zeros((len(works), nsh, 2 * g_b), np.float32)
+        floats_all = np.zeros((len(works), nflat, 2 * g_b), np.float32)
         chunks = []
         offs = {}
         for k_idx, w in enumerate(works):
             per_shard = []
-            for j in range(nsh):
-                batch_idx = np.zeros((r_b, tb), np.int32)
-                row_cell = np.full(r_b, scratch, np.int32)
-                row_sub = np.zeros(r_b, np.int32)
-                scat_slot = np.full(r_b, trash, np.int32)
-                pos = {}
-                off = 0
+            for j in range(self.n_shards):
                 cells_j = [i for i in w.order if self._shard_of(i) == j]
-                for i in cells_j:
-                    p, sc, sv = w.plans[i], w.scheds[i], w.surv[i]
-                    batch_idx[off:off + len(sv)] = p.bidx[sv]
-                    row_cell[off:off + len(sv)] = slot_of(i)
-                    row_sub[off:off + len(sv)] = self.sub_idx[i]
-                    offs[(k_idx, i)] = j * r_b + off
-                    for local, row_i in enumerate(sv):
-                        pos[(i, int(row_i))] = off + local
-                    for (row_i, _l, _a, _d), slot in zip(sc.new_stale,
-                                                         sc.slots):
-                        scat_slot[pos[(i, row_i)]] = (slot if mesh is None
-                                                      else slot[1])
-                    off += len(sv)
-                if 0 < off < r_b:   # padding replicates the first real row
-                    batch_idx[off:] = batch_idx[0]
-                    row_cell[off:] = row_cell[0]
-                    row_sub[off:] = row_sub[0]
-
                 groups = [i for i in cells_j
                           if w.scheds[i].fresh_rows or w.scheds[i].landing]
+                # p-replicated aggregation-group metadata
                 agg_cell = np.full(g_b, scratch, np.int32)
-                fr_idx = np.zeros((g_b, nf_b), np.int32)
-                sl_idx = np.zeros((g_b, ns_b), np.int32)
                 agg_fresh = np.zeros((g_b, n_b), np.int32)
                 agg_tau = np.zeros((g_b, n_b), np.int32)
                 agg_valid = np.zeros((g_b, n_b), np.int32)
@@ -718,14 +798,10 @@ class RoundPipeline:
                 lr_g = np.zeros(g_b, np.float32)
                 for g, i in enumerate(groups):
                     sc, cfg = w.scheds[i], sims[i].cfg
-                    for col, row_i in enumerate(sc.fresh_rows):
-                        fr_idx[g, col] = pos[(i, row_i)]
+                    for col in range(len(sc.fresh_rows)):
                         agg_fresh[g, col] = 1
                         agg_valid[g, col] = 1
-                    for col, (f, tau) in enumerate(zip(sc.landing,
-                                                       sc.landing_taus)):
-                        sl_idx[g, col] = (f.delta if mesh is None
-                                          else f.delta[1])
+                    for col, tau in enumerate(sc.landing_taus):
                         agg_tau[g, nf_b + col] = tau
                         agg_valid[g, nf_b + col] = 1
                     agg_cell[g] = slot_of(i)
@@ -733,12 +809,70 @@ class RoundPipeline:
                     beta_g[g] = cfg.beta
                     lr_g[g] = cfg.server_lr
                     has_g[g] = 1
-                per_shard.append(np.concatenate(
-                    [batch_idx.ravel(), row_cell, row_sub, scat_slot,
-                     agg_cell, fr_idx.ravel(), sl_idx.ravel(),
-                     agg_tau.ravel(), rule_id, agg_fresh.ravel(),
-                     agg_valid.ravel(), has_g]))
-                floats_all[k_idx, j] = np.concatenate([beta_g, lr_g])
+                    if mesh is not None and sc.landing:
+                        # diagnostic: landings whose slot shard differs from
+                        # some other column of the same group — operand rows
+                        # the psum genuinely merges across shards
+                        col_q = ([w.rowq[(i, int(ri))][0]
+                                  for ri in sc.fresh_rows]
+                                 + [f.delta[0] - j * n_p for f in sc.landing])
+                        self.stats.cross_shard_landings += sum(
+                            1 for f in sc.landing
+                            if any(qc != f.delta[0] - j * n_p
+                                   for qc in col_q))
+                floats_j = np.concatenate([beta_g, lr_g])
+
+                # per-q buffers, filled in ONE pass over rows and columns
+                # (a scan per shard would scale host packing with n_p)
+                batch_q = [np.zeros((r_b, tb), np.int32) for _ in range(n_p)]
+                rcell_q = [np.full(r_b, scratch, np.int32)
+                           for _ in range(n_p)]
+                rsub_q = [np.zeros(r_b, np.int32) for _ in range(n_p)]
+                scat_q = [np.full(r_b, trash, np.int32) for _ in range(n_p)]
+                fr_q = [np.zeros((g_b, nf_b), np.int32) for _ in range(n_p)]
+                sl_q = [np.zeros((g_b, ns_b), np.int32) for _ in range(n_p)]
+                mask_q = [np.zeros((g_b, n_b), np.int32) for _ in range(n_p)]
+                nloc_q = [0] * n_p
+                for i in cells_j:
+                    p, sc, sv = w.plans[i], w.scheds[i], w.surv[i]
+                    cell_offs = offs.setdefault(
+                        (k_idx, i), np.zeros(len(sv), np.int64))
+                    for k_row, ri in enumerate(sv):
+                        q, loc = w.rowq[(i, int(ri))]
+                        batch_q[q][loc] = p.bidx[ri]
+                        rcell_q[q][loc] = slot_of(i)
+                        rsub_q[q][loc] = self.sub_idx[i]
+                        cell_offs[k_row] = (j * n_p + q) * r_b + loc
+                        nloc_q[q] = max(nloc_q[q], loc + 1)
+                    for (ri, _l, _a, _d), slot in zip(sc.new_stale,
+                                                      sc.slots):
+                        q, loc = w.rowq[(i, int(ri))]
+                        scat_q[q][loc] = slot if mesh is None else slot[1]
+                # operand gather columns land on their owner shard's arrays
+                # (the ownership mask the psum reconstruction relies on)
+                for g, i in enumerate(groups):
+                    sc = w.scheds[i]
+                    for col, ri in enumerate(sc.fresh_rows):
+                        q, loc = w.rowq[(i, int(ri))]
+                        fr_q[q][g, col] = loc
+                        mask_q[q][g, col] = 1
+                    for col, f in enumerate(sc.landing):
+                        q = 0 if mesh is None else f.delta[0] - j * n_p
+                        sl_q[q][g, col] = (f.delta if mesh is None
+                                           else f.delta[1])
+                        mask_q[q][g, nf_b + col] = 1
+                for q in range(n_p):
+                    if 0 < nloc_q[q] < r_b:   # padding replicates row 0
+                        batch_q[q][nloc_q[q]:] = batch_q[q][0]
+                        rcell_q[q][nloc_q[q]:] = rcell_q[q][0]
+                        rsub_q[q][nloc_q[q]:] = rsub_q[q][0]
+                    per_shard.append(np.concatenate(
+                        [batch_q[q].ravel(), rcell_q[q], rsub_q[q],
+                         scat_q[q], agg_cell, fr_q[q].ravel(),
+                         sl_q[q].ravel(), agg_tau.ravel(), rule_id,
+                         agg_fresh.ravel(), agg_valid.ravel(),
+                         mask_q[q].ravel(), has_g]))
+                    floats_all[k_idx, j * n_p + q] = floats_j
             chunks.append(np.stack(per_shard))
         ints_all = np.stack(chunks)        # already int32 throughout
         return ints_all, floats_all, shapes, offs
@@ -768,17 +902,18 @@ class RoundPipeline:
             if self.cache_rows.shape[1] != self.accounts.capacity + 1:
                 from repro.sweeps.sharding import reshard_rows
                 old_rows = self.cache_rows.shape[1]
-                cmap = np.full(self.n_shards * (self.accounts.capacity + 1),
+                nflat = self.n_shards * self.n_pshards
+                cmap = np.full(nflat * (self.accounts.capacity + 1),
                                old_rows - 1, np.int32)   # any defined row
-                for j in range(self.n_shards):
+                for j in range(nflat):
                     base_new = j * (self.accounts.capacity + 1)
                     base_old = j * old_rows
                     for sl in range(old_rows - 1):
                         cmap[base_new + sl] = base_old + sl
                 self.cache_rows = reshard_rows(
                     self.cache_rows, cmap,
-                    (self.n_shards, self.accounts.capacity + 1),
-                    self._shard_spec)
+                    (nflat, self.accounts.capacity + 1),
+                    self._cache_spec)
             dev_ints = jax.device_put(ints, self._chunk_spec)
             dev_floats = jax.device_put(floats, self._chunk_spec)
             cache_rows = self.cache_rows
@@ -800,11 +935,11 @@ class RoundPipeline:
             l2s_np = np.asarray(jax.device_get(l2s))
             self.stats.d2h_bytes += l2s_np.nbytes
             (w,) = works
+            l2s_flat = l2s_np[0].ravel()   # (flat shard, local row) order
             for i in w.order:
                 sim, sc = sims[i], w.scheds[i]
                 l2s_i = np.zeros(w.plans[i].k, np.float32)
-                o0 = offs[(0, i)]
-                l2s_i[w.surv[i]] = l2s_np[0, o0:o0 + len(w.surv[i])]
+                l2s_i[w.surv[i]] = l2s_flat[offs[(0, i)]]
                 sim._apply_feedback(w.r, sc, l2s_i)
                 for (row_i, lid, arr, dur), slot in zip(sc.new_stale,
                                                         sc.slots):
@@ -899,30 +1034,33 @@ class RoundPipeline:
                 self.opt_state)
 
         # 3. rebuild the sharded cache: every live in-flight entry gets a
-        #    slot on its cell's new shard (allocation may grow capacity),
-        #    then one gather moves the rows
-        new_acc = ShardedSlotAccounts(self.n_shards,
-                                      capacity=self.accounts.capacity)
+        #    slot on its cell's new s-shard — staying on its p-shard, so
+        #    the participant partition survives the compaction —
+        #    (allocation may grow capacity), then one gather moves the rows
+        n_p = self.n_pshards
+        nflat = self.n_shards * n_p
+        new_acc = ShardedSlotAccounts(nflat, capacity=self.accounts.capacity)
         moves = []                        # (in-flight entry, old flat row)
         old_rows_loc = self.accounts.capacity + 1
         for i in live:
             shard = new_pl.shard_of[i]
             for f in self.sims[i].stale_cache:
-                old_shard, old_slot = f.delta
-                slots, _ = new_acc.alloc(shard, 1)
-                f.delta = (shard, slots[0])
-                moves.append((f, old_shard * old_rows_loc + old_slot))
+                old_flat, old_slot = f.delta
+                new_flat = shard * n_p + old_flat % n_p
+                slots, _ = new_acc.alloc(new_flat, 1)
+                f.delta = (new_flat, slots[0])
+                moves.append((f, old_flat * old_rows_loc + old_slot))
         new_rows_loc = new_acc.capacity + 1
         # default: shard 0's old trash row — any defined row does (padding
         # slots are always scatter-written before they are ever gathered)
-        cmap = np.full(self.n_shards * new_rows_loc, old_rows_loc - 1,
+        cmap = np.full(nflat * new_rows_loc, old_rows_loc - 1,
                        np.int32)
-        for f, old_flat in moves:
+        for f, old_flat_row in moves:
             shard, slot = f.delta
-            cmap[shard * new_rows_loc + slot] = old_flat
+            cmap[shard * new_rows_loc + slot] = old_flat_row
         self.cache_rows = reshard_rows(
-            self.cache_rows, cmap, (self.n_shards, new_rows_loc),
-            self._shard_spec)
+            self.cache_rows, cmap, (nflat, new_rows_loc),
+            self._cache_spec)
         self.accounts = new_acc
         self._pending_free = []   # old slot ids are meaningless now
         self.placement = new_pl

@@ -40,6 +40,10 @@ def main(argv=None) -> None:
     ap.add_argument("--smoke", action="store_true", help="small CI grid")
     ap.add_argument("--sharded", action="store_true",
                     help="shard the sweep axis over the local device mesh")
+    ap.add_argument("--participant-shards", type=int, default=0,
+                    help="shard each round's cohort rows over N participant "
+                         "mesh shards (with --sharded: a (devices/N) x N "
+                         "('s', 'p') mesh; alone: N of the local devices)")
     ap.add_argument("--rounds-per-dispatch", type=int, default=1,
                     help="K rounds per device dispatch (lax.scan chunking)")
     ap.add_argument("--out", default=None, help="BENCH_sweeps.json path")
@@ -51,14 +55,19 @@ def main(argv=None) -> None:
         cells = [dataclasses.replace(c, config=dataclasses.replace(
             c.config, rounds_per_dispatch=args.rounds_per_dispatch))
             for c in cells]
-    if args.sharded:
+    if args.sharded or args.participant_shards:
         import jax
-        print(f"# sharding the sweep axis over {len(jax.devices())} device(s)")
+        axes = (["sweep"] if args.sharded else []) \
+            + (["participant"] if args.participant_shards else [])
+        print(f"# sharding the {'+'.join(axes)} axis over "
+              f"{len(jax.devices())} device(s)")
     print(f"# sweep: {len(cells)} cells "
           f"({' x '.join(f'{a}[{len(v)}]' for a, v in spec.axes.items())}"
           f" x seeds[{len(spec.seeds)}])")
 
-    results, batched_wall = run_batched(cells, shard=args.sharded)
+    results, batched_wall = run_batched(
+        cells, shard=args.sharded,
+        shard_participants=args.participant_shards)
     # the serial reference stays at K=1: an independent ground truth for the
     # chunked run, not the same prescheduling machinery run twice
     serial_cells = ([dataclasses.replace(c, config=dataclasses.replace(
@@ -80,6 +89,7 @@ def main(argv=None) -> None:
         "bench": "sweeps",
         "mode": "smoke" if args.smoke else "demo",
         "sharded": args.sharded,
+        "participant_shards": args.participant_shards,
         "rounds_per_dispatch": args.rounds_per_dispatch,
         "cells": len(cells),
         "batched_wall_s": round(batched_wall, 3),

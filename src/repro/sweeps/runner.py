@@ -124,18 +124,24 @@ def _sweep_yogi_fn():
 class SweepRunner:
     """Expand cells (``SweepSpec.expand()``) and run them batched.
 
-    ``shard=True`` places each compatibility batch's sweep axis on a 1-D
-    device mesh (``repro.sweeps.sharding.sweep_mesh`` over all local
-    devices; pass ``mesh=`` for an explicit one) — cells run shard-local
-    round programs under ``shard_map`` with bit-identical per-cell results.
-    Multi-round chunking is per-cell config (``SimConfig.rounds_per_dispatch``).
+    ``shard=True`` places each compatibility batch's sweep axis on a device
+    mesh axis "s" (all local devices by default; pass ``mesh=`` for an
+    explicit one) — cells run shard-local round programs under ``shard_map``
+    with bit-identical per-cell results.  ``shard_participants`` adds the
+    participant mesh axis "p" (``repro.sim.participant_sharding``): each
+    round's packed cohort rows split over it, so large cohorts train in
+    parallel across devices.  ``True`` takes every local device (sweep-axis
+    sharding off); an int N combines with ``shard=True`` as an
+    ``(n_devices // N) x N`` 2-D ``("s", "p")`` mesh.  Multi-round chunking
+    is per-cell config (``SimConfig.rounds_per_dispatch``).
     """
     cells: Sequence[Cell]
     progress: bool = False
     substrate_cache: Optional[dict] = None
     last_stats: Optional[dict] = None     # fused-pipeline transfer/dispatch stats
     shard: bool = False
-    mesh: Optional[object] = None         # jax.sharding.Mesh over axis "s"
+    shard_participants: object = 0        # int p-shard count, or True = all devices
+    mesh: Optional[object] = None         # jax.sharding.Mesh: ("s",) or ("s", "p")
 
     def __post_init__(self):
         for c in self.cells:
@@ -144,14 +150,29 @@ class SweepRunner:
                                  "requires fast_path=True")
         if self.substrate_cache is None:
             self.substrate_cache = {}
-        if self.shard and self.mesh is None:
-            from repro.sweeps.sharding import sweep_mesh
-            self.mesh = sweep_mesh()
+        if self.mesh is None and (self.shard or self.shard_participants):
+            import jax
+            from repro.sim.participant_sharding import (participant_mesh,
+                                                        round_mesh)
+            devs = jax.devices()
+            if not self.shard:
+                self.mesh = participant_mesh(self.shard_participants, devs)
+            elif not self.shard_participants:
+                self.mesh = round_mesh(len(devs), 1, devs)
+            else:
+                n_p = int(self.shard_participants)
+                if (self.shard_participants is True or n_p < 1
+                        or len(devs) % n_p):
+                    raise ValueError(
+                        "shard=True with shard_participants needs an integer "
+                        f"participant shard count dividing the {len(devs)} "
+                        "local devices")
+                self.mesh = round_mesh(len(devs) // n_p, n_p, devs)
         if self.mesh is not None:
             for c in self.cells:
                 if not c.config.fused_rounds:
                     raise ValueError(
-                        f"cell {c.name}: sweep-axis sharding requires the "
+                        f"cell {c.name}: device-mesh sharding requires the "
                         "fused pipeline (fused_rounds=True)")
 
     def substrate(self, cfg) -> Substrate:
@@ -331,10 +352,12 @@ def run_serial(cells: Sequence[Cell]):
     return summaries, time.time() - t0
 
 
-def run_batched(cells: Sequence[Cell], shard: bool = False, mesh=None):
+def run_batched(cells: Sequence[Cell], shard: bool = False, mesh=None,
+                shard_participants=0):
     """Returns (SweepResults, wall seconds) — wall includes substrate builds."""
     t0 = time.time()
-    results = SweepRunner(cells, shard=shard, mesh=mesh).run()
+    results = SweepRunner(cells, shard=shard, mesh=mesh,
+                          shard_participants=shard_participants).run()
     return results, time.time() - t0
 
 

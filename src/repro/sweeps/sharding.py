@@ -12,7 +12,11 @@ This module owns the host-side layout machinery:
     Build the 1-D mesh over the local devices.  On a single-device host the
     mesh degenerates to one shard (the sharded code path stays exercisable
     everywhere); CI forces a multi-device CPU host via
-    ``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4``.  The pipeline
+    normalizes this 1-D mesh into the 2-D ``("s", "p")`` round mesh
+    (participant axis size 1); ``repro.sim.participant_sharding`` owns the
+    2-D builders and the participant-axis row placement, and composes with
+    the cell placement below via ``SweepRunner(shard_participants=)``.
 
 ``Placement``
     The cell -> (shard, local slot) assignment.  Cells are split into
@@ -46,24 +50,15 @@ SWEEP_AXIS = "s"
 
 
 def sweep_mesh(devices=None) -> Mesh:
-    """1-D device mesh over the sweep axis (all local devices by default)."""
+    """1-D device mesh over the sweep axis (all local devices by default).
+
+    Placement specs for the round pipeline's device tensors live in
+    ``repro.sim.participant_sharding`` (which normalizes this mesh into the
+    2-D ``("s", "p")`` form) — they are mesh-shape-aware, so there are no
+    1-D spec builders here to misuse on a 2-D mesh.
+    """
     devs = jax.devices() if devices is None else list(devices)
     return Mesh(np.array(devs), (SWEEP_AXIS,))
-
-
-def shard_spec(mesh: Mesh) -> NamedSharding:
-    """Leading-axis sharding for the (n_shards, ...) state tensors."""
-    return NamedSharding(mesh, P(SWEEP_AXIS))
-
-
-def replicated_spec(mesh: Mesh) -> NamedSharding:
-    """Full replication (datasets / test sets / index maps)."""
-    return NamedSharding(mesh, P())
-
-
-def chunk_spec(mesh: Mesh) -> NamedSharding:
-    """(K, n_shards, L) per-round index arrays: sharded on the middle axis."""
-    return NamedSharding(mesh, P(None, SWEEP_AXIS))
 
 
 def local_capacity(n_cells: int, n_shards: int) -> int:

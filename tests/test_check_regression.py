@@ -67,3 +67,38 @@ def test_unmatched_rows_are_skipped_not_failed(tmp_path):
     b, c = _write(tmp_path, "BENCH_sweeps.json",
                   _sweeps(1.0, s_cells=64), _sweeps(9.9, s_cells=4))
     assert check(b, c, 2.0) == 0
+
+
+def _participant(rps_sharded, rps_unsharded=100.0, parity=True):
+    return _engine(400.0) | {"participant": [{
+        "n_learners": 1000, "n_target": 64, "rounds": 6, "n_devices": 1,
+        "sharded": {"rounds_per_sec": rps_sharded},
+        "unsharded": {"rounds_per_sec": rps_unsharded},
+        "parity": parity,
+    }]}
+
+
+def test_participant_rows_are_row_matched(tmp_path):
+    b, c = _write(tmp_path, "BENCH_engine.json",
+                  _participant(100.0), _participant(30.0))
+    (b / "BENCH_sweeps.json").write_text(json.dumps(_sweeps(1.0)))
+    (c / "BENCH_sweeps.json").write_text(json.dumps(_sweeps(1.0)))
+    assert check(b, c, 2.0) == 1          # sharded rps collapsed beyond 2x
+    (c / "BENCH_engine.json").write_text(json.dumps(_participant(80.0)))
+    assert check(b, c, 2.0) == 0          # within tolerance
+
+
+def test_markdown_summary_emitted(tmp_path):
+    b, c = _write(tmp_path, "BENCH_engine.json",
+                  _participant(100.0), _participant(30.0, parity=False))
+    (b / "BENCH_sweeps.json").write_text(json.dumps(_sweeps(1.0)))
+    (c / "BENCH_sweeps.json").write_text(json.dumps(_sweeps(1.5)))
+    summary = tmp_path / "step_summary.md"
+    assert check(b, c, 2.0, summary_path=str(summary)) == 1
+    md = summary.read_text()
+    assert "| status | row | metric | baseline | current | ratio |" in md
+    assert "Parity failures" in md
+    assert ":x: FAIL" in md and ":white_check_mark: OK" in md
+    # a second run appends (GITHUB_STEP_SUMMARY semantics)
+    check(b, c, 2.0, summary_path=str(summary))
+    assert summary.read_text().count("Benchmark regression guard") == 2

@@ -1,0 +1,287 @@
+"""Properties of the participant-axis-sharded round pipeline:
+
+- sharding the packed cohort rows over a participant device mesh axis
+  (``SimConfig.shard_participants`` / ``SweepRunner(shard_participants=)``)
+  is **bit-identical per round** to the unsharded pipeline — full summary
+  and per-round records — across selectors, aggregators, staleness
+  thresholds, the Pallas aggregation kernel, multi-round chunking, the
+  2-D ``("s", "p")`` sweep composition and accuracy-target early stop;
+- indivisible shapes work: a cohort that does not split evenly over the
+  shards (and n=1000 learners on 3 shards), plus stragglers whose cached
+  update lands rounds later when their cell's rows occupy a *different*
+  p-shard than the one that trained (and caches) them;
+- the hot loop performs exactly ONE cross-shard collective per round (the
+  aggregation-operand psum), asserted against the compiled HLO;
+- the sharded round loop stays clean under ``jax.transfer_guard("disallow")``.
+
+On the default CI leg the mesh degenerates to one device (the sharded code
+path with a trivial psum); the multi-device CI leg forces
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` so the same tests
+exercise real 4-way row splits, cross-shard landings included, plus the
+n=10000 sharded smoke.
+"""
+import dataclasses
+import re
+
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.sim import SimConfig, Simulator
+from repro.sim.participant_sharding import (as_round_mesh, participant_mesh,
+                                            round_mesh, split_balanced)
+from repro.sim.pipeline import RoundPipeline
+from repro.sweeps import SweepRunner, SweepSpec
+from repro.sweeps.runner import summaries_equal
+
+BASE = dict(n_learners=30, rounds=8, eval_every=4, n_target=4,
+            mapping="label_uniform")
+N_DEV = len(jax.devices())
+
+
+def _records_equal(a, b) -> bool:
+    if len(a.records) != len(b.records):
+        return False
+    for ra, rb in zip(a.records, b.records):
+        ka = (ra.round_idx, ra.sim_time, ra.n_selected, ra.n_fresh,
+              ra.n_stale, ra.resource_used, ra.resource_wasted,
+              ra.unique_participants)
+        kb = (rb.round_idx, rb.sim_time, rb.n_selected, rb.n_fresh,
+              rb.n_stale, rb.resource_used, rb.resource_wasted,
+              rb.unique_participants)
+        accs = (ra.accuracy == rb.accuracy
+                or (ra.accuracy != ra.accuracy and rb.accuracy != rb.accuracy))
+        if ka != kb or not accs:
+            return False
+    return True
+
+
+def _parity(cfg: SimConfig, n_p=True):
+    a = Simulator(cfg).run()
+    b = Simulator(dataclasses.replace(cfg, shard_participants=n_p)).run()
+    assert summaries_equal(dict(a.summary()), dict(b.summary())), \
+        (cfg, a.summary(), b.summary())
+    assert _records_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Bit-parity with the unsharded pipeline
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(selector=st.sampled_from(["random", "priority", "safa", "oort"]),
+       saa=st.booleans(),
+       seed=st.integers(0, 2))
+def test_participant_sharded_matches_unsharded(selector, saa, seed):
+    _parity(SimConfig(selector=selector, saa=saa, seed=seed, deadline=60.0,
+                      **BASE))
+
+
+def test_participant_yogi_apt_threshold_kernel():
+    _parity(SimConfig(selector="priority", saa=True, apt=True,
+                      aggregator="yogi", seed=1, **BASE))
+    _parity(SimConfig(selector="safa", saa=True, staleness_threshold=1,
+                      seed=0, **BASE))
+    _parity(SimConfig(selector="priority", saa=True, use_agg_kernel=True,
+                      seed=0, **BASE))
+
+
+def test_participant_sharded_chunked():
+    """Participant sharding composes with K-round scan chunking: the psum
+    sits inside the scan body, one collective per round either way."""
+    _parity(SimConfig(selector="priority", saa=True, seed=0,
+                      rounds_per_dispatch=4, **BASE))
+
+
+def test_participant_early_stop():
+    _parity(SimConfig(selector="priority", saa=True, seed=0,
+                      target_accuracy=0.15, **BASE))
+
+
+def test_indivisible_cohort_shapes():
+    """Cohort rows that do not split evenly over the p-shards: balanced
+    contiguous blocks differ in size and the padded local bucket is shared."""
+    _parity(SimConfig(selector="priority", saa=True, seed=0, n_target=5,
+                      n_learners=30, rounds=8, eval_every=4,
+                      mapping="label_uniform"), n_p=min(3, N_DEV))
+
+
+def test_n1000_on_three_shards():
+    """The issue's indivisible case: an n=1000 cohort pool on 3 participant
+    shards (clamped to the local device count on smaller hosts)."""
+    _parity(SimConfig(selector="priority", saa=True, seed=0, n_target=16,
+                      n_learners=1000, rounds=4, eval_every=2,
+                      mapping="label_uniform"), n_p=3)
+
+
+def test_straggler_lands_cross_shard():
+    """A straggler's cached update stays on the p-shard that trained it;
+    rounds later its cell's rows may occupy other shards, so the landing
+    crosses shards through the aggregation psum.  Parity holds, and on a
+    multi-device mesh the crossing actually happens."""
+    cfg = SimConfig(selector="priority", saa=True, seed=0, n_learners=60,
+                    rounds=16, eval_every=4, n_target=8,
+                    mapping="label_uniform")
+    _parity(cfg)
+    pipe = RoundPipeline([Simulator(
+        dataclasses.replace(cfg, shard_participants=True))])
+    accts = pipe.run()
+    assert sum(r.n_stale for r in accts[0].records) > 0
+    if N_DEV > 1:
+        assert pipe.stats.cross_shard_landings >= 1
+
+
+def test_sweep_participant_composition():
+    """The 2-D ("s", "p") mesh: sweep cells partitioned over "s", each
+    cell's cohort rows split over "p" — still bitwise the unsharded run,
+    early-stop repacking (which crosses s-shard boundaries) included."""
+    base = dict(n_learners=30, rounds=12, eval_every=3, n_target=4,
+                mapping="label_uniform", target_accuracy=0.12)
+    axes = {"selector": ["random", "priority", "safa"], "saa": [False, True]}
+    cells = SweepSpec(axes=axes, base=base, seeds=(0, 1)).expand()
+    n_p = 2 if N_DEV % 2 == 0 and N_DEV > 1 else 1
+    ref = SweepRunner(cells).run()
+    got = SweepRunner(cells, shard=True, shard_participants=n_p).run()
+    for a, b in zip(ref, got):
+        assert summaries_equal(dict(a.summary), dict(b.summary)), \
+            (a.cell.name, a.summary, b.summary)
+        assert _records_equal(a.acct, b.acct), a.cell.name
+
+
+def test_participant_only_sweep():
+    """``shard_participants`` without ``shard``: all cells on every device's
+    s-block (n_s = 1), rows split over the whole mesh."""
+    cells = SweepSpec(axes={"selector": ["random", "priority"],
+                            "saa": [True]}, base=BASE, seeds=(0,)).expand()
+    ref = SweepRunner(cells).run()
+    got = SweepRunner(cells, shard_participants=True).run()
+    for a, b in zip(ref, got):
+        assert summaries_equal(dict(a.summary), dict(b.summary)), a.cell.name
+
+
+def test_transfer_guard_clean():
+    """The participant-sharded hot loop performs no implicit transfers."""
+    cfg = SimConfig(selector="priority", saa=True, seed=0,
+                    shard_participants=True, rounds_per_dispatch=4, **BASE)
+    RoundPipeline([Simulator(cfg)]).run()            # warm compiles
+    pipe = RoundPipeline([Simulator(cfg)])
+    accts = pipe.run(transfer_guard=True)
+    assert pipe.stats.dispatches["round"] > 0
+    assert accts[0].summary()["rounds"] > 0
+
+
+# ---------------------------------------------------------------------------
+# The collective-per-round invariant, against the compiled HLO
+# ---------------------------------------------------------------------------
+
+
+def _captured_hlo(cfg) -> str:
+    pipe = RoundPipeline([Simulator(cfg)])
+    orig, captured = pipe._prog, []
+
+    def wrapper(*args):
+        if not captured:
+            captured.append(orig.lower(*args).compile().as_text())
+        return orig(*args)
+
+    pipe._prog = wrapper
+    pipe.run()
+    assert captured, "round program never dispatched"
+    return captured[0]
+
+
+def test_single_collective_per_round():
+    """Exactly one cross-shard collective — the aggregation-operand psum —
+    in the compiled round program (it sits inside the scan body, so one op
+    covers every round of a chunk), and no other collective kinds at all."""
+    cfg = SimConfig(selector="priority", saa=True, seed=0,
+                    shard_participants=True, rounds_per_dispatch=4, **BASE)
+    txt = _captured_hlo(cfg)
+    n_all_reduce = len(re.findall(r"all-reduce(?:-start)?\(", txt))
+    for op in ("all-gather", "all-to-all", "collective-permute",
+               "reduce-scatter"):
+        assert f"{op}(" not in txt, f"unexpected {op} in the round program"
+    if N_DEV > 1:
+        assert n_all_reduce == 1, f"expected 1 all-reduce, found {n_all_reduce}"
+    else:
+        assert n_all_reduce <= 1
+
+
+def test_unsharded_program_has_no_collectives():
+    txt = _captured_hlo(SimConfig(selector="priority", saa=True, seed=0,
+                                  **BASE))
+    for op in ("all-reduce", "all-gather", "all-to-all",
+               "collective-permute", "reduce-scatter"):
+        assert f"{op}(" not in txt
+
+
+# ---------------------------------------------------------------------------
+# n=10000 sharded smoke (multi-device CI leg; heavy for the 1-device legs)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.skipif(N_DEV < 2, reason="10k smoke runs on the multi-device leg")
+def test_n10000_sharded_smoke():
+    """Tens-of-thousands cohort pool, sharded rows, parity vs unsharded.
+    The substrate is built once and shared (shard_participants is not part
+    of the substrate key)."""
+    cfg = SimConfig(n_learners=10000, rounds=3, eval_every=3, n_target=64,
+                    saa=True, selector="priority", mapping="label_uniform",
+                    seed=0)
+    sub = Simulator(cfg).substrate
+    a = Simulator(cfg, substrate=sub).run()
+    b = Simulator(dataclasses.replace(cfg, shard_participants=True),
+                  substrate=sub).run()
+    assert summaries_equal(dict(a.summary()), dict(b.summary()))
+    assert a.summary()["rounds"] >= 1      # availability can skip a round
+
+
+# ---------------------------------------------------------------------------
+# Host-side unit tests: row split + mesh plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_split_balanced():
+    assert split_balanced(10, 4) == [3, 3, 2, 2]
+    assert split_balanced(4, 4) == [1, 1, 1, 1]
+    assert split_balanced(3, 4) == [1, 1, 1, 0]
+    assert split_balanced(0, 2) == [0, 0]
+    assert sum(split_balanced(1000, 3)) == 1000
+
+
+def test_mesh_builders():
+    m = participant_mesh(True)
+    assert m.axis_names == ("s", "p")
+    assert int(m.shape["s"]) == 1 and int(m.shape["p"]) == N_DEV
+    # over-asking clamps to the local device count
+    assert int(participant_mesh(64).shape["p"]) == N_DEV
+    from repro.sweeps.sharding import sweep_mesh
+    m2 = as_round_mesh(sweep_mesh())
+    assert m2.axis_names == ("s", "p") and int(m2.shape["p"]) == 1
+    assert as_round_mesh(m) is m
+    with pytest.raises(ValueError):
+        round_mesh(N_DEV + 1, 2)
+
+
+def test_runner_rejects_bad_composition():
+    cells = SweepSpec(axes={"saa": [False, True]}, base=BASE,
+                      seeds=(0,)).expand()
+    with pytest.raises(ValueError):
+        SweepRunner(cells, shard=True, shard_participants=True)
+
+
+def test_shard_participants_never_silently_dropped():
+    """The flag must error, not silently fall back: the per-stage/legacy
+    substrates have no sharded round program, and an explicit mesh plus the
+    config flag is ambiguous."""
+    with pytest.raises(ValueError):
+        Simulator(SimConfig(shard_participants=2, fused_rounds=False,
+                            **BASE)).run()
+    with pytest.raises(ValueError):
+        Simulator(SimConfig(shard_participants=2, fast_path=False,
+                            **BASE)).run()
+    with pytest.raises(ValueError):
+        RoundPipeline([Simulator(SimConfig(shard_participants=2, **BASE))],
+                      mesh=participant_mesh(True))
