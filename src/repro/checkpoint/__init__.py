@@ -1,1 +1,6 @@
-from repro.checkpoint.checkpoint import save_pytree, load_pytree  # noqa: F401
+from repro.checkpoint.checkpoint import (CheckpointError,  # noqa: F401
+                                         load_pytree, save_pytree)
+from repro.checkpoint.state import (SnapshotError,  # noqa: F401
+                                    build_resumed_pipeline, load_snapshot,
+                                    resume_run, save_engine_snapshot,
+                                    save_snapshot)

@@ -13,6 +13,10 @@ import jax.numpy as jnp
 import numpy as np
 
 
+class CheckpointError(ValueError):
+    """The stored checkpoint does not match the template tree."""
+
+
 def _keystr(path) -> str:
     return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
 
@@ -33,6 +37,14 @@ def save_pytree(path: str, tree) -> None:
 def load_pytree(path: str, template):
     data = np.load(path if path.endswith(".npz") else path + ".npz")
     leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    stored = {f.removesuffix("::bf16") for f in data.files}
+    expected = {_keystr(kp) for kp, _ in leaves_with_paths}
+    if stored != expected:
+        missing = sorted(expected - stored)
+        extra = sorted(stored - expected)
+        raise CheckpointError(
+            f"checkpoint {path!r} does not match template tree: "
+            f"missing keys {missing}, unexpected keys {extra}")
     out = []
     for kp, leaf in leaves_with_paths:
         key = _keystr(kp)
@@ -40,6 +52,9 @@ def load_pytree(path: str, template):
             arr = data[key + "::bf16"].view(jnp.bfloat16)
         else:
             arr = data[key]
-        assert arr.shape == leaf.shape, f"{key}: {arr.shape} != {leaf.shape}"
+        if arr.shape != leaf.shape:
+            raise CheckpointError(
+                f"checkpoint {path!r}: leaf {key!r} has shape {arr.shape}, "
+                f"template expects {leaf.shape}")
         out.append(jnp.asarray(arr, dtype=leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,187 @@
+"""Crash-safe full-run snapshots (chaos harness).
+
+``repro.checkpoint.checkpoint`` stores a single model pytree; this module
+stores everything a *run* needs to resume bit-exactly: per-sim host state
+(RNG stream, selector/APT/accounting, forecaster banks, busy clocks),
+model + optimizer vectors, the stale-cache rows in their insertion order,
+the round counter and — for sweeps — the completed cells' results.
+
+Exactness contract (tests/test_crash_resume.py): snapshots are taken only
+at round/chunk boundaries, so a resumed run re-enters the identical
+decision sequence — run(2R) == run(R) -> snapshot -> resume(R) bitwise,
+for the fused pipeline (any ``rounds_per_dispatch``), the flat per-stage
+path and the legacy engine.  Snapshots taken from a *sharded* pipeline
+resume on the unsharded one: per-cell results are bit-identical across
+meshes (the PR-4/PR-5 invariants), so the resumed half matches the sharded
+uninterrupted run too.
+
+Fault plans ride along in the snapshot but are restored **without** their
+scheduled crash (``FaultPlan.without_crash``) — resuming a run whose whole
+point was to crash would just crash again; corruption faults, which are
+part of the compiled program's semantics, are preserved exactly.
+
+Format: one pickle file, written atomically (tmp + ``os.replace``) so a
+crash mid-write never corrupts the previous snapshot.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import pickle
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SNAPSHOT_VERSION = 1
+
+
+class SnapshotError(ValueError):
+    """The snapshot file is missing, unreadable, or from another format."""
+
+
+def save_snapshot(path: str, payload: dict) -> None:
+    """Atomic pickle write: the previous snapshot survives a crash here."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as fh:
+        pickle.dump(payload, fh, protocol=pickle.HIGHEST_PROTOCOL)
+    os.replace(tmp, path)
+
+
+def load_snapshot(path: str) -> dict:
+    if not os.path.exists(path):
+        raise SnapshotError(f"no snapshot at {path!r}")
+    with open(path, "rb") as fh:
+        payload = pickle.load(fh)
+    if not isinstance(payload, dict) or "version" not in payload:
+        raise SnapshotError(f"{path!r} is not a run snapshot")
+    if payload["version"] != SNAPSHOT_VERSION:
+        raise SnapshotError(
+            f"{path!r}: snapshot version {payload['version']} "
+            f"(this build reads {SNAPSHOT_VERSION})")
+    return payload
+
+
+# ---------------------------------------------------------------------------
+# Serial engine snapshots (per-stage / legacy round loop)
+# ---------------------------------------------------------------------------
+
+
+def engine_snapshot(sim, next_round: int) -> dict:
+    """Snapshot a (non-fused) Simulator between rounds; ``next_round`` is
+    the first round the resumed loop will run."""
+    cfg = sim.cfg
+    ps = {
+        "cfg": dataclasses.asdict(cfg),
+        "state": sim.capture_state(),
+        "fault_plan": sim.fault_plan,
+    }
+    if cfg.fast_path:
+        ps["flat_params"] = np.asarray(jax.device_get(sim.flat_params))
+        ps["flat_opt_state"] = (
+            jax.tree.map(lambda a: np.asarray(jax.device_get(a)),
+                         sim.flat_opt_state)
+            if sim.flat_opt_state is not None else None)
+    else:
+        ps["params"] = jax.tree.map(np.asarray, sim.params)
+        ps["opt_state"] = (jax.tree.map(np.asarray, sim.opt_state)
+                           if sim.opt_state is not None else None)
+    return {"version": SNAPSHOT_VERSION, "kind": "engine",
+            "next_round": int(next_round), "sim": ps}
+
+
+def save_engine_snapshot(path: str, sim, next_round: int) -> None:
+    save_snapshot(path, engine_snapshot(sim, next_round))
+
+
+def _restore_sim(ps: dict, substrate_cache: Optional[dict] = None):
+    """Rebuild one Simulator from its snapshot payload.  The substrate is
+    reconstructed deterministically from the config seed (it is never
+    stored — it is pure function of ``substrate_key``), then the captured
+    mutable state is restored on top."""
+    from repro.sim.engine import Simulator, SimConfig, Substrate, substrate_key
+
+    cfg = SimConfig(**ps["cfg"])
+    key = substrate_key(cfg)
+    if substrate_cache is not None and key in substrate_cache:
+        sub = substrate_cache[key]
+    else:
+        sub = Substrate.build(cfg)
+        if substrate_cache is not None:
+            substrate_cache[key] = sub
+    fp = ps.get("fault_plan")
+    if fp is not None:
+        fp = fp.without_crash()
+    sim = Simulator(cfg, substrate=sub, fault_plan=fp)
+    sim.restore_state(ps["state"])
+    if cfg.fast_path:
+        sim.flat_params = jnp.asarray(ps["flat_params"])
+        if ps.get("flat_opt_state") is not None:
+            sim.flat_opt_state = jax.tree.map(jnp.asarray,
+                                              ps["flat_opt_state"])
+    else:
+        sim.params = jax.tree.map(jnp.asarray, ps["params"])
+        if ps.get("opt_state") is not None:
+            sim.opt_state = jax.tree.map(jnp.asarray, ps["opt_state"])
+    return sim
+
+
+# ---------------------------------------------------------------------------
+# Fused-pipeline snapshots (built by RoundPipeline.snapshot)
+# ---------------------------------------------------------------------------
+
+
+def build_resumed_pipeline(payload: dict, progress: bool = False,
+                           checkpoint_path: Optional[str] = None,
+                           checkpoint_every: int = 0, checkpoint_wrap=None):
+    """Reconstruct a RoundPipeline mid-run from a ``kind == "pipeline"``
+    snapshot.  Resume always runs unsharded (bit-identical per cell to any
+    mesh, so snapshots from sharded runs restore fine); stale rows are
+    re-seated into a fresh device cache in their saved order — slot ids
+    never affect values."""
+    from repro.sim.pipeline import RoundPipeline
+
+    sub_cache: dict = {}
+    sims = [_restore_sim(ps, sub_cache) for ps in payload["sims"]]
+    for sim in sims:
+        if sim.cfg.shard_participants:
+            # participant-sharded resume would need the (s, p) slot layout
+            # restored; clear the flag — results are bit-identical anyway
+            sim.cfg = dataclasses.replace(sim.cfg, shard_participants=0)
+    pipe = RoundPipeline(sims, progress=progress,
+                         checkpoint_path=checkpoint_path,
+                         checkpoint_every=checkpoint_every,
+                         checkpoint_wrap=checkpoint_wrap,
+                         start_round=int(payload["next_round"]))
+    pipe.done = list(payload["done"])
+    for sim in sims:
+        if not sim.stale_cache:
+            continue
+        rows = np.stack([f.delta for f in sim.stale_cache])
+        slots, _ = pipe.cache.alloc(len(sim.stale_cache))
+        pipe.cache.put(slots, rows)
+        for f, slot in zip(sim.stale_cache, slots):
+            f.delta = int(slot)
+    return pipe
+
+
+def resume_run(path: str, progress: bool = False, *,
+               checkpoint_path: Optional[str] = None,
+               checkpoint_every: int = 0):
+    """Resume a single-simulation run from its snapshot.  Returns the
+    finalized Accounting — the same object an uninterrupted
+    ``Simulator.run`` yields, bit-identical to it."""
+    payload = load_snapshot(path)
+    if payload["kind"] == "engine":
+        sim = _restore_sim(payload["sim"])
+        return sim._run_loop(int(payload["next_round"]), progress,
+                             checkpoint_path, checkpoint_every)
+    if payload["kind"] == "pipeline":
+        pipe = build_resumed_pipeline(payload, progress=progress,
+                                      checkpoint_path=checkpoint_path,
+                                      checkpoint_every=checkpoint_every)
+        return pipe.run()[0] if len(pipe.sims) == 1 else pipe.run()
+    raise SnapshotError(f"{path!r}: unknown snapshot kind "
+                        f"{payload['kind']!r}")

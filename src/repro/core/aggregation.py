@@ -246,6 +246,112 @@ def sweep_aggregate_flat(stacked, fresh, tau, valid, beta, *,
         np.asarray(beta, np.float32), rule_id)
 
 
+# ---------------------------------------------------------------------------
+# Guarded aggregation (chaos harness: screen rows before they are weighted)
+# ---------------------------------------------------------------------------
+
+
+def screen_rows(u, valid, *, clip=None, reject_mult=None):
+    """In-program screening of an update operand ``u`` (..., n, D).
+
+    The one screening formula every guarded aggregation path runs — the
+    engine's flat/legacy paths, the batched sweep program, and the fused
+    round body — so rejection decisions are identical across substrates.
+    Three screens, in order:
+
+      1. non-finite reject: any NaN/Inf element invalidates the row;
+      2. norm-outlier reject (``reject_mult``): rows whose squared L2 norm
+         exceeds ``reject_mult**2`` times the median surviving squared norm;
+      3. norm clip (``clip``): surviving rows are rescaled to L2 norm
+         ``clip`` when they exceed it.
+
+    Rejected rows are *zeroed*, not merely mask-flagged: deviation scores
+    and the weighted einsum read every row downstream, and ``0 * NaN``
+    would reintroduce the poison.  With all rows finite and ``clip`` /
+    ``reject_mult`` inactive, the output is a bit-exact select of ``u``
+    (``jnp.where`` under an all-true mask) — the guards-on/no-faults
+    bit-parity guarantee rests on this.
+
+    valid: (..., n) bool masking real rows (padding screens as invalid but
+    is not counted).  Returns ``(u_screened, valid_out, n_nonfinite,
+    n_norm_rejected, n_clipped)`` with int32 counts summed over the row
+    axis.
+    """
+    u = jnp.asarray(u, jnp.float32)
+    valid = jnp.asarray(valid, bool)
+    finite = jnp.isfinite(u).all(axis=-1)
+    v1 = valid & finite
+    n_nf = (valid & ~finite).sum(axis=-1).astype(jnp.int32)
+    # rejected/padded rows get +inf norms: they sort last and never reach
+    # the median index, which counts only surviving rows
+    n2 = jnp.where(v1, jnp.sum(u * u, axis=-1), jnp.inf)
+    if reject_mult is not None:
+        srt = jnp.sort(n2, axis=-1)
+        idx = jnp.maximum(v1.sum(axis=-1) - 1, 0) // 2
+        med = jnp.take_along_axis(srt, idx[..., None], axis=-1)[..., 0]
+        out = v1 & (n2 > (np.float32(reject_mult) ** 2) * med[..., None])
+        v2 = v1 & ~out
+        n_out = out.sum(axis=-1).astype(jnp.int32)
+    else:
+        v2 = v1
+        n_out = jnp.zeros_like(n_nf)
+    if clip is not None:
+        c2 = np.float32(clip) * np.float32(clip)
+        hit = v2 & (n2 > c2)
+        scale = jnp.where(hit, np.float32(clip) / jnp.sqrt(n2),
+                          jnp.float32(1.0))
+        u = u * scale[..., None]
+        n_clip = hit.sum(axis=-1).astype(jnp.int32)
+    else:
+        n_clip = jnp.zeros_like(n_nf)
+    u = jnp.where(v2[..., None], u, 0.0)
+    return u, v2, n_nf, n_out, n_clip
+
+
+@functools.lru_cache(maxsize=16)
+def _screen_fn(clip, reject_mult):
+    return jax.jit(functools.partial(screen_rows, clip=clip,
+                                     reject_mult=reject_mult))
+
+
+def guarded_aggregate_flat(stacked, fresh, tau, *, rule: str = "relay",
+                           beta: float = 0.35, use_kernel: bool = False,
+                           compiled: bool = True, clip=None, reject_mult=None,
+                           quorum: int = 1):
+    """Screened, quorum-checked ``stale_synchronous_aggregate_flat``.
+
+    Returns ``(agg (D,), weights (n,), info)`` where ``info`` holds the
+    rejected-row counts (``nonfinite`` / ``norm``), ``clipped``,
+    ``survivors``, and ``applied`` — False when survivors fall below
+    ``quorum``, in which case the caller must carry params unchanged.
+
+    When nothing is rejected or clipped, the call routes through the
+    unguarded ``stale_synchronous_aggregate_flat`` with the caller's exact
+    arguments, so guards-on/no-faults is bit-identical to guards-off on
+    every route — including the Pallas kernel, which has no row-validity
+    input and therefore only ever serves this clean case; screened
+    aggregation always runs the jitted masked program.
+    """
+    n = int(np.shape(stacked)[0])
+    u, fr, ta, valid = bucket_pad(stacked, fresh, tau, bucketed=compiled)
+    u2, v2, n_nf, n_out, n_clip = _screen_fn(clip, reject_mult)(u, valid)
+    n_nf = int(jax.device_get(n_nf))
+    n_out = int(jax.device_get(n_out))
+    n_clip = int(jax.device_get(n_clip))
+    survivors = int(jax.device_get(v2.sum()))
+    applied = survivors >= max(int(quorum), 1)
+    info = {"nonfinite": n_nf, "norm": n_out, "clipped": n_clip,
+            "survivors": survivors, "applied": applied}
+    if n_nf == 0 and n_out == 0 and n_clip == 0:
+        agg, w = stale_synchronous_aggregate_flat(
+            stacked, fresh, tau, rule=rule, beta=beta,
+            use_kernel=use_kernel, compiled=compiled)
+        return agg, w, info
+    agg, w = _weights_and_aggregate(u2, np.asarray(fr), np.asarray(ta),
+                                    v2, np.float32(beta), rule=rule)
+    return agg, w[:n], info
+
+
 def stale_synchronous_aggregate(update_trees: Sequence, fresh: Sequence[bool],
                                 tau: Sequence[int], *, rule: str = "relay",
                                 beta: float = 0.35, use_kernel: bool = False,

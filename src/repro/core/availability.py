@@ -52,8 +52,10 @@ class AvailabilityForecaster:
         truth = np.array([float(trace_fn(t)) for t in t_eval])
         mse = float(np.mean((preds - truth) ** 2))
         mae = float(np.mean(np.abs(preds - truth)))
-        denom = float(np.var(truth)) or 1.0
-        r2 = 1.0 - mse / denom
+        var = float(np.var(truth))
+        # R^2 is undefined for a constant truth trace — report NaN rather
+        # than a bogus score against an arbitrary denominator
+        r2 = float("nan") if var == 0.0 else 1.0 - mse / var
         return {"r2": r2, "mse": mse, "mae": mae}
 
 

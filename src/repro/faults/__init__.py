@@ -1,0 +1,2 @@
+from repro.faults.plan import (CORRUPTION_KINDS, KINDS,  # noqa: F401
+                               FaultPlan, FaultSpec, InjectedCrash)

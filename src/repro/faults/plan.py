@@ -1,0 +1,166 @@
+"""Deterministic, seeded fault injection for the round engine (chaos harness).
+
+A ``FaultPlan`` is a *program* of faults, fully materialized at construction
+from ``np.random.default_rng(seed)`` — dense per-(round, learner) arrays, so
+the same plan replays the identical faults on every substrate (legacy,
+per-stage flat, fused pipeline, batched sweeps) and across checkpoint/resume.
+Four fault families:
+
+  update corruption (``nan`` / ``inf`` / ``signflip`` / ``scale``) — a
+      per-row fp32 multiplier applied to the learner's flat update delta
+      right after local training.  The fused pipeline folds the multiplier
+      into the round program (an extra fp32 lane in the packed floats
+      buffer), so the transfer-guard and one-psum-per-round invariants
+      survive; the host paths apply the identical IEEE multiply, keeping
+      all substrates bit-identical under faults.
+
+  ``post_drop`` — the learner finishes training but the result is lost
+      before upload: full duration charged and wasted (the paper's §3
+      wasted-work currency), device busy for the whole round, no arrival,
+      no selector feedback.  Decided in ``Simulator._schedule_round``
+      (host), hence identical across substrates.
+
+  ``replay`` — a landing stale update is delivered twice in the same round
+      (duplicate slot gather / duplicate cached row in the aggregation
+      operand), exercising the slot cache's free-dedup discipline.
+
+  host crash (``crash_after`` / ``crash_mode``) — after round
+      ``crash_after`` completes: ``"soft"`` raises ``InjectedCrash`` (the
+      in-process property tests), ``"hard"`` SIGKILLs the process (the CI
+      chaos leg), leaving recovery to ``--resume`` from the last
+      checkpoint.
+
+Rounds beyond the plan's horizon and learners beyond ``n_learners`` are
+fault-free, so a crash-only plan may be built with ``FaultPlan(0, 0, ...)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import signal
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+CORRUPTION_KINDS = ("nan", "inf", "signflip", "scale")
+KINDS = CORRUPTION_KINDS + ("post_drop", "replay")
+
+
+class InjectedCrash(RuntimeError):
+    """A FaultPlan's scheduled soft host crash (``crash_mode="soft"``)."""
+
+    def __init__(self, round_idx: int):
+        super().__init__(f"injected host crash after round {round_idx}")
+        self.round_idx = round_idx
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One fault family over a (round window x learner set) region.
+
+    ``prob`` is the per-(round, learner) hit probability; ``rounds`` is a
+    half-open ``(start, stop)`` window (None = every round); ``learners``
+    restricts the affected ids (None = all).  ``scale`` is the multiplier
+    for ``kind="scale"`` (byzantine scaled garbage)."""
+    kind: str
+    prob: float = 1.0
+    rounds: Optional[Tuple[int, int]] = None
+    learners: Optional[Tuple[int, ...]] = None
+    scale: float = 1e3
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"one of {KINDS}")
+
+
+class FaultPlan:
+    """Dense deterministic fault program over (rounds x n_learners)."""
+
+    def __init__(self, n_learners: int, rounds: int,
+                 specs: Sequence[FaultSpec] = (), seed: int = 0,
+                 crash_after: Optional[int] = None,
+                 crash_mode: str = "soft"):
+        if crash_mode not in ("soft", "hard"):
+            raise ValueError("crash_mode must be 'soft' or 'hard'")
+        self.n_learners = int(n_learners)
+        self.rounds = int(rounds)
+        self.specs = tuple(specs)
+        self.seed = int(seed)
+        self.crash_after = crash_after
+        self.crash_mode = crash_mode
+        r, n = self.rounds, self.n_learners
+        # draw order is fixed: one (R, n) uniform block per spec, in spec
+        # order — the whole program is a pure function of (specs, seed)
+        rng = np.random.default_rng(seed)
+        self.corrupt = np.ones((r, n), np.float32)
+        self._post_drop = np.zeros((r, n), bool)
+        self._replay = np.zeros((r, n), bool)
+        for spec in self.specs:
+            hit = rng.random((r, n)) < spec.prob
+            if spec.rounds is not None:
+                m = np.zeros(r, bool)
+                m[spec.rounds[0]:spec.rounds[1]] = True
+                hit &= m[:, None]
+            if spec.learners is not None:
+                m = np.zeros(n, bool)
+                m[list(spec.learners)] = True
+                hit &= m[None, :]
+            if spec.kind == "post_drop":
+                self._post_drop |= hit
+            elif spec.kind == "replay":
+                self._replay |= hit
+            else:
+                val = {"nan": np.nan, "inf": np.inf,
+                       "signflip": -1.0, "scale": spec.scale}[spec.kind]
+                self.corrupt[hit] = np.float32(val)
+        # NaN != 1.0 is True, so NaN overlays register as corruption
+        self.has_corruption = bool(np.any(self.corrupt != 1.0))
+
+    # ------------------------------------------------------------------
+    def scale_for(self, r: int, lids) -> np.ndarray:
+        """fp32 per-row delta multipliers for round ``r``'s cohort."""
+        lids = np.asarray(lids, np.int64)
+        if r >= self.rounds or not self.has_corruption:
+            return np.ones(len(lids), np.float32)
+        return self.corrupt[r, lids]
+
+    def post_drop(self, r: int, lid: int) -> bool:
+        return r < self.rounds and bool(self._post_drop[r, lid])
+
+    def replay(self, r: int, lid: int) -> bool:
+        return r < self.rounds and bool(self._replay[r, lid])
+
+    # ------------------------------------------------------------------
+    def crash_due(self, r_completed: int) -> bool:
+        """True when the crash fires after round ``r_completed``."""
+        return self.crash_after is not None and r_completed >= self.crash_after
+
+    def trigger_crash(self, r_completed: int):
+        if self.crash_mode == "hard":
+            # unhandled-by-design: the CI chaos leg asserts exit code 137
+            os.kill(os.getpid(), signal.SIGKILL)
+        raise InjectedCrash(r_completed)
+
+    def without_crash(self) -> "FaultPlan":
+        """The same fault program with the crash disarmed — what a resumed
+        run carries, so corruption/drop/replay faults replay identically
+        but the (already-fired) crash does not refire."""
+        clone = FaultPlan.__new__(FaultPlan)
+        clone.__dict__.update(self.__dict__)
+        clone.crash_after = None
+        return clone
+
+    # ------------------------------------------------------------------
+    def counts(self) -> dict:
+        """Scheduled fault totals per kind (the chaos demo's table)."""
+        c = self.corrupt
+        finite = np.isfinite(c)
+        return {
+            "nan": int(np.isnan(c).sum()),
+            "inf": int(np.isinf(c).sum()),
+            "signflip": int((finite & (c == -1.0)).sum()),
+            "scale": int((finite & (c != 1.0) & (c != -1.0)).sum()),
+            "post_drop": int(self._post_drop.sum()),
+            "replay": int(self._replay.sum()),
+        }

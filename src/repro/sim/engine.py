@@ -61,6 +61,7 @@ traces (matched-condition comparisons, Soltani et al. 2022).
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import functools
 from typing import Optional
@@ -178,6 +179,16 @@ class SimConfig:
                                       # to the local device count), True = all local
                                       # devices.  Fused pipeline only; bit-identical
                                       # to the unsharded run (one psum per round)
+    guard: bool = False               # screen update rows before aggregation
+                                      # (non-finite reject + optional norm rules);
+                                      # with no faults injected, guarded runs are
+                                      # bit-identical to unguarded ones
+    guard_clip: Optional[float] = None         # L2 clip for surviving rows
+    guard_reject_mult: Optional[float] = None  # reject rows whose sq-norm exceeds
+                                               # mult^2 x median surviving sq-norm
+    quorum: int = 1                   # min surviving rows for a server apply;
+                                      # below it the round's apply is skipped
+                                      # (params carried unchanged)
 
 
 def substrate_key(cfg: SimConfig) -> tuple:
@@ -294,8 +305,10 @@ class RoundSchedule:
 
 
 class Simulator:
-    def __init__(self, cfg: SimConfig, substrate: Optional[Substrate] = None):
+    def __init__(self, cfg: SimConfig, substrate: Optional[Substrate] = None,
+                 fault_plan=None):
         self.cfg = cfg
+        self.fault_plan = fault_plan  # repro.faults.FaultPlan or None
         if substrate is None:
             substrate = Substrate.build(cfg)
         else:
@@ -492,12 +505,19 @@ class Simulator:
         t_now, chosen, durs, drop_at = plan.t_now, plan.chosen, plan.durs, plan.drop_at
         n_t = plan.n_t
 
+        fp = self.fault_plan
         arrivals = []   # (arrival_time, idx into chosen) for non-dropouts
         for i, lid in enumerate(chosen):
             if np.isfinite(drop_at[i]):
                 # device went away mid-round: partial work, always wasted
                 self.acct.charge(float(drop_at[i]), wasted=True)
                 self.busy_until[lid] = t_now + float(drop_at[i])
+            elif fp is not None and fp.post_drop(r, lid):
+                # injected fault: the learner finishes training but the
+                # result is lost before upload — full duration charged and
+                # wasted (paper §3), no arrival, no selector feedback
+                self.acct.charge(float(durs[i]), wasted=True)
+                self.busy_until[lid] = t_now + float(durs[i])
             else:
                 arrivals.append((t_now + durs[i], i))
                 self.acct.charge(float(durs[i]), wasted=False)
@@ -542,6 +562,11 @@ class Simulator:
                     landing.append(f)
                     landing_taus.append(tau)
                     self.acct.unique.add(f.learner_id)
+                    if fp is not None and fp.replay(r, f.learner_id):
+                        # injected fault: the same stale delivery lands
+                        # twice — a duplicate row in the aggregation operand
+                        landing.append(f)
+                        landing_taus.append(tau)
                 else:
                     expired.append(f)
                     self.acct.mark_wasted(f.duration)
@@ -592,21 +617,66 @@ class Simulator:
         stale_updates = [f.delta for f in sched.landing]
         return sched.t_end, fresh_updates, stale_updates, sched.landing_taus
 
+    def _corrupt_deltas(self, r: int, plan: RoundPlan, deltas):
+        """Apply the fault plan's per-row update corruption (chaos harness).
+
+        A pure fp32 multiply after local training and before caching /
+        aggregation — the identical IEEE operation the fused pipeline folds
+        into its round program, so faulted runs stay parity-comparable
+        across substrates.  Losses and Oort stats are computed pre-fault
+        everywhere (corruption models the uplink, not the training)."""
+        fp = self.fault_plan
+        if fp is None or not fp.has_corruption:
+            return deltas
+        fscale = fp.scale_for(r, plan.chosen)
+        if self.cfg.fast_path:
+            return np.asarray(deltas) * fscale[:, None]
+        k = len(plan.chosen)
+        return jax.tree.map(
+            lambda d: d * jnp.asarray(fscale).reshape((k,) + (1,) * (d.ndim - 1)),
+            deltas)
+
     def _aggregate(self, fresh_updates, stale_updates, stale_taus):
+        """Returns the aggregated delta, or None when the guard's quorum
+        check rejects the round (caller carries params unchanged)."""
         cfg = self.cfg
         fresh_mask = [True] * len(fresh_updates) + [False] * len(stale_updates)
         taus = [0] * len(fresh_updates) + stale_taus
+        if not cfg.guard:
+            if cfg.fast_path:
+                stacked = np.stack(fresh_updates + stale_updates)
+                agg_flat, _ = stale_synchronous_aggregate_flat(
+                    stacked, fresh_mask, taus, rule=cfg.scaling_rule,
+                    beta=cfg.beta, use_kernel=cfg.use_agg_kernel)
+                return agg_flat
+            agg_tree, _ = stale_synchronous_aggregate(
+                fresh_updates + stale_updates, fresh_mask, taus,
+                rule=cfg.scaling_rule, beta=cfg.beta,
+                use_kernel=cfg.use_agg_kernel,
+                compiled=False)  # seed-exact eager baseline
+            return agg_tree
+        # guarded route: one shared screening + masked-aggregation program.
+        # Legacy trees are flattened exactly as the unguarded tree path
+        # does, so the clean (nothing-rejected) case routes through the
+        # identical unguarded computation bit-for-bit.
         if cfg.fast_path:
             stacked = np.stack(fresh_updates + stale_updates)
-            agg_flat, _ = stale_synchronous_aggregate_flat(
-                stacked, fresh_mask, taus, rule=cfg.scaling_rule,
-                beta=cfg.beta, use_kernel=cfg.use_agg_kernel)
-            return agg_flat
-        agg_tree, _ = stale_synchronous_aggregate(
-            fresh_updates + stale_updates, fresh_mask, taus,
-            rule=cfg.scaling_rule, beta=cfg.beta, use_kernel=cfg.use_agg_kernel,
-            compiled=False)  # seed-exact eager baseline
-        return agg_tree
+            spec = None
+        else:
+            flats, spec = [], None
+            for t in fresh_updates + stale_updates:
+                f, spec = agg.flatten_update(t)
+                flats.append(f)
+            stacked = jnp.stack(flats)
+        agg_out, _, info = agg.guarded_aggregate_flat(
+            stacked, fresh_mask, taus, rule=cfg.scaling_rule, beta=cfg.beta,
+            use_kernel=cfg.use_agg_kernel, compiled=cfg.fast_path,
+            clip=cfg.guard_clip, reject_mult=cfg.guard_reject_mult,
+            quorum=cfg.quorum)
+        self.acct.note_guard(info["nonfinite"], info["norm"], info["applied"])
+        if not info["applied"]:
+            return None
+        return agg_out if spec is None else unflatten_update(agg_out, spec)
 
     def _apply_update(self, agg_out):
         """Server optimizer step on the aggregated delta."""
@@ -694,7 +764,72 @@ class Simulator:
         return self.acct
 
     # ------------------------------------------------------------------
-    def run(self, progress: bool = False):
+    # Snapshot support (chaos harness: crash-safe bit-exact resume)
+    # ------------------------------------------------------------------
+
+    def capture_state(self, stale_rows=None):
+        """Everything mutable the round loop reads, as plain host objects.
+
+        ``stale_rows`` optionally supplies the stale-cache update rows
+        (aligned with ``self.stale_cache``) — the fused pipeline passes the
+        gathered device rows, since there ``_InFlight.delta`` is only a
+        cache slot id.  The result round-trips through pickle; restoring it
+        into a Simulator rebuilt from the same config + substrate resumes
+        the identical RNG/selector/accounting streams."""
+        cfg = self.cfg
+        st = {
+            "rng": self.rng.bit_generator.state,
+            "selector": copy.deepcopy(self.selector),
+            "apt": copy.deepcopy(self.apt),
+            "busy_until": self.busy_until.copy(),
+            "mu": self.mu,
+            "t_now": self._t_now,
+            "acct": copy.deepcopy(self.acct),
+        }
+        if cfg.fast_path:
+            st["fbank"] = (self.fbank.counts.copy(),
+                           self.fbank.avail_counts.copy(),
+                           self.fbank.recent.copy())
+        else:
+            st["forecasters"] = copy.deepcopy(self.forecasters)
+        entries = []
+        for idx, f in enumerate(self.stale_cache):
+            if stale_rows is not None:
+                row = np.asarray(stale_rows[idx])
+            elif cfg.fast_path:
+                row = np.asarray(f.delta)
+            else:
+                row = jax.tree.map(np.asarray, f.delta)
+            entries.append((f.learner_id, f.origin_round, f.arrival,
+                            f.duration, f.stat_util, row))
+        st["stale"] = entries
+        return st
+
+    def restore_state(self, st):
+        """Inverse of ``capture_state``.  Stale entries come back with their
+        host rows as ``delta``; a fused-pipeline resume re-seats them into
+        the device cache afterwards (``repro.checkpoint.state``)."""
+        self.rng.bit_generator.state = st["rng"]
+        self.selector = copy.deepcopy(st["selector"])
+        self.apt = copy.deepcopy(st["apt"])
+        self.busy_until = np.array(st["busy_until"])
+        self.mu = st["mu"]
+        self._t_now = st["t_now"]
+        self.acct = copy.deepcopy(st["acct"])
+        if self.cfg.fast_path:
+            counts, avail_counts, recent = st["fbank"]
+            self.fbank.counts = np.array(counts)
+            self.fbank.avail_counts = np.array(avail_counts)
+            self.fbank.recent = np.array(recent)
+        else:
+            self.forecasters = copy.deepcopy(st["forecasters"])
+        self.stale_cache = [
+            _InFlight(lid, orig, arr, dur, row, su)
+            for (lid, orig, arr, dur, su, row) in st["stale"]]
+
+    # ------------------------------------------------------------------
+    def run(self, progress: bool = False, *,
+            checkpoint_path: Optional[str] = None, checkpoint_every: int = 0):
         if self.cfg.shard_participants and not (self.cfg.fast_path
                                                 and self.cfg.fused_rounds):
             raise ValueError(
@@ -703,22 +838,41 @@ class Simulator:
                 "legacy substrates have no device-sharded round program")
         if self.cfg.fast_path and self.cfg.fused_rounds:
             from repro.sim.pipeline import RoundPipeline
-            return RoundPipeline([self], progress=progress).run()[0]
+            return RoundPipeline([self], progress=progress,
+                                 checkpoint_path=checkpoint_path,
+                                 checkpoint_every=checkpoint_every).run()[0]
         self._t_now = 0.0
-        for r in range(self.cfg.rounds):
+        return self._run_loop(0, progress, checkpoint_path, checkpoint_every)
+
+    def _run_loop(self, start_round: int, progress: bool,
+                  checkpoint_path: Optional[str], checkpoint_every: int):
+        """The per-stage/legacy round loop from ``start_round`` — resume
+        entry point: a restored Simulator continues here without resetting
+        the clock."""
+        cfg = self.cfg
+        fp = self.fault_plan
+        for r in range(start_round, cfg.rounds):
             plan = self._begin_round(r)
-            if plan is None:
-                continue
-            deltas, losses, l2s = self._train(plan)
-            t_end, fresh_updates, stale_updates, stale_taus = \
-                self._collect_updates(r, plan, deltas, losses, l2s)
-            if fresh_updates or stale_updates:
-                self._apply_update(
-                    self._aggregate(fresh_updates, stale_updates, stale_taus))
-            self._record_round(r, plan.t_now, t_end, len(plan.chosen),
-                               len(fresh_updates), len(stale_updates),
-                               progress=progress)
-            if self._target_reached():
-                self.acct.stopped_early = True
-                break
+            if plan is not None:
+                deltas, losses, l2s = self._train(plan)
+                deltas = self._corrupt_deltas(r, plan, deltas)
+                t_end, fresh_updates, stale_updates, stale_taus = \
+                    self._collect_updates(r, plan, deltas, losses, l2s)
+                if fresh_updates or stale_updates:
+                    agg_out = self._aggregate(fresh_updates, stale_updates,
+                                              stale_taus)
+                    if agg_out is not None:
+                        self._apply_update(agg_out)
+                self._record_round(r, plan.t_now, t_end, len(plan.chosen),
+                                   len(fresh_updates), len(stale_updates),
+                                   progress=progress)
+                if self._target_reached():
+                    self.acct.stopped_early = True
+                    break
+            if checkpoint_path and checkpoint_every and \
+                    (r + 1) % checkpoint_every == 0 and r + 1 < cfg.rounds:
+                from repro.checkpoint.state import save_engine_snapshot
+                save_engine_snapshot(checkpoint_path, self, r + 1)
+            if fp is not None and fp.crash_due(r):
+                fp.trigger_crash(r)
         return self._finalize()

@@ -31,6 +31,9 @@ class SimSummary(TypedDict):
     final_accuracy: float        # last evaluation (NaN if never evaluated)
     best_accuracy: float         # best evaluation (NaN if never evaluated)
     stopped_early: bool          # hit SimConfig.target_accuracy before rounds ran out
+    rejected_nonfinite: int      # guard: update rows rejected for NaN/Inf
+    rejected_norm: int           # guard: rows rejected as norm outliers
+    quorum_skips: int            # rounds whose server apply was skipped (quorum)
 
 
 SUMMARY_KEYS = tuple(SimSummary.__annotations__)
@@ -57,6 +60,16 @@ class Accounting:
     resource_wasted: float = 0.0
     unique: set = dataclasses.field(default_factory=set)
     stopped_early: bool = False   # accuracy-target early stop fired
+    rejected_nonfinite: int = 0   # guard: rows rejected for NaN/Inf values
+    rejected_norm: int = 0        # guard: rows rejected as norm outliers
+    quorum_skips: int = 0         # rounds where the apply was quorum-skipped
+
+    def note_guard(self, nonfinite: int, norm: int, applied: bool):
+        """Record one aggregation's guard outcome (per round with updates)."""
+        self.rejected_nonfinite += int(nonfinite)
+        self.rejected_norm += int(norm)
+        if not applied:
+            self.quorum_skips += 1
 
     def charge(self, seconds: float, wasted: bool):
         self.resource_used += seconds
@@ -91,4 +104,7 @@ class Accounting:
             final_accuracy=accs[-1] if accs else float("nan"),
             best_accuracy=max(accs) if accs else float("nan"),
             stopped_early=self.stopped_early,
+            rejected_nonfinite=self.rejected_nonfinite,
+            rejected_norm=self.rejected_norm,
+            quorum_skips=self.quorum_skips,
         )

@@ -123,7 +123,8 @@ def pipeline_key(cfg) -> tuple:
             cfg.prox_mu, cfg.rounds, cfg.eval_every, cfg.aggregator,
             cfg.use_agg_kernel,
             cfg.scaling_rule if cfg.use_agg_kernel else None,
-            cfg.rounds_per_dispatch, cfg.shard_participants)
+            cfg.rounds_per_dispatch, cfg.shard_participants,
+            cfg.guard, cfg.guard_clip, cfg.guard_reject_mult, cfg.quorum)
 
 
 @dataclasses.dataclass
@@ -142,6 +143,9 @@ class PipelineStats:
     cross_shard_landings: int = 0   # landings whose aggregation group spans
                                     # other p-shards — operand rows the psum
                                     # genuinely merges across shards
+    guard: dict = dataclasses.field(
+        default_factory=lambda: {"rejected_nonfinite": 0, "rejected_norm": 0,
+                                 "quorum_skips": 0})
 
     def as_dict(self) -> dict:
         per_round = max(self.rounds, 1)
@@ -159,6 +163,7 @@ class PipelineStats:
             "n_pshards": self.n_pshards,
             "rounds_per_dispatch": self.rounds_per_dispatch,
             "cross_shard_landings": self.cross_shard_landings,
+            "guard": dict(self.guard),
         }
 
 
@@ -170,7 +175,7 @@ class PipelineStats:
 
 def _round_body(params, cache, opt_state, x_tr, y_tr, ints, floats, shapes,
                 *, train_unit, steps, batch, yogi, use_kernel, kernel_rule,
-                single, p_axis=None):
+                single, p_axis=None, guard=None, faulty=False):
     """One round's device work on one (local) params/cache block.
 
     params: (rows, D) — cell rows plus one scratch row; cache: (C + 1, D)
@@ -187,6 +192,18 @@ def _round_body(params, cache, opt_state, x_tr, y_tr, ints, floats, shapes,
     Everything after the psum (weights, aggregate, server apply) is
     computed identically on every p-shard, which is what keeps the
     p-replicated params/optimizer rows bitwise in sync.
+
+    ``guard`` (static) is ``(clip, reject_mult, quorum)`` when guarded
+    aggregation is on: the operand is screened in-program
+    (``aggregation.screen_rows`` — the same formula every host path runs),
+    the survivor mask replaces ``agg_valid``, and the server apply is
+    gated on ``survivors >= quorum``.  ``faulty`` (static) appends a
+    per-row fp32 corruption multiplier to the floats buffer, applied to
+    the delta rows between training and the cache scatter — fault
+    injection without any extra transfer or collective.  The last output
+    is a (G, 4) int32 guard-stats block
+    [rejected_nonfinite, rejected_norm, survivors, applied] (zeros when
+    unguarded); it is p-replicated like everything after the psum.
     """
     r_b, tb, g_b, nf_b, ns_b, all_valid = shapes
     n_b = nf_b + ns_b
@@ -225,6 +242,11 @@ def _round_body(params, cache, opt_state, x_tr, y_tr, ints, floats, shapes,
         deltas, losses, l2s = jax.vmap(train_unit)(params[row_cell], bx, by)
 
     # --- straggler scatter into the cache, then gather ---------------
+    if faulty:
+        # injected corruption: one IEEE fp32 multiply per delta row —
+        # before the scatter, so cached straggler rows carry the fault too
+        fscale = floats[2 * g_b:2 * g_b + r_b]
+        deltas = deltas * fscale[:, None]
     # scatter FIRST so the donated cache updates in place (a gather
     # before the scatter would force XLA to copy the whole buffer);
     # this round's scatter slots are disjoint from this round's landing
@@ -251,6 +273,20 @@ def _round_body(params, cache, opt_state, x_tr, y_tr, ints, floats, shapes,
             us = jnp.where(agg_valid[:, nf_b:, None], us, 0.0)
         u = jnp.concatenate([uf, us], axis=1)
 
+    # --- guard screening (static: unguarded programs are untouched) --
+    gstats = jnp.zeros((g_b, 4), jnp.int32)
+    if guard is not None:
+        clip_g, mult_g, quorum_g = guard
+        u, v2, n_nf, n_out, _ = agg.screen_rows(u, agg_valid, clip=clip_g,
+                                                reject_mult=mult_g)
+        agg_valid = v2
+        survivors = v2.sum(axis=-1).astype(jnp.int32)
+        has_eff = has_g & (survivors >= quorum_g)
+        gstats = jnp.stack([n_nf, n_out, survivors,
+                            has_eff.astype(jnp.int32)], axis=1)
+    else:
+        has_eff = has_g
+
     # --- SAA weights + aggregate + server apply ----------------------
     rows_old = params[agg_cell]                       # (G, D)
     if use_kernel:
@@ -275,8 +311,12 @@ def _round_body(params, cache, opt_state, x_tr, y_tr, ints, floats, shapes,
         # no stale rows anywhere this round: Eq. 2 degenerates to the
         # fresh average, so skip the deviation pass entirely.  The
         # weight vector is bit-identical to the general path's (fresh
-        # rows weigh 1, padding weighs 0, same normalization).
-        w = agg_fresh.astype(jnp.float32)
+        # rows weigh 1, padding weighs 0, same normalization).  Under a
+        # guard, rejected fresh rows must weigh 0 too (agg_valid is the
+        # post-screen survivor mask; without faults it covers every
+        # fresh column, so the bits are unchanged).
+        w = ((agg_fresh & agg_valid).astype(jnp.float32)
+             if guard is not None else agg_fresh.astype(jnp.float32))
         w = w / jnp.maximum(w.sum(axis=1, keepdims=True), EPS)
         agg_out = jax.vmap(aggregate_updates)(u, w)
     else:
@@ -287,20 +327,21 @@ def _round_body(params, cache, opt_state, x_tr, y_tr, ints, floats, shapes,
         new_rows, new_state = jax.vmap(yogi_apply_flat)(
             rows_old, agg_out, state_rows)
         keep = lambda new, old: jnp.where(
-            has_g.reshape((-1,) + (1,) * (new.ndim - 1)), new, old)
+            has_eff.reshape((-1,) + (1,) * (new.ndim - 1)), new, old)
         opt_state = jax.tree.map(
             lambda s, ns, os: s.at[agg_cell].set(keep(ns, os)),
             opt_state, new_state, state_rows)
     elif not use_kernel:
         new_rows = rows_old + lr_g[:, None] * agg_out
-    new_rows = jnp.where(has_g[:, None], new_rows, rows_old)
+    # quorum failures (has_eff < has_g) carry the old rows unchanged
+    new_rows = jnp.where(has_eff[:, None], new_rows, rows_old)
     params = params.at[agg_cell].set(new_rows)
-    return params, cache, opt_state, losses, l2s
+    return params, cache, opt_state, losses, l2s, gstats
 
 
 @functools.lru_cache(maxsize=16)
 def _chunk_program(spec, lr, prox_mu, steps, batch, yogi, use_kernel,
-                   kernel_rule, single):
+                   kernel_rule, guard, faulty, single):
     """K-round chunk program (unsharded): ``lax.scan`` of the round body
     with the donated params/cache/optimizer buffers as the scan carry and
     the K prescheduled rounds' index arrays as the scanned inputs.  One
@@ -319,25 +360,26 @@ def _chunk_program(spec, lr, prox_mu, steps, batch, yogi, use_kernel,
                                    prox_mu=prox_mu)
     body = functools.partial(_round_body, train_unit=train_unit, steps=steps,
                              batch=batch, yogi=yogi, use_kernel=use_kernel,
-                             kernel_rule=kernel_rule, single=single)
+                             kernel_rule=kernel_rule, guard=guard,
+                             faulty=faulty, single=single)
 
     def prog(params, cache, opt_state, x_tr, y_tr, ints_k, floats_k, shapes):
         def step(carry, xs):
             p, c, o = carry
-            p, c, o, losses, l2s = body(p, c, o, x_tr, y_tr, xs[0], xs[1],
-                                        shapes)
-            return (p, c, o), (losses, l2s)
+            p, c, o, losses, l2s, gst = body(p, c, o, x_tr, y_tr, xs[0],
+                                             xs[1], shapes)
+            return (p, c, o), (losses, l2s, gst)
 
-        (params, cache, opt_state), (losses, l2s) = jax.lax.scan(
+        (params, cache, opt_state), (losses, l2s, gst) = jax.lax.scan(
             step, (params, cache, opt_state), (ints_k, floats_k))
-        return params, cache, opt_state, losses, l2s
+        return params, cache, opt_state, losses, l2s, gst
 
     return jax.jit(prog, donate_argnums=(0, 1, 2), static_argnums=(7,))
 
 
 @functools.lru_cache(maxsize=16)
 def _sharded_chunk_program(spec, lr, prox_mu, steps, batch, yogi, use_kernel,
-                           kernel_rule, mesh):
+                           kernel_rule, guard, faulty, mesh):
     """K-round chunk program sharded over the 2-D ``("s", "p")`` round
     mesh: ``shard_map`` with the chunk scan inside.  Each (s, p) device
     owns its s-block's ``(s_loc + 1, D)`` params rows (replicated along
@@ -354,8 +396,8 @@ def _sharded_chunk_program(spec, lr, prox_mu, steps, batch, yogi, use_kernel,
                                    prox_mu=prox_mu)
     body = functools.partial(_round_body, train_unit=train_unit, steps=steps,
                              batch=batch, yogi=yogi, use_kernel=use_kernel,
-                             kernel_rule=kernel_rule, single=False,
-                             p_axis=PART_AXIS)
+                             kernel_rule=kernel_rule, guard=guard,
+                             faulty=faulty, single=False, p_axis=PART_AXIS)
     opt_spec = ({"m": P("s"), "v": P("s"), "t": P("s")} if yogi else None)
 
     def prog(params3, cache3, opt_state, x_tr, y_tr, ints3, floats3, shapes):
@@ -365,21 +407,22 @@ def _sharded_chunk_program(spec, lr, prox_mu, steps, batch, yogi, use_kernel,
 
             def step(carry, xs):
                 p, c, o = carry
-                p, c, o, losses, l2s = body(p, c, o, x_tr, y_tr, xs[0],
-                                            xs[1], shapes)
-                return (p, c, o), (losses, l2s)
+                p, c, o, losses, l2s, gst = body(p, c, o, x_tr, y_tr, xs[0],
+                                                 xs[1], shapes)
+                return (p, c, o), (losses, l2s, gst)
 
-            (p, c, o), (losses, l2s) = jax.lax.scan(
+            (p, c, o), (losses, l2s, gst) = jax.lax.scan(
                 step, (p, c, o), (i3[:, 0], f3[:, 0]))
             return (p[None], c[None], jax.tree.map(lambda a: a[None], o),
-                    losses, l2s)
+                    losses, l2s, gst)
 
         return shard_map(
             per_shard, mesh=mesh,
             in_specs=(P("s"), P(("s", "p")), opt_spec, P(), P(),
                       P(None, ("s", "p")), P(None, ("s", "p"))),
             out_specs=(P("s"), P(("s", "p")), opt_spec,
-                       P(None, ("s", "p")), P(None, ("s", "p"))),
+                       P(None, ("s", "p")), P(None, ("s", "p")),
+                       P(None, ("s", "p"))),
             check_rep=False,
         )(params3, cache3, opt_state, x_tr, y_tr, ints3, floats3)
 
@@ -418,6 +461,19 @@ def _eval_program(spec):
 # ---------------------------------------------------------------------------
 
 
+def _quarantine_frees(order, scheds) -> list:
+    """Slots released by this round's landings/expiries, deduplicated by
+    in-flight entry: a replay fault lands the same entry twice, but its
+    slot must be freed exactly once."""
+    out, seen = [], set()
+    for i in order:
+        for f in scheds[i].landing + scheds[i].expired:
+            if id(f) not in seen:
+                seen.add(id(f))
+                out.append(f.delta)
+    return out
+
+
 @dataclasses.dataclass
 class _RoundWork:
     """One prescheduled round of a chunk: the host state machine has already
@@ -433,11 +489,19 @@ class _RoundWork:
 
 
 class RoundPipeline:
-    def __init__(self, sims: Sequence, progress: bool = False, mesh=None):
+    def __init__(self, sims: Sequence, progress: bool = False, mesh=None,
+                 checkpoint_path: Optional[str] = None,
+                 checkpoint_every: int = 0, checkpoint_wrap=None,
+                 start_round: int = 0):
         assert len(sims) >= 1
         self.sims = list(sims)
         self.progress = progress
         cfg0 = sims[0].cfg
+        self.checkpoint_path = checkpoint_path
+        self.checkpoint_every = int(checkpoint_every or 0)
+        self.checkpoint_wrap = checkpoint_wrap  # envelope hook (sweep resume)
+        self._start_round = int(start_round)
+        self._next_ckpt = self._start_round + self.checkpoint_every
         for sim in sims:
             assert sim.cfg.fast_path and sim.cfg.fused_rounds, \
                 "RoundPipeline drives the fused fast path only"
@@ -548,9 +612,18 @@ class RoundPipeline:
                 jax.device_put(a, self._rep_spec) for a in host)
         self.stats.init_h2d_bytes = (sum(a.nbytes for a in host)
                                      + (s + self.n_shards) * self.d * 4)
+        # guard/fault routing is static program structure: all cells of a
+        # batch share the guard config (pipeline_key) and the floats-buffer
+        # layout (any faulted cell widens it for the whole batch)
+        self._guard = ((cfg0.guard_clip, cfg0.guard_reject_mult,
+                        max(int(cfg0.quorum), 1)) if cfg0.guard else None)
+        self._faulty = any(
+            sim.fault_plan is not None and sim.fault_plan.has_corruption
+            for sim in sims)
         prog_args = (self.spec, cfg0.local_lr, cfg0.prox_mu, cfg0.local_steps,
                      cfg0.local_batch, self.yogi, cfg0.use_agg_kernel,
-                     cfg0.scaling_rule if cfg0.use_agg_kernel else None)
+                     cfg0.scaling_rule if cfg0.use_agg_kernel else None,
+                     self._guard, self._faulty)
         if self.mesh is not None:
             self._prog = _sharded_chunk_program(*prog_args, mesh)
         else:
@@ -586,8 +659,9 @@ class RoundPipeline:
         the pipeline performs is an explicit ``device_put``, so any
         *implicit* host transfer sneaking into the hot path raises — the
         CI smoke (and ``--profile`` benches) run in this mode."""
-        for sim in self.sims:
-            sim._t_now = 0.0
+        if self._start_round == 0:
+            for sim in self.sims:
+                sim._t_now = 0.0
         if transfer_guard:
             with jax.transfer_guard("disallow"):
                 self._run_rounds()
@@ -596,7 +670,9 @@ class RoundPipeline:
         return self.finalize()
 
     def _run_rounds(self):
-        r = 0
+        r = self._start_round
+        fps = [sim.fault_plan for sim in self.sims
+               if sim.fault_plan is not None]
         while r < self.cfg0.rounds and not all(self.done):
             # a chunk is K prescheduled rounds, broken early at eval
             # boundaries so evaluation / early stop / Oort feedback keep
@@ -609,6 +685,18 @@ class RoundPipeline:
                 r += 1
             r = rounds[-1] + 1
             self._run_chunk(rounds)
+            # checkpoint / crash hooks at chunk boundaries only, so a
+            # resumed run re-enters at a boundary of the same chunk
+            # sequence the uninterrupted run walks
+            r_done = rounds[-1]
+            if (self.checkpoint_path and self.checkpoint_every
+                    and r_done + 1 >= self._next_ckpt
+                    and r_done + 1 < self.cfg0.rounds):
+                self.checkpoint(r_done + 1)
+                self._next_ckpt = r_done + 1 + self.checkpoint_every
+            for fp in fps:
+                if fp.crash_due(r_done):
+                    fp.trigger_crash(r_done)
 
     # ------------------------------------------------------------------
     # The round driver: preschedule a K-round chunk (K=1 by default),
@@ -662,9 +750,7 @@ class RoundPipeline:
             grow0 = self.cache.grow_events
             if self._pending_free:
                 self.cache.free(self._pending_free)
-            self._pending_free = [
-                f.delta for i in order
-                for f in scheds[i].landing + scheds[i].expired]
+            self._pending_free = _quarantine_frees(order, scheds)
             for i in order:
                 sc = scheds[i]
                 if sc.new_stale:
@@ -675,9 +761,7 @@ class RoundPipeline:
             grow0 = self.accounts.grow_events
             for shard, slot in self._pending_free:
                 self.accounts.free(shard, [slot])
-            self._pending_free = [
-                f.delta for i in order
-                for f in scheds[i].landing + scheds[i].expired]
+            self._pending_free = _quarantine_frees(order, scheds)
             for i in order:
                 sc = scheds[i]
                 if sc.new_stale:
@@ -778,15 +862,22 @@ class RoundPipeline:
                         for i in groups0))
         shapes = (r_b, tb, g_b, nf_b, ns_b, all_valid)
 
-        floats_all = np.zeros((len(works), nflat, 2 * g_b), np.float32)
+        # a faulted batch appends the per-row corruption multipliers to the
+        # floats buffer (static layout — pipeline_key keeps faulted and
+        # clean cells in separate batches only via the guard config, so the
+        # widening applies to the whole batch)
+        nf_len = 2 * g_b + (r_b if self._faulty else 0)
+        floats_all = np.zeros((len(works), nflat, nf_len), np.float32)
         chunks = []
         offs = {}
+        gmaps = {}      # (k_idx, shard j) -> that shard's group cell list
         for k_idx, w in enumerate(works):
             per_shard = []
             for j in range(self.n_shards):
                 cells_j = [i for i in w.order if self._shard_of(i) == j]
                 groups = [i for i in cells_j
                           if w.scheds[i].fresh_rows or w.scheds[i].landing]
+                gmaps[(k_idx, j)] = groups
                 # p-replicated aggregation-group metadata
                 agg_cell = np.full(g_b, scratch, np.int32)
                 agg_fresh = np.zeros((g_b, n_b), np.int32)
@@ -832,9 +923,15 @@ class RoundPipeline:
                 fr_q = [np.zeros((g_b, nf_b), np.int32) for _ in range(n_p)]
                 sl_q = [np.zeros((g_b, ns_b), np.int32) for _ in range(n_p)]
                 mask_q = [np.zeros((g_b, n_b), np.int32) for _ in range(n_p)]
+                fscale_q = ([np.ones(r_b, np.float32) for _ in range(n_p)]
+                            if self._faulty else None)
                 nloc_q = [0] * n_p
                 for i in cells_j:
                     p, sc, sv = w.plans[i], w.scheds[i], w.surv[i]
+                    fp_i = sims[i].fault_plan
+                    fsc_i = (fp_i.scale_for(w.r, p.chosen)
+                             if self._faulty and fp_i is not None
+                             and fp_i.has_corruption else None)
                     cell_offs = offs.setdefault(
                         (k_idx, i), np.zeros(len(sv), np.int64))
                     for k_row, ri in enumerate(sv):
@@ -842,6 +939,8 @@ class RoundPipeline:
                         batch_q[q][loc] = p.bidx[ri]
                         rcell_q[q][loc] = slot_of(i)
                         rsub_q[q][loc] = self.sub_idx[i]
+                        if fsc_i is not None:
+                            fscale_q[q][loc] = fsc_i[ri]
                         cell_offs[k_row] = (j * n_p + q) * r_b + loc
                         nloc_q[q] = max(nloc_q[q], loc + 1)
                     for (ri, _l, _a, _d), slot in zip(sc.new_stale,
@@ -872,10 +971,12 @@ class RoundPipeline:
                          sl_q[q].ravel(), agg_tau.ravel(), rule_id,
                          agg_fresh.ravel(), agg_valid.ravel(),
                          mask_q[q].ravel(), has_g]))
-                    floats_all[k_idx, j * n_p + q] = floats_j
+                    floats_all[k_idx, j * n_p + q] = (
+                        np.concatenate([floats_j, fscale_q[q]])
+                        if self._faulty else floats_j)
             chunks.append(np.stack(per_shard))
         ints_all = np.stack(chunks)        # already int32 throughout
-        return ints_all, floats_all, shapes, offs
+        return ints_all, floats_all, shapes, offs, gmaps
 
     def _run_chunk(self, rounds) -> None:
         """Preschedule up to K rounds, dispatch them as one scan program,
@@ -889,7 +990,7 @@ class RoundPipeline:
         if not works:
             return
         sims = self.sims
-        ints, floats, shapes, offs = self._materialize(works)
+        ints, floats, shapes, offs, gmaps = self._materialize(works)
 
         if self.mesh is None:
             dev_ints, dev_floats = jax.device_put(
@@ -920,7 +1021,7 @@ class RoundPipeline:
         self.stats.h2d_bytes += ints.nbytes + floats.nbytes
         self.stats.dispatches["round"] += 1
         self.stats.rounds += len(works)
-        (params, cache_rows, self.opt_state, _losses, l2s) = \
+        (params, cache_rows, self.opt_state, _losses, l2s, gstats) = \
             self._prog(self.params, cache_rows, self.opt_state,
                        self.x_tr, self.y_tr, dev_ints, dev_floats, shapes)
         self.params = params
@@ -928,6 +1029,27 @@ class RoundPipeline:
             self.cache.rows = cache_rows
         else:
             self.cache_rows = cache_rows
+
+        # --- guard-stats attribution (guarded programs only) --------------
+        if self._guard is not None:
+            g_np = np.asarray(jax.device_get(gstats))
+            self.stats.d2h_bytes += g_np.nbytes
+            g_b = shapes[2]
+            for k_idx, w in enumerate(works):
+                # unsharded: (g_b, 4); sharded: (nflat * g_b, 4) with the
+                # flat shard f = j * n_p + q owning block [f*g_b, (f+1)*g_b)
+                # — gstats are p-replicated, so read each group's q=0 copy
+                flat = g_np[k_idx].reshape(-1, 4)
+                for j in range(self.n_shards):
+                    for g, i in enumerate(gmaps[(k_idx, j)]):
+                        nf, nnorm, _surv, applied = (
+                            int(x) for x in
+                            flat[(j * self.n_pshards) * g_b + g])
+                        sims[i].acct.note_guard(nf, nnorm, bool(applied))
+                        self.stats.guard["rejected_nonfinite"] += nf
+                        self.stats.guard["rejected_norm"] += nnorm
+                        if not applied:
+                            self.stats.guard["quorum_skips"] += 1
 
         # --- deferred Oort feedback (K forced to 1) -----------------------
         if self._fetch_l2s:
@@ -977,6 +1099,69 @@ class RoundPipeline:
                     self.done[i] = True
         if self.mesh is not None:
             self._maybe_repack()
+
+    # ------------------------------------------------------------------
+    # Crash-safe snapshots (chaos harness): the full batch state at a
+    # chunk boundary, as plain host objects — resumable bit-exactly
+    # ------------------------------------------------------------------
+    def snapshot(self, r_next: int) -> dict:
+        """Host snapshot of every sim's state with ``r_next`` the first
+        round a resume will run.  Taken only at chunk boundaries, so a
+        resumed pipeline re-enters the identical chunk sequence; stale
+        rows are gathered off the device cache and re-seated on resume
+        (slot ids never affect values, only placement)."""
+        sims = self.sims
+        if self.mesh is None:
+            params_np = np.asarray(jax.device_get(self.params))
+            cache_np = np.asarray(jax.device_get(self.cache.rows))
+            opt_np = (jax.tree.map(lambda a: np.asarray(jax.device_get(a)),
+                                   self.opt_state) if self.yogi else None)
+            row_of = lambda i: params_np[i]
+            opt_of = ((lambda i: jax.tree.map(lambda a: a[i], opt_np))
+                      if self.yogi else (lambda i: None))
+            slot_row = lambda slot: cache_np[slot]
+        else:
+            flat = np.asarray(jax.device_get(self.params)).reshape(-1, self.d)
+            cache_np = np.asarray(
+                jax.device_get(self.cache_rows)).reshape(-1, self.d)
+            rows_loc = self.accounts.capacity + 1
+            opt_np = (jax.tree.map(lambda a: np.asarray(jax.device_get(a)),
+                                   self.opt_state) if self.yogi else None)
+
+            def row_of(i):
+                if i in self._saved:
+                    return np.asarray(self._saved[i][0])
+                return flat[self.placement.flat_row(i)]
+
+            def opt_of(i):
+                if not self.yogi:
+                    return None
+                if i in self._saved:
+                    return jax.tree.map(np.asarray, self._saved[i][1])
+                fr = self.placement.flat_row(i)
+                return jax.tree.map(
+                    lambda a: a.reshape((-1,) + a.shape[2:])[fr], opt_np)
+
+            slot_row = lambda sl: cache_np[sl[0] * rows_loc + sl[1]]
+        payload_sims = []
+        for i, sim in enumerate(sims):
+            rows = [np.asarray(slot_row(f.delta)) for f in sim.stale_cache]
+            payload_sims.append({
+                "cfg": dataclasses.asdict(sim.cfg),
+                "state": sim.capture_state(stale_rows=rows),
+                "flat_params": np.asarray(row_of(i)),
+                "flat_opt_state": opt_of(i),
+                "fault_plan": sim.fault_plan,
+            })
+        return {"version": 1, "kind": "pipeline", "next_round": int(r_next),
+                "done": list(self.done), "sims": payload_sims}
+
+    def checkpoint(self, r_next: int) -> None:
+        from repro.checkpoint.state import save_snapshot
+        payload = self.snapshot(r_next)
+        if self.checkpoint_wrap is not None:
+            payload = self.checkpoint_wrap(payload)
+        save_snapshot(self.checkpoint_path, payload)
 
     # ------------------------------------------------------------------
     # Shard-aware repacking (early-stopped cells vacate whole shard

@@ -19,6 +19,7 @@ from repro.sweeps.grid import (AXES, POLICIES, Cell, SweepSpec,  # noqa: F401
                                axis_updates, register_axis)
 from repro.sweeps.results import CellResult, SweepResults  # noqa: F401
 from repro.sweeps.runner import (SweepRunner, assert_parity,  # noqa: F401
-                                 compat_key, run_batched, run_serial)
+                                 compat_key, resume_sweep, run_batched,
+                                 run_serial)
 from repro.sweeps.sharding import (Placement, local_capacity,  # noqa: F401
                                    sweep_mesh)

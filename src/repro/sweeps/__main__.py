@@ -15,7 +15,8 @@ import dataclasses
 import json
 import pathlib
 
-from repro.sweeps import SweepSpec, assert_parity, run_batched, run_serial
+from repro.sweeps import (SweepSpec, assert_parity, resume_sweep, run_batched,
+                          run_serial)
 from repro.sweeps.report import savings_line, text_table
 
 
@@ -47,7 +48,33 @@ def main(argv=None) -> None:
     ap.add_argument("--rounds-per-dispatch", type=int, default=1,
                     help="K rounds per device dispatch (lax.scan chunking)")
     ap.add_argument("--out", default=None, help="BENCH_sweeps.json path")
+    ap.add_argument("--checkpoint", default=None,
+                    help="write crash-safe sweep snapshots to this path")
+    ap.add_argument("--checkpoint-every", type=int, default=2,
+                    help="rounds between snapshots (with --checkpoint)")
+    ap.add_argument("--resume", default=None, metavar="CKPT",
+                    help="resume a crashed sweep from its snapshot and "
+                         "write the completed results (bit-identical to an "
+                         "uninterrupted run)")
+    ap.add_argument("--crash-after", type=int, default=None, metavar="R",
+                    help="chaos: inject a crash once round R completes")
+    ap.add_argument("--crash-hard", action="store_true",
+                    help="chaos: crash via SIGKILL instead of an exception")
     args = ap.parse_args(argv)
+
+    if args.resume:
+        results, wall = resume_sweep(args.resume)
+        print(f"# resumed from {args.resume} in {wall:.2f}s "
+              f"({len(results)} cells)")
+        print(text_table(results))
+        if args.out:
+            payload = {"bench": "sweeps", "mode": "resume",
+                       "resumed_from": args.resume, "cells": len(results),
+                       "results": results.to_json_dict()}
+            pathlib.Path(args.out).write_text(
+                json.dumps(payload, indent=2) + "\n")
+            print(f"\n# wrote {args.out}")
+        return
 
     spec = demo_spec(args.smoke)
     cells = spec.expand()
@@ -65,9 +92,20 @@ def main(argv=None) -> None:
           f"({' x '.join(f'{a}[{len(v)}]' for a, v in spec.axes.items())}"
           f" x seeds[{len(spec.seeds)}])")
 
+    fault_plan = None
+    if args.crash_after is not None:
+        from repro.faults import FaultPlan
+        fault_plan = FaultPlan(
+            n_learners=max(c.config.n_learners for c in cells),
+            rounds=max(c.config.rounds for c in cells),
+            crash_after=args.crash_after,
+            crash_mode="hard" if args.crash_hard else "soft")
     results, batched_wall = run_batched(
         cells, shard=args.sharded,
-        shard_participants=args.participant_shards)
+        shard_participants=args.participant_shards,
+        fault_plan=fault_plan,
+        checkpoint_path=args.checkpoint,
+        checkpoint_every=args.checkpoint_every if args.checkpoint else 0)
     # the serial reference stays at K=1: an independent ground truth for the
     # chunked run, not the same prescheduling machinery run twice
     serial_cells = ([dataclasses.replace(c, config=dataclasses.replace(

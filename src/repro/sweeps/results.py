@@ -106,6 +106,12 @@ class SweepResults:
             })
         return rows
 
+    def guard_totals(self) -> dict:
+        """Sweep-wide guarded-aggregation counters (chaos harness): total
+        rejected rows and quorum-skipped applies across every cell."""
+        keys = ("rejected_nonfinite", "rejected_norm", "quorum_skips")
+        return {k: int(sum(r.summary[k] for r in self.results)) for k in keys}
+
     def to_json_dict(self) -> dict:
         return {"cells": [{"name": r.cell.name,
                            "coords": dict(r.cell.coords),

@@ -142,6 +142,9 @@ class SweepRunner:
     shard: bool = False
     shard_participants: object = 0        # int p-shard count, or True = all devices
     mesh: Optional[object] = None         # jax.sharding.Mesh: ("s",) or ("s", "p")
+    fault_plan: Optional[object] = None   # repro.faults.FaultPlan for every cell
+    checkpoint_path: Optional[str] = None  # crash-safe sweep snapshots (fused)
+    checkpoint_every: int = 0              # rounds between snapshots (0 = off)
 
     def __post_init__(self):
         for c in self.cells:
@@ -186,20 +189,45 @@ class SweepRunner:
         for i, c in enumerate(self.cells):
             groups.setdefault(compat_key(c.config), []).append(i)
         results: list[Optional[CellResult]] = [None] * len(self.cells)
+        completed: dict = {}    # cell index -> finalized Accounting
         for idxs in groups.values():
             batch = [self.cells[i] for i in idxs]
-            accts = self._run_batch(batch)
+            accts = self._run_batch(batch, idxs=idxs, completed=completed)
             for i, acct in zip(idxs, accts):
+                completed[i] = acct
                 results[i] = CellResult(cell=self.cells[i],
                                         summary=acct.summary(), acct=acct)
         return SweepResults(results)
 
+    def _ckpt_wrap(self, idxs, completed):
+        """Envelope hook for the in-flight batch's pipeline snapshots: wrap
+        them into a resumable *sweep* snapshot carrying the grid and the
+        already-finished cells' accountings (``resume_sweep`` consumes it).
+        ``completed`` is read at snapshot time, so it holds exactly the
+        batches finished before this one."""
+        def wrap(pipeline_payload):
+            return {"version": 1, "kind": "sweep",
+                    "cells": list(self.cells),
+                    "completed": dict(completed),
+                    "group": list(idxs),
+                    "fault_plan": self.fault_plan,
+                    "checkpoint_every": self.checkpoint_every,
+                    "pipeline": pipeline_payload}
+        return wrap
+
     # ------------------------------------------------------------------
-    def _run_batch(self, batch: Sequence[Cell]):
+    def _run_batch(self, batch: Sequence[Cell], idxs=None, completed=None):
         cfgs = [c.config for c in batch]
-        sims = [Simulator(cfg, substrate=self.substrate(cfg)) for cfg in cfgs]
+        sims = [Simulator(cfg, substrate=self.substrate(cfg),
+                          fault_plan=self.fault_plan) for cfg in cfgs]
         if cfgs[0].fused_rounds:        # uniform within a compat batch
-            pipe = RoundPipeline(sims, progress=self.progress, mesh=self.mesh)
+            wrap = (self._ckpt_wrap(idxs, completed)
+                    if self.checkpoint_path and self.checkpoint_every
+                    and idxs is not None else None)
+            pipe = RoundPipeline(sims, progress=self.progress, mesh=self.mesh,
+                                 checkpoint_path=self.checkpoint_path,
+                                 checkpoint_every=self.checkpoint_every,
+                                 checkpoint_wrap=wrap)
             accts = pipe.run()
             stats = pipe.stats.as_dict()
             if self.last_stats is None:
@@ -288,8 +316,9 @@ class SweepRunner:
                 p = plans[i]
                 sl = slice(off, off + p.k)
                 off += p.k
+                d_i = sims[i]._corrupt_deltas(r, p, deltas[sl])
                 t_end, fresh_up, stale_up, stale_taus = \
-                    sims[i]._collect_updates(r, p, deltas[sl], losses[sl],
+                    sims[i]._collect_updates(r, p, d_i, losses[sl],
                                              l2s[sl])
                 tails[i] = (t_end, len(fresh_up), len(stale_up))
                 if fresh_up or stale_up:
@@ -301,6 +330,23 @@ class SweepRunner:
             # --- batched aggregation + server step --------------------
             if any(c is not None for c in cell_updates):
                 u, fresh, tau, valid, has = agg.sweep_bucket_pad(cell_updates, d)
+                if cfg0.guard:      # guard config is uniform (compat_key)
+                    # same in-program screening the fused pipeline folds
+                    # into its round body: survivors replace the valid
+                    # mask, quorum failures keep their exact parameter
+                    # bits via the has-gated apply below
+                    screen = agg._screen_fn(cfg0.guard_clip,
+                                            cfg0.guard_reject_mult)
+                    u, v2, n_nf, n_out, _ = screen(u, valid)
+                    valid = v2
+                    surv = np.asarray(jax.device_get(v2.sum(axis=-1)))
+                    n_nf = np.asarray(jax.device_get(n_nf))
+                    n_out = np.asarray(jax.device_get(n_out))
+                    applied = has & (surv >= max(int(cfg0.quorum), 1))
+                    for i in np.nonzero(has)[0]:
+                        sims[i].acct.note_guard(int(n_nf[i]), int(n_out[i]),
+                                                bool(applied[i]))
+                    has = applied
                 agg_out, _ = agg.sweep_aggregate_flat(
                     u, fresh, tau, valid, beta,
                     rule=[cfg.scaling_rule for cfg in cfgs],
@@ -353,12 +399,53 @@ def run_serial(cells: Sequence[Cell]):
 
 
 def run_batched(cells: Sequence[Cell], shard: bool = False, mesh=None,
-                shard_participants=0):
+                shard_participants=0, fault_plan=None,
+                checkpoint_path=None, checkpoint_every: int = 0):
     """Returns (SweepResults, wall seconds) — wall includes substrate builds."""
     t0 = time.time()
     results = SweepRunner(cells, shard=shard, mesh=mesh,
-                          shard_participants=shard_participants).run()
+                          shard_participants=shard_participants,
+                          fault_plan=fault_plan,
+                          checkpoint_path=checkpoint_path,
+                          checkpoint_every=checkpoint_every).run()
     return results, time.time() - t0
+
+
+def resume_sweep(path: str, progress: bool = False):
+    """Resume a sweep from a crash-safe snapshot (``SweepRunner`` with
+    ``checkpoint_path``): already-finished batches come back from their
+    stored accountings, the in-flight batch resumes its pipeline mid-run,
+    and batches that never started run fresh.  Per-cell results are
+    bit-identical to the uninterrupted sweep (tests/test_crash_resume.py).
+    Returns (SweepResults, wall seconds)."""
+    from repro.checkpoint.state import build_resumed_pipeline, load_snapshot
+
+    t0 = time.time()
+    payload = load_snapshot(path)
+    if payload["kind"] != "sweep":
+        raise ValueError(f"{path!r} is a {payload['kind']!r} snapshot, not a "
+                         "sweep snapshot (use repro.checkpoint.resume_run)")
+    cells = payload["cells"]
+    completed: dict = dict(payload["completed"])
+    pipe = build_resumed_pipeline(payload["pipeline"], progress=progress)
+    for i, acct in zip(payload["group"], pipe.run()):
+        completed[i] = acct
+    fp = payload.get("fault_plan")
+    runner = SweepRunner(cells, progress=progress,
+                         fault_plan=fp.without_crash() if fp is not None
+                         else None)
+    groups: "OrderedDict[tuple, list[int]]" = OrderedDict()
+    for i, c in enumerate(cells):
+        groups.setdefault(compat_key(c.config), []).append(i)
+    for idxs in groups.values():
+        if idxs[0] in completed:    # finished before the crash, or resumed
+            continue
+        accts = runner._run_batch([cells[i] for i in idxs])
+        for i, acct in zip(idxs, accts):
+            completed[i] = acct
+    results = [CellResult(cell=c, summary=completed[i].summary(),
+                          acct=completed[i]) for i, c in enumerate(cells)]
+    return SweepResults(results), time.time() - t0
 
 
 def summaries_equal(a: dict, b: dict) -> bool:

@@ -55,3 +55,25 @@ def test_forecaster_scores_against_trace():
     m = f.score(trace.available, eval_ts)
     assert m["mae"] < 0.5
     assert m["r2"] > 0.0
+
+
+def test_forecaster_score_constant_truth_reports_nan_r2():
+    """R^2 divides by the truth variance; an always-available learner has
+    var == 0, so the score must report NaN rather than a bogus ratio —
+    while MSE/MAE stay finite and meaningful."""
+    f = AvailabilityForecaster()
+    for t in np.arange(0, 2 * DAY, 900.0):
+        f.observe(float(t), True)
+    m = f.score(lambda t: True, np.arange(2 * DAY, 3 * DAY, 1800.0))
+    assert m["r2"] != m["r2"]                     # NaN
+    assert np.isfinite(m["mse"]) and np.isfinite(m["mae"])
+    assert m["mae"] < 0.5
+
+
+def test_forecaster_score_varying_truth_reports_finite_r2():
+    trace = LearnerTrace(seed=5, phase_hours=0.0, night_owl=0.9)
+    f = AvailabilityForecaster()
+    for t in np.arange(0, 7 * DAY, 900.0):
+        f.observe(float(t), trace.available(float(t)))
+    m = f.score(trace.available, np.arange(7 * DAY, 9 * DAY, 1800.0))
+    assert np.isfinite(m["r2"])

@@ -3,7 +3,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import load_pytree, save_pytree
+import pytest
+
+from repro.checkpoint import CheckpointError, load_pytree, save_pytree
 from repro.configs import get_reduced
 from repro.data import federated_token_shards, token_batches
 from repro.models import init_params
@@ -32,6 +34,36 @@ def test_checkpoint_roundtrip_mixed_dtypes(tmp_path):
     assert back["a"].dtype == jnp.bfloat16
     np.testing.assert_array_equal(np.asarray(back["nested"][0]["b"]),
                                   np.arange(4))
+
+
+def test_checkpoint_missing_and_extra_keys_raise(tmp_path):
+    path = str(tmp_path / "m.npz")
+    save_pytree(path, {"a": jnp.ones(2), "b": jnp.zeros(3)})
+    with pytest.raises(CheckpointError, match="missing keys \\['c'\\]"):
+        load_pytree(path, {"a": jnp.ones(2), "c": jnp.zeros(3)})
+    with pytest.raises(CheckpointError, match="unexpected keys \\['b'\\]"):
+        load_pytree(path, {"a": jnp.ones(2)})
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    path = str(tmp_path / "m.npz")
+    save_pytree(path, {"w": jnp.ones((2, 3))})
+    with pytest.raises(CheckpointError, match="shape"):
+        load_pytree(path, {"w": jnp.ones((3, 2))})
+
+
+def test_checkpoint_bf16_roundtrip_is_bit_exact(tmp_path):
+    """bf16 has no npz dtype: leaves travel as a uint16 view and must come
+    back bit-identical (including values that would change under an
+    fp32 round-trip's rounding)."""
+    rng = np.random.default_rng(0)
+    vals = jnp.asarray(rng.normal(size=(64,)) * 1e3, jnp.bfloat16)
+    path = str(tmp_path / "bf16.npz")
+    save_pytree(path, {"w": vals})
+    back = load_pytree(path, {"w": jnp.zeros((64,), jnp.bfloat16)})["w"]
+    assert back.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(vals).view(np.uint16),
+                                  np.asarray(back).view(np.uint16))
 
 
 def test_token_batches_shapes_and_determinism():

@@ -1,0 +1,164 @@
+"""Crash-safe bit-exact resume (chaos harness).
+
+Contract: run(2R) == run(R) -> crash -> resume(R), *bitwise*, on every
+substrate — fused pipeline (any ``rounds_per_dispatch``), flat per-stage
+path, legacy engine, and whole sweeps.  Snapshots are taken only at
+round/chunk boundaries and the fault plan rides along (crash disarmed on
+restore), so the resumed run re-enters the identical decision sequence.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (SnapshotError, load_snapshot, resume_run,
+                              save_snapshot)
+from repro.faults import FaultPlan, FaultSpec, InjectedCrash
+from repro.sim.engine import SimConfig, Simulator
+from repro.sweeps import SweepSpec, resume_sweep
+from repro.sweeps.runner import run_batched, summaries_equal
+
+BASE = dict(n_learners=30, rounds=8, eval_every=4, n_target=4,
+            saa=True, selector="priority")
+
+
+def _cfg(**kw):
+    return SimConfig(**{**BASE, **kw})
+
+
+def _crash_plan(after=3, specs=()):
+    return FaultPlan(n_learners=BASE["n_learners"], rounds=BASE["rounds"],
+                     specs=specs, seed=7, crash_after=after,
+                     crash_mode="soft")
+
+
+SUBSTRATES = {
+    "fused": {},
+    "chunked": {"rounds_per_dispatch": 4},
+    "yogi": {"aggregator": "yogi"},
+    "flat": {"fused_rounds": False},
+    "legacy": {"fast_path": False, "fused_rounds": False},
+}
+
+
+@pytest.mark.parametrize("sub", sorted(SUBSTRATES))
+def test_soft_crash_resume_is_bit_exact(sub, tmp_path):
+    extra = SUBSTRATES[sub]
+    ckpt = str(tmp_path / "run.pkl")
+    ref = Simulator(_cfg(**extra)).run().summary()
+
+    with pytest.raises(InjectedCrash):
+        Simulator(_cfg(**extra), fault_plan=_crash_plan()) \
+            .run(checkpoint_path=ckpt, checkpoint_every=2)
+    payload = load_snapshot(ckpt)
+    assert payload["next_round"] <= 4    # crashed mid-run, not at the end
+    acct = resume_run(ckpt)
+    assert summaries_equal(dict(acct.summary()), dict(ref)), \
+        (sub, acct.summary(), ref)
+
+
+def test_crash_resume_under_corruption_faults(tmp_path):
+    """The fault plan rides along in the snapshot: a guarded run with NaN
+    corruption resumes into the identical remaining faults (crash
+    disarmed), matching the uninterrupted faulted run bitwise."""
+    specs = (FaultSpec("nan", prob=0.2),)
+    ckpt = str(tmp_path / "run.pkl")
+    ref = Simulator(_cfg(guard=True), fault_plan=_crash_plan(None, specs)) \
+        .run().summary()
+    with pytest.raises(InjectedCrash):
+        Simulator(_cfg(guard=True), fault_plan=_crash_plan(3, specs)) \
+            .run(checkpoint_path=ckpt, checkpoint_every=2)
+    acct = resume_run(ckpt)
+    s = acct.summary()
+    assert summaries_equal(dict(s), dict(ref))
+    assert s["rejected_nonfinite"] == ref["rejected_nonfinite"] > 0
+
+
+def test_midrun_snapshot_of_clean_run_resumes_identically(tmp_path):
+    """Checkpointing is passive: a run that never crashes leaves its last
+    mid-run snapshot behind, and resuming *that* still reproduces the full
+    run bitwise (the resumed tail == the original tail)."""
+    ckpt = str(tmp_path / "run.pkl")
+    ref = Simulator(_cfg()).run(checkpoint_path=ckpt,
+                                checkpoint_every=2).summary()
+    payload = load_snapshot(ckpt)
+    assert 0 < payload["next_round"] < BASE["rounds"]
+    acct = resume_run(ckpt)
+    assert summaries_equal(dict(acct.summary()), dict(ref))
+
+
+def test_sweep_soft_crash_resume_is_bit_exact(tmp_path):
+    spec = SweepSpec(
+        axes={"policy": ["random", "relay"], "saa": [False, True]},
+        base=dict(n_learners=40, rounds=8, eval_every=4, n_target=4,
+                  mapping="label_uniform"),
+        seeds=(0,))
+    cells = spec.expand()
+    ref, _ = run_batched(cells)
+    ckpt = str(tmp_path / "sweep.pkl")
+    plan = FaultPlan(n_learners=40, rounds=8, crash_after=3,
+                     crash_mode="soft")
+    with pytest.raises(InjectedCrash):
+        run_batched(cells, fault_plan=plan, checkpoint_path=ckpt,
+                    checkpoint_every=2)
+    results, _ = resume_sweep(ckpt)
+    assert len(results) == len(ref)
+    for got, want in zip(results, ref):
+        assert got.cell.name == want.cell.name
+        assert summaries_equal(dict(got.summary), dict(want.summary)), \
+            got.cell.name
+
+
+def test_snapshot_error_paths(tmp_path):
+    with pytest.raises(SnapshotError):
+        load_snapshot(str(tmp_path / "missing.pkl"))
+    bad = str(tmp_path / "bad.pkl")
+    save_snapshot(bad, {"version": 999, "kind": "pipeline"})
+    with pytest.raises(SnapshotError, match="version"):
+        load_snapshot(bad)
+    with pytest.raises(SnapshotError, match="unknown snapshot kind"):
+        save_snapshot(bad, {"version": 1, "kind": "mystery"})
+        resume_run(bad)
+
+
+def test_save_snapshot_is_atomic(tmp_path):
+    """A crash mid-write must leave the previous snapshot readable: writes
+    go to a tmp file and ``os.replace`` in."""
+    p = str(tmp_path / "snap.pkl")
+    save_snapshot(p, {"version": 1, "kind": "engine", "tag": "old"})
+    save_snapshot(p, {"version": 1, "kind": "engine", "tag": "new"})
+    assert load_snapshot(p)["tag"] == "new"
+    assert not os.path.exists(p + ".tmp")
+
+
+@pytest.mark.skipif(os.environ.get("CHAOS_SUBPROCESS") != "1",
+                    reason="set CHAOS_SUBPROCESS=1 to run the SIGKILL leg "
+                           "(CI chaos job does; it shells out a full sweep)")
+def test_hard_crash_sigkill_and_cli_resume(tmp_path):
+    """The CI chaos leg in-process: ``--crash-after R --crash-hard``
+    SIGKILLs the sweep (exit 137), then ``--resume`` completes it with
+    results bit-identical to an uninterrupted smoke run."""
+    env = {**os.environ, "PYTHONPATH": "src"}
+    ckpt = str(tmp_path / "sweep.pkl")
+    clean_json = str(tmp_path / "clean.json")
+    resume_json = str(tmp_path / "resumed.json")
+    run = lambda *a: subprocess.run(
+        [sys.executable, "-m", "repro.sweeps", *a],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env, capture_output=True, text=True)
+
+    clean = run("--smoke", "--out", clean_json)
+    assert clean.returncode == 0, clean.stderr[-2000:]
+    crashed = run("--smoke", "--checkpoint", ckpt, "--crash-after", "3",
+                  "--crash-hard")
+    assert crashed.returncode in (137, -9), \
+        (crashed.returncode, crashed.stderr[-2000:])
+    resumed = run("--resume", ckpt, "--out", resume_json)
+    assert resumed.returncode == 0, resumed.stderr[-2000:]
+
+    import json
+    a = json.load(open(clean_json))["results"]
+    b = json.load(open(resume_json))["results"]
+    assert a == b

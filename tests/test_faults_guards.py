@@ -1,0 +1,259 @@
+"""Chaos harness: deterministic fault injection + guarded aggregation.
+
+The contracts under test (ISSUE PR-6):
+
+  * guards on + no faults  =>  bit-identical to an unguarded run, on every
+    substrate (fused / chunked / flat per-stage / legacy) — screening is a
+    bit-exact no-op when nothing is rejected;
+  * injected NaN/Inf/byzantine rows are rejected and *counted*, the guarded
+    run finishes with finite metrics, and the identical fault plan produces
+    the identical rejections on the legacy and fused substrates;
+  * an unguarded run under the same NaN faults demonstrably diverges;
+  * post-training drops and replay duplicates reproduce bit-identically
+    across the fused and per-stage substrates (host-shared schedule logic).
+"""
+import dataclasses
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation as agg
+from repro.faults import CORRUPTION_KINDS, FaultPlan, FaultSpec
+from repro.sim.engine import SimConfig, Simulator
+from repro.sweeps.runner import summaries_equal
+
+BASE = dict(n_learners=30, rounds=8, eval_every=4, n_target=4,
+            saa=True, selector="priority")
+
+
+def _cfg(**kw):
+    return SimConfig(**{**BASE, **kw})
+
+
+def _plan(specs=(), **kw):
+    return FaultPlan(n_learners=BASE["n_learners"], rounds=BASE["rounds"],
+                     specs=specs, **kw)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan determinism
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_is_deterministic():
+    mk = lambda: _plan((FaultSpec("nan", prob=0.3),
+                        FaultSpec("post_drop", prob=0.2)), seed=11)
+    a, b = mk(), mk()
+    np.testing.assert_array_equal(a.corrupt, b.corrupt)
+    assert a.counts() == b.counts()
+    assert a.has_corruption
+
+
+def test_fault_plan_scoping_and_kinds():
+    for kind in CORRUPTION_KINDS:
+        p = _plan((FaultSpec(kind, prob=1.0, rounds=(2, 3), learners=(5,)),))
+        hit = p.scale_for(2, [5])[0]
+        assert hit != 1.0 or hit != hit          # NaN compares unequal
+        assert p.scale_for(1, [5])[0] == 1.0     # outside the round window
+        assert p.scale_for(2, [6])[0] == 1.0     # other learners untouched
+    with pytest.raises(ValueError):
+        FaultSpec("bogus")
+
+
+def test_without_crash_preserves_corruption():
+    p = _plan((FaultSpec("inf", prob=0.5),), crash_after=3)
+    q = p.without_crash()
+    assert q.crash_after is None and p.crash_after == 3
+    np.testing.assert_array_equal(p.corrupt, q.corrupt)
+
+
+# ---------------------------------------------------------------------------
+# screen_rows unit behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_screen_rows_rejects_and_counts():
+    u = np.ones((4, 8), np.float32)
+    u[1, 3] = np.nan
+    u[2] *= 100.0                    # byzantine-scale outlier
+    valid = np.array([True, True, True, False])
+    u2, v2, n_nf, n_out, n_clip = agg.screen_rows(
+        jnp.asarray(u), jnp.asarray(valid), reject_mult=5.0)
+    assert int(n_nf) == 1 and int(n_out) == 1 and int(n_clip) == 0
+    assert list(np.asarray(v2)) == [True, False, False, False]
+    assert np.all(np.isfinite(np.asarray(u2)))   # poison rows zeroed
+    np.testing.assert_array_equal(np.asarray(u2)[1], 0.0)
+
+
+def test_screen_rows_clip_rescales_survivors():
+    u = np.ones((2, 4), np.float32) * 3.0        # norm 6
+    valid = np.array([True, True])
+    u2, v2, _, _, n_clip = agg.screen_rows(jnp.asarray(u),
+                                           jnp.asarray(valid), clip=1.0)
+    assert int(n_clip) == 2
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(u2), axis=1), 1.0, rtol=1e-6)
+
+
+def test_screen_rows_clean_is_bit_exact():
+    rng = np.random.default_rng(0)
+    u = rng.normal(size=(5, 16)).astype(np.float32)
+    valid = np.array([True] * 4 + [False])
+    u[4] = 0.0
+    u2, v2, n_nf, n_out, _ = agg.screen_rows(jnp.asarray(u),
+                                             jnp.asarray(valid))
+    assert int(n_nf) == 0 and int(n_out) == 0
+    np.testing.assert_array_equal(np.asarray(u2), u)
+    np.testing.assert_array_equal(np.asarray(v2), valid)
+
+
+# ---------------------------------------------------------------------------
+# guards on + no faults == unguarded, bitwise, on every substrate
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sub", ["fused", "chunked", "flat", "legacy",
+                                 "kernel", "yogi"])
+def test_guard_without_faults_is_bit_identical(sub):
+    extra = {"fused": {},
+             "chunked": {"rounds_per_dispatch": 4},
+             "flat": {"fused_rounds": False},
+             "legacy": {"fast_path": False, "fused_rounds": False},
+             "kernel": {"use_agg_kernel": True},
+             "yogi": {"aggregator": "yogi"}}[sub]
+    ref = Simulator(_cfg(**extra)).run().summary()
+    grd = Simulator(_cfg(guard=True, quorum=1, **extra)).run().summary()
+    for k in ref:
+        assert grd[k] == ref[k] or (grd[k] != grd[k] and ref[k] != ref[k]), \
+            (sub, k, ref[k], grd[k])
+    assert grd["rejected_nonfinite"] == 0 and grd["quorum_skips"] == 0
+
+
+# ---------------------------------------------------------------------------
+# NaN/Inf-emitting learners: rejected, counted, cross-substrate identical
+# ---------------------------------------------------------------------------
+
+
+NAN_PLAN = (FaultSpec("nan", prob=0.2), FaultSpec("scale", prob=0.1,
+                                                  scale=1e4))
+
+
+def test_nan_learners_rejected_and_run_stays_finite():
+    s = Simulator(_cfg(guard=True), fault_plan=_plan(NAN_PLAN, seed=7)) \
+        .run().summary()
+    assert s["rejected_nonfinite"] > 0
+    assert math.isfinite(s["final_accuracy"])
+
+
+def test_nan_faults_legacy_and_fused_converge_identically():
+    """Property from the ISSUE: the legacy and fused pipelines under the
+    identical fault plan reject the identical rows (schedule logic is
+    shared host code) and land within the substrates' accuracy parity."""
+    fused = Simulator(_cfg(guard=True),
+                      fault_plan=_plan(NAN_PLAN, seed=7)).run().summary()
+    flat = Simulator(_cfg(guard=True, fused_rounds=False),
+                     fault_plan=_plan(NAN_PLAN, seed=7)).run().summary()
+    legacy = Simulator(_cfg(guard=True, fast_path=False, fused_rounds=False),
+                       fault_plan=_plan(NAN_PLAN, seed=7)).run().summary()
+    assert summaries_equal(dict(fused), dict(flat))      # bitwise
+    for k in ("rounds", "rejected_nonfinite", "rejected_norm",
+              "quorum_skips", "unique_participants"):
+        assert legacy[k] == fused[k], k
+    assert abs(legacy["final_accuracy"] - fused["final_accuracy"]) < 1e-3
+
+
+def test_unguarded_run_diverges_under_nan_faults():
+    grd = Simulator(_cfg(guard=True),
+                    fault_plan=_plan(NAN_PLAN, seed=7)).run().summary()
+    raw = Simulator(_cfg(),
+                    fault_plan=_plan(NAN_PLAN, seed=7)).run().summary()
+    assert grd["rejected_nonfinite"] > 0
+    assert not math.isfinite(raw["final_accuracy"]) or \
+        raw["final_accuracy"] != grd["final_accuracy"]
+
+
+def test_byzantine_scale_rows_rejected_by_norm_rule():
+    plan = _plan((FaultSpec("scale", prob=0.25, scale=1e4),), seed=1)
+    s = Simulator(_cfg(guard=True, guard_reject_mult=5.0),
+                  fault_plan=plan).run().summary()
+    assert s["rejected_norm"] > 0
+    assert math.isfinite(s["final_accuracy"])
+
+
+def test_quorum_skips_round_and_carries_params():
+    """Every row poisoned => zero survivors => the apply is skipped and
+    counted; the run still completes finite (params simply never move on
+    poisoned rounds)."""
+    plan = _plan((FaultSpec("nan", prob=1.0, rounds=(0, 3)),), seed=0)
+    s = Simulator(_cfg(guard=True, quorum=1), fault_plan=plan).run().summary()
+    assert s["quorum_skips"] >= 1
+    assert math.isfinite(s["final_accuracy"])
+
+
+# ---------------------------------------------------------------------------
+# post-training drops + replay duplicates: substrate parity + accounting
+# ---------------------------------------------------------------------------
+
+
+def test_post_drop_wastes_work_identically_across_substrates():
+    plan = lambda: _plan((FaultSpec("post_drop", prob=0.3),), seed=5)
+    fused = Simulator(_cfg(), fault_plan=plan()).run().summary()
+    flat = Simulator(_cfg(fused_rounds=False),
+                     fault_plan=plan()).run().summary()
+    clean = Simulator(_cfg()).run().summary()
+    assert summaries_equal(dict(fused), dict(flat))
+    assert fused["resource_wasted"] > clean["resource_wasted"]
+
+
+def test_replay_duplicates_land_identically_across_substrates():
+    plan = lambda: _plan((FaultSpec("replay", prob=0.5),), seed=9)
+    fused = Simulator(_cfg(), fault_plan=plan()).run().summary()
+    flat = Simulator(_cfg(fused_rounds=False),
+                     fault_plan=plan()).run().summary()
+    assert summaries_equal(dict(fused), dict(flat))
+
+
+def test_chunked_guarded_faulted_matches_single_dispatch():
+    mk = lambda: _plan((FaultSpec("inf", prob=0.15),
+                        FaultSpec("replay", prob=0.3)), seed=3)
+    k1 = Simulator(_cfg(guard=True, guard_reject_mult=5.0),
+                   fault_plan=mk()).run().summary()
+    k4 = Simulator(_cfg(guard=True, guard_reject_mult=5.0,
+                        rounds_per_dispatch=4),
+                   fault_plan=mk()).run().summary()
+    assert summaries_equal(dict(k1), dict(k4))
+
+
+# ---------------------------------------------------------------------------
+# transfer-guard + program-structure invariants survive the guard
+# ---------------------------------------------------------------------------
+
+
+def test_guarded_faulted_pipeline_clean_under_transfer_guard():
+    from repro.sim.pipeline import RoundPipeline
+    sim = Simulator(_cfg(guard=True, guard_reject_mult=5.0),
+                    fault_plan=_plan(NAN_PLAN, seed=7))
+    accts = RoundPipeline([sim]).run(transfer_guard=True)
+    s = accts[0].summary()
+    assert s["rounds"] > 0 and math.isfinite(s["final_accuracy"])
+
+
+def test_guarded_round_program_has_no_collectives_unsharded():
+    import re
+    from repro.sim.pipeline import RoundPipeline
+    pipe = RoundPipeline([Simulator(_cfg(guard=True))])
+    orig, captured = pipe._prog, []
+
+    def wrapper(*args):
+        if not captured:
+            captured.append(orig.lower(*args).compile().as_text())
+        return orig(*args)
+
+    pipe._prog = wrapper
+    pipe.run()
+    txt = captured[0]
+    for op in ("all-reduce", "all-gather", "all-to-all",
+               "collective-permute", "reduce-scatter"):
+        assert not re.search(rf"{op}(?:-start)?\(", txt), op
