@@ -173,6 +173,65 @@ def bench_participant(sizes=((1000, 64), (10000, 256)), rounds: int = 6,
     return out
 
 
+def bench_telemetry(n_learners: int = 1000, rounds: int = 6,
+                    trials: int = 2) -> dict:
+    """Overhead of full telemetry (level 2: device lane + spans + JSONL round
+    log) over a telemetry-off run of the same config, sharing one substrate.
+    Asserts the summaries are bit-identical (the lane may not perturb the
+    round math), then reports the rounds/sec regression fraction — the
+    acceptance bar is < 5% at n=1000."""
+    import tempfile
+
+    from repro.telemetry import TelemetrySession
+
+    cfg = SimConfig(n_learners=n_learners, rounds=rounds,
+                    eval_every=rounds // 2, seed=0, saa=True, setting="OC",
+                    selector="priority", mapping="label_uniform")
+    sub = Substrate.build(cfg)
+
+    def run(c, telemetry=None):
+        Simulator(c, substrate=sub).run(telemetry=telemetry)   # warm compiles
+        best = None
+        for _ in range(trials):
+            t0 = time.time()
+            summary = Simulator(c, substrate=sub).run(
+                telemetry=telemetry).summary()
+            wall = time.time() - t0
+            if best is None or wall < best["wall_s"]:
+                best = {
+                    "wall_s": round(wall, 3),
+                    "rounds_per_sec": round(
+                        summary["rounds"] / max(wall, 1e-9), 2),
+                    "summary": {k: (round(v, 6) if isinstance(v, float)
+                                    else v) for k, v in summary.items()},
+                }
+        return best
+
+    res_off = run(cfg)
+    with tempfile.TemporaryDirectory() as tmp:
+        session = TelemetrySession(tmp)
+        try:
+            res_on = run(dataclasses.replace(cfg, telemetry=2),
+                         telemetry=session)
+        finally:
+            session.close()
+    assert res_off["summary"] == res_on["summary"], \
+        "telemetry level 2 perturbed the run summary"
+    rps_off, rps_on = res_off["rounds_per_sec"], res_on["rounds_per_sec"]
+    row = {
+        "n_learners": n_learners,
+        "rounds": rounds,
+        "off": res_off,
+        "full": res_on,
+        "overhead_frac": round(max(0.0, 1.0 - rps_on / max(rps_off, 1e-9)), 4),
+        "parity": True,
+    }
+    print(f"telemetry/n={n_learners},{1e6 / max(rps_on, 1e-9):.0f},"
+          f"full={rps_on};off={rps_off};"
+          f"overhead={100 * row['overhead_frac']:.1f}%")
+    return row
+
+
 def profile_pipeline(n_learners: int, rounds: int) -> dict:
     """Per-stage dispatch counts and host-transfer bytes of the fused round
     loop, run under ``jax.transfer_guard("disallow")`` — an implicit host
@@ -230,6 +289,7 @@ def main() -> None:
         "engine": bench_engine(sizes, rounds, trials=2 if smoke else 3),
         # identical configs in smoke and full (the guard matches rows)
         "participant": bench_participant(trials=2),
+        "telemetry": [bench_telemetry(trials=2)],
         "server_agg": bench_server_agg(iters=5 if smoke else 30),
     }
     if profile:

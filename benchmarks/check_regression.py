@@ -48,6 +48,9 @@ COMPARISONS = [
      ("n_learners", "n_target", "rounds", "n_devices"),
      lambda r: r["unsharded"]["rounds_per_sec"], True,
      "participant-unsharded rounds/sec"),
+    ("BENCH_engine.json", "telemetry", ("n_learners", "rounds"),
+     lambda r: r["full"]["rounds_per_sec"], True,
+     "telemetry-full rounds/sec"),
     ("BENCH_sweeps.json", "sweep", ("s_cells", "n_learners", "rounds"),
      lambda r: r["batched_wall_s"], False, "batched wall s"),
     ("BENCH_sweeps.json", "early_stop",
@@ -107,6 +110,46 @@ def _summary_markdown(rows: list, parity_fails: list, tolerance: float) -> str:
     return "\n".join(out) + "\n"
 
 
+PROFILE_KEYS = ("dispatches_per_round", "h2d_bytes_per_round",
+                "d2h_bytes_per_round")
+
+
+def _transfer_profile(baseline_dir, current_dir, failures) -> str:
+    """Markdown "Transfer profile" section: the fused pipeline's
+    dispatches-per-round and host-transfer bytes-per-round vs the baseline.
+    These are deterministic counts, not timings — a dispatch-count increase
+    is a real architecture regression and fails outright; runs whose
+    BENCH_engine.json lacks a profile (benches without ``--profile``) skip
+    silently."""
+    def load(d):
+        p = d / "BENCH_engine.json"
+        if not p.exists():
+            return None
+        return json.loads(p.read_text()).get("pipeline_profile")
+
+    cur = load(current_dir)
+    if cur is None:
+        return ""
+    base = load(baseline_dir)
+    out = ["### Transfer profile (fused pipeline)", "",
+           "| metric | baseline | current |", "|---|---|---|"]
+    for k in PROFILE_KEYS:
+        b = "—" if base is None or k not in base else base[k]
+        out.append(f"| {k} | {b} | {cur.get(k, '—')} |")
+    if base is not None and all(k in base and k in cur for k in PROFILE_KEYS):
+        if cur["dispatches_per_round"] > base["dispatches_per_round"]:
+            failures.append(
+                "pipeline_profile: dispatches_per_round rose from "
+                f"{base['dispatches_per_round']} to "
+                f"{cur['dispatches_per_round']}")
+            out.append("")
+            out.append(":x: dispatches-per-round regression")
+    guard = cur.get("transfer_guard")
+    if guard:
+        out += ["", f"Round loop ran under `jax.transfer_guard(\"{guard}\")`."]
+    return "\n".join(out) + "\n\n"
+
+
 def check(baseline_dir: pathlib.Path, current_dir: pathlib.Path,
           tolerance: float, summary_path=None) -> int:
     failures, skipped, compared = [], [], []
@@ -155,6 +198,7 @@ def check(baseline_dir: pathlib.Path, current_dir: pathlib.Path,
             (compared if ok else failures).append(
                 f"{tag}: {detail}" + ("" if ok else
                                       f" (beyond {tolerance}x tolerance)"))
+    profile_md = _transfer_profile(baseline_dir, current_dir, failures)
     failures = parity_fails + failures
 
     for line in compared:
@@ -170,6 +214,8 @@ def check(baseline_dir: pathlib.Path, current_dir: pathlib.Path,
         md = _summary_markdown(rows_md, parity_fails, tolerance)
         with open(summary_path, "a") as f:
             f.write(md)
+            if profile_md:
+                f.write("\n" + profile_md)
     return 1 if failures else 0
 
 

@@ -236,3 +236,136 @@ ALL_FIGURES = [fig02_safa_waste, fig03_heterogeneity, fig04_availability,
                fig09_stale_agg, fig10_scaling_rules, fig11_scale,
                fig12_hardware, thm1_convergence, forecaster_accuracy,
                ablation_beta, ablation_staleness_threshold, baseline_fedprox]
+
+
+# ---------------------------------------------------------------------------
+# Telemetry round-log rendering (repro.telemetry rounds.jsonl -> PNG curves)
+# ---------------------------------------------------------------------------
+
+
+def load_round_log(path) -> dict:
+    """Parse a telemetry ``rounds.jsonl`` into {cell: list of event dicts}
+    (pinned schema: repro.telemetry.schema.ROUND_EVENT_KEYS, null -> NaN)."""
+    import json
+    by_cell: dict = {}
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            ev = json.loads(line)
+            by_cell.setdefault(ev["cell"], []).append(ev)
+    for evs in by_cell.values():
+        evs.sort(key=lambda e: e["round"])
+    return by_cell
+
+
+def _series(events, key):
+    """Per-round numpy column; JSON null (serialized NaN) comes back NaN."""
+    return np.array([float("nan") if e[key] is None else float(e[key])
+                     for e in events])
+
+
+def render_telemetry(telemetry_dir, out_dir) -> list:
+    """Render the exported run timeline into paper-style curves:
+
+      * ``resource_to_accuracy.png`` — cumulative resource seconds vs eval
+        accuracy per cell (the paper's headline efficiency view);
+      * ``waste_staleness.png`` — waste fraction and stale landings per round;
+      * ``l2_band.png`` — per-round update-norm min/mean/max band plus
+        guard-rejected rows (chaos-visible health view).
+
+    Headless (Agg); returns the list of written paths."""
+    import pathlib
+
+    import matplotlib
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    tdir, odir = pathlib.Path(telemetry_dir), pathlib.Path(out_dir)
+    odir.mkdir(parents=True, exist_ok=True)
+    by_cell = load_round_log(tdir / "rounds.jsonl")
+    if not by_cell:
+        return []
+    written = []
+
+    fig, ax = plt.subplots(figsize=(6, 4))
+    for cell, evs in sorted(by_cell.items()):
+        res = _series(evs, "resource_used")
+        acc = _series(evs, "accuracy")
+        m = ~np.isnan(acc)
+        if m.any():
+            ax.plot(res[m], 100 * acc[m], marker="o", ms=3, label=cell)
+    ax.set_xlabel("resource used (participant seconds)")
+    ax.set_ylabel("eval accuracy (%)")
+    ax.set_title("resource-to-accuracy")
+    ax.legend(fontsize=6)
+    fig.tight_layout()
+    p = odir / "resource_to_accuracy.png"
+    fig.savefig(p, dpi=120)
+    plt.close(fig)
+    written.append(p)
+
+    fig, (ax1, ax2) = plt.subplots(2, 1, figsize=(6, 5), sharex=True)
+    for cell, evs in sorted(by_cell.items()):
+        rnd = _series(evs, "round")
+        used = _series(evs, "resource_used")
+        waste = _series(evs, "resource_wasted")
+        frac = np.where(used > 0, waste / np.maximum(used, 1e-9), 0.0)
+        ax1.plot(rnd, 100 * frac, label=cell)
+        ax2.plot(rnd, _series(evs, "stale_landed"), label=cell)
+    ax1.set_ylabel("waste fraction (%)")
+    ax2.set_ylabel("stale landings")
+    ax2.set_xlabel("round")
+    ax1.set_title("resource wastage and staleness over rounds")
+    ax1.legend(fontsize=6)
+    fig.tight_layout()
+    p = odir / "waste_staleness.png"
+    fig.savefig(p, dpi=120)
+    plt.close(fig)
+    written.append(p)
+
+    fig, ax = plt.subplots(figsize=(6, 4))
+    for cell, evs in sorted(by_cell.items()):
+        rnd = _series(evs, "round")
+        lo, mid, hi = (_series(evs, k) for k in ("l2_min", "l2_mean", "l2_max"))
+        (line,) = ax.plot(rnd, mid, label=cell)
+        ax.fill_between(rnd, lo, hi, alpha=0.15, color=line.get_color())
+        rej = (_series(evs, "rejected_nonfinite")
+               + _series(evs, "rejected_norm"))
+        bad = rej > 0
+        if bad.any():
+            ax.scatter(rnd[bad], mid[bad], marker="x", s=30,
+                       color=line.get_color())
+    ax.set_xlabel("round")
+    ax.set_ylabel("update L2 norm (min/mean/max band; x = guard rejections)")
+    ax.set_title("update-norm health")
+    ax.legend(fontsize=6)
+    fig.tight_layout()
+    p = odir / "l2_band.png"
+    fig.savefig(p, dpi=120)
+    plt.close(fig)
+    written.append(p)
+    return written
+
+
+def main(argv=None) -> None:
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="Render telemetry round logs into figures "
+                    "(python -m benchmarks.figures --telemetry-dir DIR)")
+    ap.add_argument("--telemetry-dir", required=True,
+                    help="directory holding a run's rounds.jsonl")
+    ap.add_argument("--out-dir", default=None,
+                    help="where to write PNGs (default: <telemetry-dir>/figures)")
+    args = ap.parse_args(argv)
+    out = args.out_dir or f"{args.telemetry_dir}/figures"
+    written = render_telemetry(args.telemetry_dir, out)
+    if not written:
+        raise SystemExit(f"no round events in {args.telemetry_dir}/rounds.jsonl")
+    for p in written:
+        print(f"wrote {p}")
+
+
+if __name__ == "__main__":
+    main()

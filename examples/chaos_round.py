@@ -9,18 +9,28 @@ Runs the same config three times on the fused round pipeline:
      rows are rejected in-program, quorum skips protect empty rounds, and
      the run lands close to the clean baseline.
 
+A fourth phase crashes the guarded run mid-flight (soft crash at a
+checkpoint boundary, full telemetry on) and resumes it from the snapshot:
+the resumed run must land bit-identical to the uninterrupted one AND its
+exported ``rounds.jsonl`` round log must byte-continue the crashed run's.
+
 Prints the scheduled-fault table, the per-run rejection/quorum counters,
 and exits non-zero if the guarded run diverges from the clean baseline
-beyond tolerance (the CI chaos leg runs ``--smoke``).
+beyond tolerance or the crash/resume round logs disagree (the CI chaos
+leg runs ``--smoke``).
 
   PYTHONPATH=src python examples/chaos_round.py [--smoke]
 """
 import argparse
 import math
+import os
 import sys
+import tempfile
 
-from repro.faults import FaultPlan, FaultSpec
+from repro.checkpoint import resume_run
+from repro.faults import FaultPlan, FaultSpec, InjectedCrash
 from repro.sim import SimConfig, Simulator
+from repro.telemetry import TelemetrySession
 
 
 def build(smoke: bool):
@@ -92,8 +102,62 @@ def main(argv=None) -> int:
         print("FAIL: fault plan scheduled corruption but nothing was "
               "rejected", file=sys.stderr)
         return 1
+
+    print("\n=== 4/4 crash mid-run, resume, compare round logs ===")
+    if not crash_resume_round_log(common, plan):
+        return 1
     print("OK")
     return 0
+
+
+def crash_resume_round_log(common, plan) -> bool:
+    """Guarded run at full telemetry, crashed after round 3 and resumed:
+    the resumed run's summary must match the uninterrupted run's bitwise,
+    and the two ``rounds.jsonl`` exports must be byte-equal — the session
+    truncates the crashed log back to the snapshot offset and the resumed
+    tail re-emits the same bytes."""
+    cfg = SimConfig(guard=True, guard_reject_mult=5.0, quorum=1, telemetry=2,
+                    **common)
+    crash = FaultPlan(n_learners=common["n_learners"],
+                      rounds=common["rounds"], specs=plan.specs,
+                      seed=plan.seed, crash_after=3, crash_mode="soft")
+    with tempfile.TemporaryDirectory() as tmp:
+        dir_a, dir_b = os.path.join(tmp, "clean"), os.path.join(tmp, "crashed")
+        ckpt = os.path.join(tmp, "run.pkl")
+
+        sess = TelemetrySession(dir_a)
+        ref = Simulator(cfg, fault_plan=plan.without_crash()) \
+            .run(telemetry=sess).summary()
+        sess.close()
+
+        sess = TelemetrySession(dir_b)
+        try:
+            Simulator(cfg, fault_plan=crash).run(
+                checkpoint_path=ckpt, checkpoint_every=2, telemetry=sess)
+            print("FAIL: scheduled crash never fired", file=sys.stderr)
+            return False
+        except InjectedCrash:
+            pass
+        finally:
+            sess.close()
+
+        sess = TelemetrySession(dir_b)      # reopen the crashed run's dir
+        got = resume_run(ckpt, telemetry=sess).summary()
+        sess.close()
+
+        if got != ref:
+            print("FAIL: resumed run diverged from the uninterrupted one",
+                  file=sys.stderr)
+            return False
+        a = open(os.path.join(dir_a, "rounds.jsonl"), "rb").read()
+        b = open(os.path.join(dir_b, "rounds.jsonl"), "rb").read()
+        if a != b or not a:
+            print("FAIL: resumed round log does not byte-continue the "
+                  "crashed run's", file=sys.stderr)
+            return False
+        print(f"resumed run bit-identical; round logs byte-equal "
+              f"({len(a.splitlines())} events, {len(a)} bytes)")
+    return True
 
 
 if __name__ == "__main__":

@@ -135,12 +135,15 @@ def _restore_sim(ps: dict, substrate_cache: Optional[dict] = None):
 
 def build_resumed_pipeline(payload: dict, progress: bool = False,
                            checkpoint_path: Optional[str] = None,
-                           checkpoint_every: int = 0, checkpoint_wrap=None):
+                           checkpoint_every: int = 0, checkpoint_wrap=None,
+                           telemetry=None):
     """Reconstruct a RoundPipeline mid-run from a ``kind == "pipeline"``
     snapshot.  Resume always runs unsharded (bit-identical per cell to any
     mesh, so snapshots from sharded runs restore fine); stale rows are
     re-seated into a fresh device cache in their saved order — slot ids
-    never affect values."""
+    never affect values.  A ``telemetry`` session logging into the crashed
+    run's directory is truncated back to the snapshot's round-log offset,
+    so the resumed log byte-continues the uninterrupted run's."""
     from repro.sim.pipeline import RoundPipeline
 
     sub_cache: dict = {}
@@ -150,11 +153,15 @@ def build_resumed_pipeline(payload: dict, progress: bool = False,
             # participant-sharded resume would need the (s, p) slot layout
             # restored; clear the flag — results are bit-identical anyway
             sim.cfg = dataclasses.replace(sim.cfg, shard_participants=0)
+    if telemetry is not None:
+        telemetry.restore(payload.get("telemetry"))
     pipe = RoundPipeline(sims, progress=progress,
                          checkpoint_path=checkpoint_path,
                          checkpoint_every=checkpoint_every,
                          checkpoint_wrap=checkpoint_wrap,
-                         start_round=int(payload["next_round"]))
+                         start_round=int(payload["next_round"]),
+                         telemetry=telemetry,
+                         labels=payload.get("labels"))
     pipe.done = list(payload["done"])
     for sim in sims:
         if not sim.stale_cache:
@@ -169,7 +176,7 @@ def build_resumed_pipeline(payload: dict, progress: bool = False,
 
 def resume_run(path: str, progress: bool = False, *,
                checkpoint_path: Optional[str] = None,
-               checkpoint_every: int = 0):
+               checkpoint_every: int = 0, telemetry=None):
     """Resume a single-simulation run from its snapshot.  Returns the
     finalized Accounting — the same object an uninterrupted
     ``Simulator.run`` yields, bit-identical to it."""
@@ -177,11 +184,13 @@ def resume_run(path: str, progress: bool = False, *,
     if payload["kind"] == "engine":
         sim = _restore_sim(payload["sim"])
         return sim._run_loop(int(payload["next_round"]), progress,
-                             checkpoint_path, checkpoint_every)
+                             checkpoint_path, checkpoint_every,
+                             telemetry=telemetry)
     if payload["kind"] == "pipeline":
         pipe = build_resumed_pipeline(payload, progress=progress,
                                       checkpoint_path=checkpoint_path,
-                                      checkpoint_every=checkpoint_every)
+                                      checkpoint_every=checkpoint_every,
+                                      telemetry=telemetry)
         return pipe.run()[0] if len(pipe.sims) == 1 else pipe.run()
     raise SnapshotError(f"{path!r}: unknown snapshot kind "
                         f"{payload['kind']!r}")

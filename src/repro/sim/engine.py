@@ -189,6 +189,12 @@ class SimConfig:
     quorum: int = 1                   # min surviving rows for a server apply;
                                       # below it the round's apply is skipped
                                       # (params carried unchanged)
+    telemetry: int = 0                # 0 = off (program bit-identical to a
+                                      # telemetry-free build), 1 = host-side
+                                      # spans + metrics registry, 2 = also
+                                      # the in-program round-stats lane +
+                                      # per-round JSONL events.  Static in
+                                      # pipeline_key (program structure)
 
 
 def substrate_key(cfg: SimConfig) -> tuple:
@@ -829,7 +835,8 @@ class Simulator:
 
     # ------------------------------------------------------------------
     def run(self, progress: bool = False, *,
-            checkpoint_path: Optional[str] = None, checkpoint_every: int = 0):
+            checkpoint_path: Optional[str] = None, checkpoint_every: int = 0,
+            telemetry=None):
         if self.cfg.shard_participants and not (self.cfg.fast_path
                                                 and self.cfg.fused_rounds):
             raise ValueError(
@@ -840,39 +847,52 @@ class Simulator:
             from repro.sim.pipeline import RoundPipeline
             return RoundPipeline([self], progress=progress,
                                  checkpoint_path=checkpoint_path,
-                                 checkpoint_every=checkpoint_every).run()[0]
+                                 checkpoint_every=checkpoint_every,
+                                 telemetry=telemetry).run()[0]
         self._t_now = 0.0
-        return self._run_loop(0, progress, checkpoint_path, checkpoint_every)
+        return self._run_loop(0, progress, checkpoint_path, checkpoint_every,
+                              telemetry=telemetry)
 
     def _run_loop(self, start_round: int, progress: bool,
-                  checkpoint_path: Optional[str], checkpoint_every: int):
+                  checkpoint_path: Optional[str], checkpoint_every: int,
+                  telemetry=None):
         """The per-stage/legacy round loop from ``start_round`` — resume
         entry point: a restored Simulator continues here without resetting
         the clock."""
         cfg = self.cfg
         fp = self.fault_plan
+        if telemetry is None:
+            from repro.telemetry import TelemetrySession
+            telemetry = TelemetrySession()
         for r in range(start_round, cfg.rounds):
-            plan = self._begin_round(r)
+            with telemetry.span("schedule", round=r):
+                plan = self._begin_round(r)
             if plan is not None:
-                deltas, losses, l2s = self._train(plan)
-                deltas = self._corrupt_deltas(r, plan, deltas)
-                t_end, fresh_updates, stale_updates, stale_taus = \
-                    self._collect_updates(r, plan, deltas, losses, l2s)
-                if fresh_updates or stale_updates:
-                    agg_out = self._aggregate(fresh_updates, stale_updates,
-                                              stale_taus)
-                    if agg_out is not None:
-                        self._apply_update(agg_out)
-                self._record_round(r, plan.t_now, t_end, len(plan.chosen),
-                                   len(fresh_updates), len(stale_updates),
-                                   progress=progress)
+                with telemetry.span("dispatch", round=r):
+                    deltas, losses, l2s = self._train(plan)
+                    deltas = self._corrupt_deltas(r, plan, deltas)
+                with telemetry.span("fetch", round=r):
+                    t_end, fresh_updates, stale_updates, stale_taus = \
+                        self._collect_updates(r, plan, deltas, losses, l2s)
+                    if fresh_updates or stale_updates:
+                        agg_out = self._aggregate(fresh_updates,
+                                                  stale_updates, stale_taus)
+                        if agg_out is not None:
+                            self._apply_update(agg_out)
+                with telemetry.span("eval", round=r):
+                    self._record_round(r, plan.t_now, t_end,
+                                       len(plan.chosen), len(fresh_updates),
+                                       len(stale_updates), progress=progress)
                 if self._target_reached():
                     self.acct.stopped_early = True
                     break
             if checkpoint_path and checkpoint_every and \
                     (r + 1) % checkpoint_every == 0 and r + 1 < cfg.rounds:
                 from repro.checkpoint.state import save_engine_snapshot
-                save_engine_snapshot(checkpoint_path, self, r + 1)
+                with telemetry.span("checkpoint", round=r + 1):
+                    save_engine_snapshot(checkpoint_path, self, r + 1)
             if fp is not None and fp.crash_due(r):
+                telemetry.event("crash", round=int(r), mode=fp.crash_mode)
+                telemetry.flush()
                 fp.trigger_crash(r)
         return self._finalize()

@@ -63,6 +63,11 @@ class Accounting:
     rejected_nonfinite: int = 0   # guard: rows rejected for NaN/Inf values
     rejected_norm: int = 0        # guard: rows rejected as norm outliers
     quorum_skips: int = 0         # rounds where the apply was quorum-skipped
+    round_events: List[dict] = dataclasses.field(default_factory=list)
+    # ^ telemetry round log (SimConfig.telemetry >= 2): one pinned-schema
+    #   event dict per recorded round (repro.telemetry.schema
+    #   .ROUND_EVENT_KEYS).  Lives here so snapshots carry it and a resumed
+    #   run's in-memory log continues the crashed one's exactly.
 
     def note_guard(self, nonfinite: int, norm: int, applied: bool):
         """Record one aggregation's guard outcome (per round with updates)."""

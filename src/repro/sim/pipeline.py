@@ -110,6 +110,10 @@ from repro.core.stale_cache import DeviceStaleCache, ShardedSlotAccounts
 from repro.core.staleness import EPS, RULE_ID
 from repro.sim import learner as ln
 from repro.sim.participant_sharding import PART_AXIS, split_balanced
+from repro.telemetry import TelemetrySession
+from repro.telemetry.registry import CounterView, MetricsRegistry
+from repro.telemetry.schema import (DISPATCH_KINDS, LANE_WIDTH, N_LANE_HOST,
+                                    PIPELINE_COUNTERS)
 
 ROW_BLOCK = 128   # packed participant-row padding bucket (bucket_block)
 UPD_BLOCK = 32    # per-cell aggregation-row padding bucket (sweep_bucket_pad's)
@@ -124,28 +128,58 @@ def pipeline_key(cfg) -> tuple:
             cfg.use_agg_kernel,
             cfg.scaling_rule if cfg.use_agg_kernel else None,
             cfg.rounds_per_dispatch, cfg.shard_participants,
-            cfg.guard, cfg.guard_clip, cfg.guard_reject_mult, cfg.quorum)
+            cfg.guard, cfg.guard_clip, cfg.guard_reject_mult, cfg.quorum,
+            cfg.telemetry)
 
 
-@dataclasses.dataclass
 class PipelineStats:
-    """Dispatch / transfer accounting for the hot loop (``--profile``)."""
-    rounds: int = 0
-    dispatches: dict = dataclasses.field(
-        default_factory=lambda: {"round": 0, "eval": 0, "cache_grow": 0,
-                                 "repack": 0})
-    h2d_bytes: int = 0          # per-round index arrays (explicit device_put)
-    d2h_bytes: int = 0          # stat-util + eval + repack-eviction fetches
-    init_h2d_bytes: int = 0     # one-time dataset/params uploads
-    n_shards: int = 1
-    n_pshards: int = 1
-    rounds_per_dispatch: int = 1
-    cross_shard_landings: int = 0   # landings whose aggregation group spans
-                                    # other p-shards — operand rows the psum
-                                    # genuinely merges across shards
-    guard: dict = dataclasses.field(
-        default_factory=lambda: {"rejected_nonfinite": 0, "rejected_norm": 0,
-                                 "quorum_skips": 0})
+    """Dispatch / transfer accounting for the hot loop (``--profile``).
+
+    Backed by a telemetry ``MetricsRegistry`` — the registry is the single
+    storage for every counter (including the guard counters, written once
+    by ``TelemetrySession.note_guard``); this class is an attribute-style
+    view over it, so the ``--profile`` JSON, the Prometheus snapshot and
+    per-sim guard accounting can never disagree.  The attribute API is
+    unchanged: ``stats.rounds += k``, ``stats.dispatches["eval"] += 1``,
+    ``stats.as_dict()``.  When pipelines share one session (a sweep), the
+    counters accumulate across batches and ``as_dict()`` is already the
+    sweep-wide total.
+    """
+
+    GUARD_KEYS = ("rejected_nonfinite", "rejected_norm", "quorum_skips")
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None,
+                 n_shards: int = 1, n_pshards: int = 1):
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.n_shards = n_shards
+        self.n_pshards = n_pshards
+        self.rounds_per_dispatch = 1
+        for name in PIPELINE_COUNTERS:
+            self.registry.counter(name)
+        self.dispatches = CounterView(self.registry, "pipeline_dispatches_",
+                                      DISPATCH_KINDS)
+        self.guard = CounterView(self.registry, "guard_", self.GUARD_KEYS)
+
+    def _counter(self, name):
+        return self.registry.counter("pipeline_" + name)
+
+    # per-round index arrays (explicit device_put) / stat-util + eval +
+    # repack-eviction + lane fetches / one-time dataset uploads — all
+    # plain registry counters behind attribute accessors
+    rounds = property(lambda s: s._counter("rounds").value,
+                      lambda s, v: setattr(s._counter("rounds"), "value", v))
+    h2d_bytes = property(
+        lambda s: s._counter("h2d_bytes").value,
+        lambda s, v: setattr(s._counter("h2d_bytes"), "value", v))
+    d2h_bytes = property(
+        lambda s: s._counter("d2h_bytes").value,
+        lambda s, v: setattr(s._counter("d2h_bytes"), "value", v))
+    init_h2d_bytes = property(
+        lambda s: s._counter("init_h2d_bytes").value,
+        lambda s, v: setattr(s._counter("init_h2d_bytes"), "value", v))
+    cross_shard_landings = property(
+        lambda s: s._counter("cross_shard_landings").value,
+        lambda s, v: setattr(s._counter("cross_shard_landings"), "value", v))
 
     def as_dict(self) -> dict:
         per_round = max(self.rounds, 1)
@@ -175,7 +209,7 @@ class PipelineStats:
 
 def _round_body(params, cache, opt_state, x_tr, y_tr, ints, floats, shapes,
                 *, train_unit, steps, batch, yogi, use_kernel, kernel_rule,
-                single, p_axis=None, guard=None, faulty=False):
+                single, p_axis=None, guard=None, faulty=False, lane=False):
     """One round's device work on one (local) params/cache block.
 
     params: (rows, D) — cell rows plus one scratch row; cache: (C + 1, D)
@@ -200,10 +234,20 @@ def _round_body(params, cache, opt_state, x_tr, y_tr, ints, floats, shapes,
     gated on ``survivors >= quorum``.  ``faulty`` (static) appends a
     per-row fp32 corruption multiplier to the floats buffer, applied to
     the delta rows between training and the cache scatter — fault
-    injection without any extra transfer or collective.  The last output
-    is a (G, 4) int32 guard-stats block
+    injection without any extra transfer or collective.  The last two
+    outputs are a (G, 4) int32 guard-stats block
     [rejected_nonfinite, rejected_norm, survivors, applied] (zeros when
-    unguarded); it is p-replicated like everything after the psum.
+    unguarded) and the telemetry round-stats lane; both are p-replicated
+    like everything after the psum.
+
+    ``lane`` (static, ``SimConfig.telemetry >= 2``) emits a per-group
+    fp32 stats row (``telemetry.schema.LANE_FIELDS``): the host-known
+    head fields ride through the floats buffer and are echoed back, the
+    update-row L2-norm min/mean/max and non-finite count are computed on
+    the *post-psum, pre-screen* operand (so corruption the guard later
+    rejects is still visible), and the guard tail mirrors ``gstats``.
+    Computed after the psum → no extra collective; lane off returns a
+    zero-width block, so the program's outputs and numerics are untouched.
     """
     r_b, tb, g_b, nf_b, ns_b, all_valid = shapes
     n_b = nf_b + ns_b
@@ -273,6 +317,28 @@ def _round_body(params, cache, opt_state, x_tr, y_tr, ints, floats, shapes,
             us = jnp.where(agg_valid[:, nf_b:, None], us, 0.0)
         u = jnp.concatenate([uf, us], axis=1)
 
+    if lane:
+        # telemetry lane, device half: row-norm stats over the *pre-screen*
+        # operand, post-psum (p-replicated, no extra collective).  Finite
+        # rows are selected with where() — never multiplied — so one NaN
+        # row cannot poison the finite rows' stats.
+        row_fin = jnp.isfinite(u).all(axis=-1)
+        norms = jnp.sqrt(jnp.sum(u * u, axis=-1))
+        ok = agg_valid & row_fin
+        cnt = ok.sum(axis=-1)
+        nonzero = cnt > 0
+        l2_min = jnp.where(nonzero,
+                           jnp.min(jnp.where(ok, norms, jnp.inf), axis=-1),
+                           0.0)
+        l2_max = jnp.where(nonzero,
+                           jnp.max(jnp.where(ok, norms, -jnp.inf), axis=-1),
+                           0.0)
+        l2_mean = jnp.where(
+            nonzero,
+            jnp.sum(jnp.where(ok, norms, 0.0), axis=-1)
+            / jnp.maximum(cnt, 1).astype(jnp.float32), 0.0)
+        lane_nonfin = (agg_valid & ~row_fin).sum(axis=-1)
+
     # --- guard screening (static: unguarded programs are untouched) --
     gstats = jnp.zeros((g_b, 4), jnp.int32)
     if guard is not None:
@@ -286,6 +352,25 @@ def _round_body(params, cache, opt_state, x_tr, y_tr, ints, floats, shapes,
                             has_eff.astype(jnp.int32)], axis=1)
     else:
         has_eff = has_g
+
+    if lane:
+        # assemble the lane row: host pass-through head (echoed from the
+        # floats buffer), device norm stats, guard tail (agg_valid is the
+        # post-screen survivor mask here; unguarded it is unchanged)
+        host_off = 2 * g_b + (r_b if faulty else 0)
+        lane_host = floats[host_off:host_off + g_b * N_LANE_HOST] \
+            .reshape(g_b, N_LANE_HOST)
+        lanes = jnp.concatenate([
+            lane_host,
+            jnp.stack([l2_min, l2_mean, l2_max,
+                       lane_nonfin.astype(jnp.float32)], axis=1),
+            gstats[:, :2].astype(jnp.float32),
+            jnp.stack([agg_valid.sum(axis=-1).astype(jnp.float32),
+                       has_eff.astype(jnp.float32)], axis=1),
+        ], axis=1)
+    else:
+        # zero-width block keeps the program signature uniform at no cost
+        lanes = jnp.zeros((g_b, 0), jnp.float32)
 
     # --- SAA weights + aggregate + server apply ----------------------
     rows_old = params[agg_cell]                       # (G, D)
@@ -336,12 +421,12 @@ def _round_body(params, cache, opt_state, x_tr, y_tr, ints, floats, shapes,
     # quorum failures (has_eff < has_g) carry the old rows unchanged
     new_rows = jnp.where(has_eff[:, None], new_rows, rows_old)
     params = params.at[agg_cell].set(new_rows)
-    return params, cache, opt_state, losses, l2s, gstats
+    return params, cache, opt_state, losses, l2s, gstats, lanes
 
 
 @functools.lru_cache(maxsize=16)
 def _chunk_program(spec, lr, prox_mu, steps, batch, yogi, use_kernel,
-                   kernel_rule, guard, faulty, single):
+                   kernel_rule, guard, faulty, lane, single):
     """K-round chunk program (unsharded): ``lax.scan`` of the round body
     with the donated params/cache/optimizer buffers as the scan carry and
     the K prescheduled rounds' index arrays as the scanned inputs.  One
@@ -361,25 +446,25 @@ def _chunk_program(spec, lr, prox_mu, steps, batch, yogi, use_kernel,
     body = functools.partial(_round_body, train_unit=train_unit, steps=steps,
                              batch=batch, yogi=yogi, use_kernel=use_kernel,
                              kernel_rule=kernel_rule, guard=guard,
-                             faulty=faulty, single=single)
+                             faulty=faulty, lane=lane, single=single)
 
     def prog(params, cache, opt_state, x_tr, y_tr, ints_k, floats_k, shapes):
         def step(carry, xs):
             p, c, o = carry
-            p, c, o, losses, l2s, gst = body(p, c, o, x_tr, y_tr, xs[0],
-                                             xs[1], shapes)
-            return (p, c, o), (losses, l2s, gst)
+            p, c, o, losses, l2s, gst, lns = body(p, c, o, x_tr, y_tr,
+                                                  xs[0], xs[1], shapes)
+            return (p, c, o), (losses, l2s, gst, lns)
 
-        (params, cache, opt_state), (losses, l2s, gst) = jax.lax.scan(
+        (params, cache, opt_state), (losses, l2s, gst, lns) = jax.lax.scan(
             step, (params, cache, opt_state), (ints_k, floats_k))
-        return params, cache, opt_state, losses, l2s, gst
+        return params, cache, opt_state, losses, l2s, gst, lns
 
     return jax.jit(prog, donate_argnums=(0, 1, 2), static_argnums=(7,))
 
 
 @functools.lru_cache(maxsize=16)
 def _sharded_chunk_program(spec, lr, prox_mu, steps, batch, yogi, use_kernel,
-                           kernel_rule, guard, faulty, mesh):
+                           kernel_rule, guard, faulty, lane, mesh):
     """K-round chunk program sharded over the 2-D ``("s", "p")`` round
     mesh: ``shard_map`` with the chunk scan inside.  Each (s, p) device
     owns its s-block's ``(s_loc + 1, D)`` params rows (replicated along
@@ -397,7 +482,8 @@ def _sharded_chunk_program(spec, lr, prox_mu, steps, batch, yogi, use_kernel,
     body = functools.partial(_round_body, train_unit=train_unit, steps=steps,
                              batch=batch, yogi=yogi, use_kernel=use_kernel,
                              kernel_rule=kernel_rule, guard=guard,
-                             faulty=faulty, single=False, p_axis=PART_AXIS)
+                             faulty=faulty, lane=lane, single=False,
+                             p_axis=PART_AXIS)
     opt_spec = ({"m": P("s"), "v": P("s"), "t": P("s")} if yogi else None)
 
     def prog(params3, cache3, opt_state, x_tr, y_tr, ints3, floats3, shapes):
@@ -407,14 +493,14 @@ def _sharded_chunk_program(spec, lr, prox_mu, steps, batch, yogi, use_kernel,
 
             def step(carry, xs):
                 p, c, o = carry
-                p, c, o, losses, l2s, gst = body(p, c, o, x_tr, y_tr, xs[0],
-                                                 xs[1], shapes)
-                return (p, c, o), (losses, l2s, gst)
+                p, c, o, losses, l2s, gst, lns = body(p, c, o, x_tr, y_tr,
+                                                      xs[0], xs[1], shapes)
+                return (p, c, o), (losses, l2s, gst, lns)
 
-            (p, c, o), (losses, l2s, gst) = jax.lax.scan(
+            (p, c, o), (losses, l2s, gst, lns) = jax.lax.scan(
                 step, (p, c, o), (i3[:, 0], f3[:, 0]))
             return (p[None], c[None], jax.tree.map(lambda a: a[None], o),
-                    losses, l2s, gst)
+                    losses, l2s, gst, lns)
 
         return shard_map(
             per_shard, mesh=mesh,
@@ -422,7 +508,7 @@ def _sharded_chunk_program(spec, lr, prox_mu, steps, batch, yogi, use_kernel,
                       P(None, ("s", "p")), P(None, ("s", "p"))),
             out_specs=(P("s"), P(("s", "p")), opt_spec,
                        P(None, ("s", "p")), P(None, ("s", "p")),
-                       P(None, ("s", "p"))),
+                       P(None, ("s", "p")), P(None, ("s", "p"))),
             check_rep=False,
         )(params3, cache3, opt_state, x_tr, y_tr, ints3, floats3)
 
@@ -486,13 +572,17 @@ class _RoundWork:
     surv: dict
     recs: dict
     rowq: dict      # (cell, plan row) -> (p-shard, local slot) row placement
+    occ: dict       # cell -> stale-cache occupancy after this round's
+                    # scheduling (captured at preschedule time — the cache
+                    # mutates across a chunk's later rounds)
 
 
 class RoundPipeline:
     def __init__(self, sims: Sequence, progress: bool = False, mesh=None,
                  checkpoint_path: Optional[str] = None,
                  checkpoint_every: int = 0, checkpoint_wrap=None,
-                 start_round: int = 0):
+                 start_round: int = 0, telemetry=None,
+                 labels: Optional[Sequence[str]] = None):
         assert len(sims) >= 1
         self.sims = list(sims)
         self.progress = progress
@@ -508,6 +598,16 @@ class RoundPipeline:
             assert pipeline_key(sim.cfg) == pipeline_key(cfg0), \
                 "incompatible Simulators in one pipeline batch"
         self.cfg0 = cfg0
+        # every pipeline has a telemetry session; the directory-less
+        # default costs ~nothing (null spans, no writers) but still backs
+        # PipelineStats with a live registry
+        self.telemetry = (telemetry if telemetry is not None
+                          else TelemetrySession())
+        self._labels = (list(labels) if labels is not None
+                        else [f"sim{i}" for i in range(len(sims))])
+        # level >= 2 turns on the in-program round-stats lane (static in
+        # pipeline_key, so every sim of a batch agrees)
+        self._lane = int(cfg0.telemetry) >= 2
         self.spec = sims[0]._flat_spec
         self.d = agg.flat_dim(self.spec)
         self.yogi = cfg0.aggregator == "yogi"
@@ -526,7 +626,8 @@ class RoundPipeline:
         self.mesh = mesh
         self.n_shards = int(mesh.shape["s"]) if mesh is not None else 1
         self.n_pshards = int(mesh.shape["p"]) if mesh is not None else 1
-        self.stats = PipelineStats(n_shards=self.n_shards,
+        self.stats = PipelineStats(registry=self.telemetry.registry,
+                                   n_shards=self.n_shards,
                                    n_pshards=self.n_pshards)
 
         s = len(sims)
@@ -610,8 +711,8 @@ class RoundPipeline:
         else:
             self.x_tr, self.y_tr, self.x_te, self.y_te = (
                 jax.device_put(a, self._rep_spec) for a in host)
-        self.stats.init_h2d_bytes = (sum(a.nbytes for a in host)
-                                     + (s + self.n_shards) * self.d * 4)
+        self.stats.init_h2d_bytes += (sum(a.nbytes for a in host)
+                                      + (s + self.n_shards) * self.d * 4)
         # guard/fault routing is static program structure: all cells of a
         # batch share the guard config (pipeline_key) and the floats-buffer
         # layout (any faulted cell widens it for the whole batch)
@@ -623,7 +724,7 @@ class RoundPipeline:
         prog_args = (self.spec, cfg0.local_lr, cfg0.prox_mu, cfg0.local_steps,
                      cfg0.local_batch, self.yogi, cfg0.use_agg_kernel,
                      cfg0.scaling_rule if cfg0.use_agg_kernel else None,
-                     self._guard, self._faulty)
+                     self._guard, self._faulty, self._lane)
         if self.mesh is not None:
             self._prog = _sharded_chunk_program(*prog_args, mesh)
         else:
@@ -692,10 +793,16 @@ class RoundPipeline:
             if (self.checkpoint_path and self.checkpoint_every
                     and r_done + 1 >= self._next_ckpt
                     and r_done + 1 < self.cfg0.rounds):
-                self.checkpoint(r_done + 1)
+                with self.telemetry.span("checkpoint", round=r_done + 1):
+                    self.checkpoint(r_done + 1)
                 self._next_ckpt = r_done + 1 + self.checkpoint_every
             for fp in fps:
                 if fp.crash_due(r_done):
+                    # log + flush before the crash fires: a hard crash is a
+                    # SIGKILL, so anything unflushed would be lost
+                    self.telemetry.event("crash", round=int(r_done),
+                                         mode=fp.crash_mode)
+                    self.telemetry.flush()
                     fp.trigger_crash(r_done)
 
     # ------------------------------------------------------------------
@@ -793,7 +900,15 @@ class RoundPipeline:
             r, plans[i].t_now, scheds[i].t_end, len(plans[i].chosen),
             len(scheds[i].fresh_rows), len(scheds[i].landing))
             for i in order}
-        return _RoundWork(r, order, plans, scheds, surv, recs, rowq)
+        # telemetry: stale-cache occupancy must be read NOW — later rounds
+        # of the same chunk mutate it before the dispatch runs.  (Oort's
+        # new stragglers are appended post-dispatch, so count them in.)
+        occ = {}
+        if self._lane:
+            for i in order:
+                occ[i] = len(sims[i].stale_cache) + (
+                    len(scheds[i].new_stale) if self._fetch_l2s else 0)
+        return _RoundWork(r, order, plans, scheds, surv, recs, rowq, occ)
 
     def _materialize(self, works):
         """Build the chunk's packed index arrays: per round and per flat
@@ -865,8 +980,10 @@ class RoundPipeline:
         # a faulted batch appends the per-row corruption multipliers to the
         # floats buffer (static layout — pipeline_key keeps faulted and
         # clean cells in separate batches only via the guard config, so the
-        # widening applies to the whole batch)
-        nf_len = 2 * g_b + (r_b if self._faulty else 0)
+        # widening applies to the whole batch); the telemetry lane appends
+        # its host-known per-group head fields after those
+        nf_len = (2 * g_b + (r_b if self._faulty else 0)
+                  + (N_LANE_HOST * g_b if self._lane else 0))
         floats_all = np.zeros((len(works), nflat, nf_len), np.float32)
         chunks = []
         offs = {}
@@ -912,6 +1029,16 @@ class RoundPipeline:
                             if any(qc != f.delta[0] - j * n_p
                                    for qc in col_q))
                 floats_j = np.concatenate([beta_g, lr_g])
+                if self._lane:
+                    # host half of the lane, p-replicated like the rest of
+                    # the group metadata; the device echoes it back so the
+                    # fetched lane row is self-contained
+                    tele_j = np.zeros((g_b, N_LANE_HOST), np.float32)
+                    for g, i in enumerate(groups):
+                        sc = w.scheds[i]
+                        tele_j[g] = (w.r, sc.t_end, len(w.plans[i].chosen),
+                                     len(sc.fresh_rows), len(sc.landing),
+                                     w.occ[i])
 
                 # per-q buffers, filled in ONE pass over rows and columns
                 # (a scan per shard would scale host packing with n_p)
@@ -932,6 +1059,14 @@ class RoundPipeline:
                     fsc_i = (fp_i.scale_for(w.r, p.chosen)
                              if self._faulty and fp_i is not None
                              and fp_i.has_corruption else None)
+                    if fsc_i is not None:
+                        # surviving corrupt rows (NaN/Inf/scaled) this cell
+                        # injects this round — logged to events.jsonl
+                        bad = int(np.count_nonzero(fsc_i[sv] != 1.0))
+                        if bad:
+                            self.telemetry.event(
+                                "fault", cell=self._labels[i],
+                                round=int(w.r), corrupt_rows=bad)
                     cell_offs = offs.setdefault(
                         (k_idx, i), np.zeros(len(sv), np.int64))
                     for k_row, ri in enumerate(sv):
@@ -971,9 +1106,14 @@ class RoundPipeline:
                          sl_q[q].ravel(), agg_tau.ravel(), rule_id,
                          agg_fresh.ravel(), agg_valid.ravel(),
                          mask_q[q].ravel(), has_g]))
+                    parts = [floats_j]
+                    if self._faulty:
+                        parts.append(fscale_q[q])
+                    if self._lane:
+                        parts.append(tele_j.ravel())
                     floats_all[k_idx, j * n_p + q] = (
-                        np.concatenate([floats_j, fscale_q[q]])
-                        if self._faulty else floats_j)
+                        np.concatenate(parts) if len(parts) > 1
+                        else floats_j)
             chunks.append(np.stack(per_shard))
         ints_all = np.stack(chunks)        # already int32 throughout
         return ints_all, floats_all, shapes, offs, gmaps
@@ -983,14 +1123,16 @@ class RoundPipeline:
         then run the post-dispatch tail (Oort feedback, eval fill, early
         stop, shard repack) for the chunk."""
         works = []
-        for r in rounds:
-            w = self._preschedule(r)
-            if w is not None:
-                works.append(w)
+        with self.telemetry.span("schedule", rounds=len(rounds)):
+            for r in rounds:
+                w = self._preschedule(r)
+                if w is not None:
+                    works.append(w)
         if not works:
             return
         sims = self.sims
-        ints, floats, shapes, offs, gmaps = self._materialize(works)
+        with self.telemetry.span("pack", rounds=len(works)):
+            ints, floats, shapes, offs, gmaps = self._materialize(works)
 
         if self.mesh is None:
             dev_ints, dev_floats = jax.device_put(
@@ -1021,9 +1163,11 @@ class RoundPipeline:
         self.stats.h2d_bytes += ints.nbytes + floats.nbytes
         self.stats.dispatches["round"] += 1
         self.stats.rounds += len(works)
-        (params, cache_rows, self.opt_state, _losses, l2s, gstats) = \
-            self._prog(self.params, cache_rows, self.opt_state,
-                       self.x_tr, self.y_tr, dev_ints, dev_floats, shapes)
+        with self.telemetry.span("dispatch", rounds=len(works)):
+            (params, cache_rows, self.opt_state, _losses, l2s, gstats,
+             lanes) = self._prog(self.params, cache_rows, self.opt_state,
+                                 self.x_tr, self.y_tr, dev_ints, dev_floats,
+                                 shapes)
         self.params = params
         if self.mesh is None:
             self.cache.rows = cache_rows
@@ -1031,74 +1175,115 @@ class RoundPipeline:
             self.cache_rows = cache_rows
 
         # --- guard-stats attribution (guarded programs only) --------------
-        if self._guard is not None:
-            g_np = np.asarray(jax.device_get(gstats))
-            self.stats.d2h_bytes += g_np.nbytes
-            g_b = shapes[2]
-            for k_idx, w in enumerate(works):
-                # unsharded: (g_b, 4); sharded: (nflat * g_b, 4) with the
-                # flat shard f = j * n_p + q owning block [f*g_b, (f+1)*g_b)
-                # — gstats are p-replicated, so read each group's q=0 copy
-                flat = g_np[k_idx].reshape(-1, 4)
-                for j in range(self.n_shards):
-                    for g, i in enumerate(gmaps[(k_idx, j)]):
-                        nf, nnorm, _surv, applied = (
-                            int(x) for x in
-                            flat[(j * self.n_pshards) * g_b + g])
-                        sims[i].acct.note_guard(nf, nnorm, bool(applied))
-                        self.stats.guard["rejected_nonfinite"] += nf
-                        self.stats.guard["rejected_norm"] += nnorm
-                        if not applied:
-                            self.stats.guard["quorum_skips"] += 1
+        lane_np = None
+        with self.telemetry.span("fetch"):
+            if self._guard is not None:
+                g_np = np.asarray(jax.device_get(gstats))
+                self.stats.d2h_bytes += g_np.nbytes
+                g_b = shapes[2]
+                for k_idx, w in enumerate(works):
+                    # unsharded: (g_b, 4); sharded: (nflat * g_b, 4) with
+                    # flat shard f = j * n_p + q owning [f*g_b, (f+1)*g_b)
+                    # — gstats are p-replicated: read each group's q=0 copy
+                    flat = g_np[k_idx].reshape(-1, 4)
+                    for j in range(self.n_shards):
+                        for g, i in enumerate(gmaps[(k_idx, j)]):
+                            nf, nnorm, _surv, applied = (
+                                int(x) for x in
+                                flat[(j * self.n_pshards) * g_b + g])
+                            # single writer for guard accounting: the
+                            # session increments the registry counters
+                            # (stats.guard is a view) and forwards to the
+                            # per-sim Accounting
+                            self.telemetry.note_guard(sims[i].acct, nf,
+                                                      nnorm, bool(applied))
 
-        # --- deferred Oort feedback (K forced to 1) -----------------------
-        if self._fetch_l2s:
-            from repro.sim.engine import _InFlight
-            l2s_np = np.asarray(jax.device_get(l2s))
-            self.stats.d2h_bytes += l2s_np.nbytes
-            (w,) = works
-            l2s_flat = l2s_np[0].ravel()   # (flat shard, local row) order
-            for i in w.order:
-                sim, sc = sims[i], w.scheds[i]
-                l2s_i = np.zeros(w.plans[i].k, np.float32)
-                l2s_i[w.surv[i]] = l2s_flat[offs[(0, i)]]
-                sim._apply_feedback(w.r, sc, l2s_i)
-                for (row_i, lid, arr, dur), slot in zip(sc.new_stale,
-                                                        sc.slots):
-                    sim.stale_cache.append(_InFlight(
-                        lid, w.r, arr, dur, slot,
-                        sim._stat_util(row_i, l2s_i)))
+            if self._lane:
+                lane_np = np.asarray(jax.device_get(lanes))
+                self.stats.d2h_bytes += lane_np.nbytes
+
+            # --- deferred Oort feedback (K forced to 1) -------------------
+            if self._fetch_l2s:
+                from repro.sim.engine import _InFlight
+                l2s_np = np.asarray(jax.device_get(l2s))
+                self.stats.d2h_bytes += l2s_np.nbytes
+                (w,) = works
+                l2s_flat = l2s_np[0].ravel()  # (flat shard, local row) order
+                for i in w.order:
+                    sim, sc = sims[i], w.scheds[i]
+                    l2s_i = np.zeros(w.plans[i].k, np.float32)
+                    l2s_i[w.surv[i]] = l2s_flat[offs[(0, i)]]
+                    sim._apply_feedback(w.r, sc, l2s_i)
+                    for (row_i, lid, arr, dur), slot in zip(sc.new_stale,
+                                                            sc.slots):
+                        sim.stale_cache.append(_InFlight(
+                            lid, w.r, arr, dur, slot,
+                            sim._stat_util(row_i, l2s_i)))
 
         # --- eval fill + early stop at the chunk's eval boundary ----------
         wl = works[-1]
         if sims[wl.order[0]].eval_due(wl.r):
-            l_b = agg.bucket_pow2(len(wl.order))
-            cells = wl.order + [wl.order[0]] * (l_b - len(wl.order))
-            if self.mesh is None:
-                rows = np.asarray(cells, np.int32)
-                eval_params = self.params
-            else:
-                rows = np.asarray([self.placement.flat_row(i)
-                                   for i in cells], np.int32)
-                eval_params = self.params.reshape(-1, self.d)
-            packed = np.concatenate([rows,
-                                     self.sub_idx[np.asarray(cells)]])
-            packed = (jax.device_put(packed) if self.mesh is None
-                      else jax.device_put(packed, self._rep_spec))
-            self.stats.dispatches["eval"] += 1
-            a, lo = self._eval(eval_params, packed, self.x_te, self.y_te)
-            acc = np.asarray(jax.device_get(a))
-            loss = np.asarray(jax.device_get(lo))
-            self.stats.h2d_bytes += 2 * rows.nbytes
-            self.stats.d2h_bytes += acc.nbytes + loss.nbytes
-            for ei, i in enumerate(wl.order):
-                sims[i]._fill_round_eval(wl.recs[i], acc[ei], loss[ei],
-                                         progress=self.progress)
-                if sims[i]._target_reached():
-                    sims[i].acct.stopped_early = True
-                    self.done[i] = True
+            with self.telemetry.span("eval", round=wl.r):
+                self._eval_fill(wl)
+
+        # --- per-round telemetry events (after eval, so the chunk's eval
+        # round carries its accuracy/loss) ---------------------------------
+        if self._lane:
+            g_b = shapes[2]
+            for k_idx, w in enumerate(works):
+                flat = lane_np[k_idx].reshape(-1, LANE_WIDTH)
+                rows = {}
+                for j in range(self.n_shards):
+                    for g, i in enumerate(gmaps[(k_idx, j)]):
+                        rows[i] = flat[(j * self.n_pshards) * g_b + g]
+                for i in w.order:
+                    row = rows.get(i)
+                    if row is None:
+                        # nothing aggregated for this cell this round (no
+                        # fresh rows, no landings): the host half is still
+                        # known, the device stats are genuinely zero
+                        sc = w.scheds[i]
+                        row = np.zeros(LANE_WIDTH, np.float32)
+                        row[:N_LANE_HOST] = (w.r, sc.t_end,
+                                             len(w.plans[i].chosen),
+                                             len(sc.fresh_rows),
+                                             len(sc.landing), w.occ[i])
+                    ev = self.telemetry.round_event(self._labels[i], row,
+                                                    w.recs[i])
+                    sims[i].acct.round_events.append(ev)
+            self.telemetry.flush()
         if self.mesh is not None:
             self._maybe_repack()
+
+    def _eval_fill(self, wl) -> None:
+        """Deferred eval at the chunk's eval boundary: batched accuracy/loss
+        for the live cells, round-record fill, accuracy-target early stop."""
+        sims = self.sims
+        l_b = agg.bucket_pow2(len(wl.order))
+        cells = wl.order + [wl.order[0]] * (l_b - len(wl.order))
+        if self.mesh is None:
+            rows = np.asarray(cells, np.int32)
+            eval_params = self.params
+        else:
+            rows = np.asarray([self.placement.flat_row(i)
+                               for i in cells], np.int32)
+            eval_params = self.params.reshape(-1, self.d)
+        packed = np.concatenate([rows,
+                                 self.sub_idx[np.asarray(cells)]])
+        packed = (jax.device_put(packed) if self.mesh is None
+                  else jax.device_put(packed, self._rep_spec))
+        self.stats.dispatches["eval"] += 1
+        a, lo = self._eval(eval_params, packed, self.x_te, self.y_te)
+        acc = np.asarray(jax.device_get(a))
+        loss = np.asarray(jax.device_get(lo))
+        self.stats.h2d_bytes += 2 * rows.nbytes
+        self.stats.d2h_bytes += acc.nbytes + loss.nbytes
+        for ei, i in enumerate(wl.order):
+            sims[i]._fill_round_eval(wl.recs[i], acc[ei], loss[ei],
+                                     progress=self.progress)
+            if sims[i]._target_reached():
+                sims[i].acct.stopped_early = True
+                self.done[i] = True
 
     # ------------------------------------------------------------------
     # Crash-safe snapshots (chaos harness): the full batch state at a
@@ -1154,7 +1339,12 @@ class RoundPipeline:
                 "fault_plan": sim.fault_plan,
             })
         return {"version": 1, "kind": "pipeline", "next_round": int(r_next),
-                "done": list(self.done), "sims": payload_sims}
+                "done": list(self.done), "sims": payload_sims,
+                "labels": list(self._labels),
+                # rounds.jsonl byte offset at this boundary: a resume into
+                # the same telemetry dir truncates back to it, keeping the
+                # round log inside the bitwise-resume contract
+                "telemetry": self.telemetry.state()}
 
     def checkpoint(self, r_next: int) -> None:
         from repro.checkpoint.state import save_snapshot
@@ -1175,7 +1365,8 @@ class RoundPipeline:
         new_pl = Placement.build(live, self.n_shards)
         if new_pl.s_loc >= self.placement.s_loc:
             return
-        self._repack(new_pl, live)
+        with self.telemetry.span("repack", live=len(live)):
+            self._repack(new_pl, live)
 
     def _repack(self, new_pl, live) -> None:
         from repro.sweeps.sharding import reshard_rows

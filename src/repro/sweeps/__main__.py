@@ -60,10 +60,27 @@ def main(argv=None) -> None:
                     help="chaos: inject a crash once round R completes")
     ap.add_argument("--crash-hard", action="store_true",
                     help="chaos: crash via SIGKILL instead of an exception")
+    ap.add_argument("--telemetry-dir", default=None, metavar="DIR",
+                    help="run at full telemetry (level 2) and export the run "
+                         "timeline there: rounds.jsonl / events.jsonl, "
+                         "trace.json (Perfetto), metrics.prom")
     args = ap.parse_args(argv)
 
+    telemetry = None
+    if args.telemetry_dir:
+        from repro.telemetry import TelemetrySession
+        telemetry = TelemetrySession(args.telemetry_dir)
+    try:
+        _run(args, telemetry)
+    finally:
+        if telemetry is not None:
+            telemetry.close()
+            print(f"# telemetry exported to {args.telemetry_dir}")
+
+
+def _run(args, telemetry) -> None:
     if args.resume:
-        results, wall = resume_sweep(args.resume)
+        results, wall = resume_sweep(args.resume, telemetry=telemetry)
         print(f"# resumed from {args.resume} in {wall:.2f}s "
               f"({len(results)} cells)")
         print(text_table(results))
@@ -82,6 +99,9 @@ def main(argv=None) -> None:
         cells = [dataclasses.replace(c, config=dataclasses.replace(
             c.config, rounds_per_dispatch=args.rounds_per_dispatch))
             for c in cells]
+    if telemetry is not None:
+        cells = [dataclasses.replace(c, config=dataclasses.replace(
+            c.config, telemetry=2)) for c in cells]
     if args.sharded or args.participant_shards:
         import jax
         axes = (["sweep"] if args.sharded else []) \
@@ -105,12 +125,14 @@ def main(argv=None) -> None:
         shard_participants=args.participant_shards,
         fault_plan=fault_plan,
         checkpoint_path=args.checkpoint,
-        checkpoint_every=args.checkpoint_every if args.checkpoint else 0)
-    # the serial reference stays at K=1: an independent ground truth for the
-    # chunked run, not the same prescheduling machinery run twice
+        checkpoint_every=args.checkpoint_every if args.checkpoint else 0,
+        telemetry=telemetry)
+    # the serial reference stays at K=1 and telemetry off: an independent
+    # ground truth, not the same machinery run twice (level-2 telemetry is
+    # bit-transparent, so the parity assert below also proves that)
     serial_cells = ([dataclasses.replace(c, config=dataclasses.replace(
-        c.config, rounds_per_dispatch=1)) for c in cells]
-        if args.rounds_per_dispatch != 1 else cells)
+        c.config, rounds_per_dispatch=1, telemetry=0)) for c in cells]
+        if args.rounds_per_dispatch != 1 or telemetry is not None else cells)
     serial_summaries, serial_wall = run_serial(serial_cells)
     assert_parity(results, serial_summaries)
     speedup = serial_wall / max(batched_wall, 1e-9)

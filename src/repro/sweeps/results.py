@@ -24,6 +24,12 @@ class CellResult:
     summary: SimSummary
     acct: Optional[Accounting] = None      # full round records when retained
 
+    @property
+    def round_log(self) -> list[dict]:
+        """Pinned-schema telemetry round events (``SimConfig.telemetry >= 2``;
+        empty when the run logged at a lower level or acct was dropped)."""
+        return self.acct.round_events if self.acct is not None else []
+
 
 class SweepResults:
     def __init__(self, results: Sequence[CellResult]):
@@ -111,6 +117,14 @@ class SweepResults:
         rejected rows and quorum-skipped applies across every cell."""
         keys = ("rejected_nonfinite", "rejected_norm", "quorum_skips")
         return {k: int(sum(r.summary[k] for r in self.results)) for k in keys}
+
+    def round_logs(self) -> dict:
+        """{cell name: telemetry round-event list} for cells that carried a
+        level-2 round log.  Kept out of ``to_json_dict`` — the per-round log
+        belongs in the telemetry directory's ``rounds.jsonl``, not in the
+        summary payload."""
+        return {r.cell.name: r.round_log for r in self.results
+                if r.round_log}
 
     def to_json_dict(self) -> dict:
         return {"cells": [{"name": r.cell.name,

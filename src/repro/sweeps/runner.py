@@ -145,6 +145,9 @@ class SweepRunner:
     fault_plan: Optional[object] = None   # repro.faults.FaultPlan for every cell
     checkpoint_path: Optional[str] = None  # crash-safe sweep snapshots (fused)
     checkpoint_every: int = 0              # rounds between snapshots (0 = off)
+    telemetry: Optional[object] = None     # TelemetrySession shared across
+                                           # batches (one registry / trace /
+                                           # round log for the whole sweep)
 
     def __post_init__(self):
         for c in self.cells:
@@ -153,6 +156,9 @@ class SweepRunner:
                                  "requires fast_path=True")
         if self.substrate_cache is None:
             self.substrate_cache = {}
+        if self.telemetry is None:
+            from repro.telemetry import TelemetrySession
+            self.telemetry = TelemetrySession()
         if self.mesh is None and (self.shard or self.shard_participants):
             import jax
             from repro.sim.participant_sharding import (participant_mesh,
@@ -224,27 +230,19 @@ class SweepRunner:
             wrap = (self._ckpt_wrap(idxs, completed)
                     if self.checkpoint_path and self.checkpoint_every
                     and idxs is not None else None)
-            pipe = RoundPipeline(sims, progress=self.progress, mesh=self.mesh,
-                                 checkpoint_path=self.checkpoint_path,
-                                 checkpoint_every=self.checkpoint_every,
-                                 checkpoint_wrap=wrap)
-            accts = pipe.run()
-            stats = pipe.stats.as_dict()
-            if self.last_stats is None:
-                self.last_stats = stats
-            else:                       # accumulate across compat batches
-                for k in ("rounds", "h2d_bytes", "d2h_bytes", "init_h2d_bytes"):
-                    self.last_stats[k] += stats[k]
-                for k, v in stats["dispatches"].items():
-                    self.last_stats["dispatches"][k] = \
-                        self.last_stats["dispatches"].get(k, 0) + v
-                # re-derive the per-round views from the merged counters
-                per_round = max(self.last_stats["rounds"], 1)
-                self.last_stats["dispatches_per_round"] = round(
-                    sum(self.last_stats["dispatches"].values()) / per_round, 3)
-                for k in ("h2d_bytes", "d2h_bytes"):
-                    self.last_stats[f"{k}_per_round"] = round(
-                        self.last_stats[k] / per_round)
+            with self.telemetry.span("batch", cells=len(batch)):
+                pipe = RoundPipeline(sims, progress=self.progress,
+                                     mesh=self.mesh,
+                                     checkpoint_path=self.checkpoint_path,
+                                     checkpoint_every=self.checkpoint_every,
+                                     checkpoint_wrap=wrap,
+                                     telemetry=self.telemetry,
+                                     labels=[c.name for c in batch])
+                accts = pipe.run()
+            # the session registry is shared by every batch's pipeline, so
+            # the newest snapshot already holds the sweep-wide totals —
+            # no manual cross-batch merging
+            self.last_stats = pipe.stats.as_dict()
             return accts
         return self._run_batch_stages(sims, cfgs)
 
@@ -400,18 +398,20 @@ def run_serial(cells: Sequence[Cell]):
 
 def run_batched(cells: Sequence[Cell], shard: bool = False, mesh=None,
                 shard_participants=0, fault_plan=None,
-                checkpoint_path=None, checkpoint_every: int = 0):
+                checkpoint_path=None, checkpoint_every: int = 0,
+                telemetry=None):
     """Returns (SweepResults, wall seconds) — wall includes substrate builds."""
     t0 = time.time()
     results = SweepRunner(cells, shard=shard, mesh=mesh,
                           shard_participants=shard_participants,
                           fault_plan=fault_plan,
                           checkpoint_path=checkpoint_path,
-                          checkpoint_every=checkpoint_every).run()
+                          checkpoint_every=checkpoint_every,
+                          telemetry=telemetry).run()
     return results, time.time() - t0
 
 
-def resume_sweep(path: str, progress: bool = False):
+def resume_sweep(path: str, progress: bool = False, telemetry=None):
     """Resume a sweep from a crash-safe snapshot (``SweepRunner`` with
     ``checkpoint_path``): already-finished batches come back from their
     stored accountings, the in-flight batch resumes its pipeline mid-run,
@@ -427,13 +427,14 @@ def resume_sweep(path: str, progress: bool = False):
                          "sweep snapshot (use repro.checkpoint.resume_run)")
     cells = payload["cells"]
     completed: dict = dict(payload["completed"])
-    pipe = build_resumed_pipeline(payload["pipeline"], progress=progress)
+    pipe = build_resumed_pipeline(payload["pipeline"], progress=progress,
+                                  telemetry=telemetry)
     for i, acct in zip(payload["group"], pipe.run()):
         completed[i] = acct
     fp = payload.get("fault_plan")
     runner = SweepRunner(cells, progress=progress,
                          fault_plan=fp.without_crash() if fp is not None
-                         else None)
+                         else None, telemetry=telemetry)
     groups: "OrderedDict[tuple, list[int]]" = OrderedDict()
     for i, c in enumerate(cells):
         groups.setdefault(compat_key(c.config), []).append(i)

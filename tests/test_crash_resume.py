@@ -111,6 +111,44 @@ def test_sweep_soft_crash_resume_is_bit_exact(tmp_path):
             got.cell.name
 
 
+def test_crash_resume_round_log_byte_continues(tmp_path):
+    """Telemetry joins the resume contract: an uninterrupted level-2 run's
+    ``rounds.jsonl`` is byte-equal to the crashed run's log after resume —
+    the session truncates back to the snapshot's byte offset (dropping
+    rounds logged after the last snapshot) and the resumed tail re-emits
+    them identically.  The in-memory round log rides the snapshot the same
+    way."""
+    import dataclasses
+
+    from repro.telemetry import TelemetrySession
+
+    cfg = dataclasses.replace(_cfg(), telemetry=2)
+    dir_a, dir_b = str(tmp_path / "clean"), str(tmp_path / "crashed")
+    ckpt = str(tmp_path / "run.pkl")
+
+    sess = TelemetrySession(dir_a)
+    ref = Simulator(cfg).run(telemetry=sess)
+    sess.close()
+
+    sess = TelemetrySession(dir_b)
+    with pytest.raises(InjectedCrash):
+        Simulator(cfg, fault_plan=_crash_plan()).run(
+            checkpoint_path=ckpt, checkpoint_every=2, telemetry=sess)
+    sess.close()
+    sess = TelemetrySession(dir_b)          # reopen the crashed run's dir
+    acct = resume_run(ckpt, telemetry=sess)
+    sess.close()
+
+    assert summaries_equal(dict(acct.summary()), dict(ref.summary()))
+    a = open(os.path.join(dir_a, "rounds.jsonl"), "rb").read()
+    b = open(os.path.join(dir_b, "rounds.jsonl"), "rb").read()
+    assert a == b and a
+    assert acct.round_events == ref.round_events
+    # the crash itself is on the (wall-order, contract-exempt) event log
+    evs = open(os.path.join(dir_b, "events.jsonl")).read()
+    assert '"event": "crash"' in evs
+
+
 def test_snapshot_error_paths(tmp_path):
     with pytest.raises(SnapshotError):
         load_snapshot(str(tmp_path / "missing.pkl"))
