@@ -273,7 +273,11 @@ def render_telemetry(telemetry_dir, out_dir) -> list:
         accuracy per cell (the paper's headline efficiency view);
       * ``waste_staleness.png`` — waste fraction and stale landings per round;
       * ``l2_band.png`` — per-round update-norm min/mean/max band plus
-        guard-rejected rows (chaos-visible health view).
+        guard-rejected rows (chaos-visible health view);
+      * ``accuracy_under_attack.png`` — accuracy vs round, color keyed by
+        aggregator and linestyle by attack kind, emitted only when the
+        sweep carried an ``attack`` axis (cell names encode the grid
+        coordinates) — the attack x defense headline view.
 
     Headless (Agg); returns the list of written paths."""
     import pathlib
@@ -346,6 +350,43 @@ def render_telemetry(telemetry_dir, out_dir) -> list:
     fig.savefig(p, dpi=120)
     plt.close(fig)
     written.append(p)
+
+    # accuracy under attack: sweeps grown from an `attack` axis carry the
+    # coordinate in the cell name ("/attack=<kind>/"); clean runs skip it
+    def _coord(cell, axis):
+        for part in cell.split("/"):
+            if part.startswith(axis + "="):
+                return part.split("=", 1)[1]
+        return None
+
+    if any(_coord(c, "attack") is not None for c in by_cell):
+        fig, ax = plt.subplots(figsize=(6, 4))
+        aggs = sorted({_coord(c, "aggregator") or "saa" for c in by_cell})
+        atks = sorted({_coord(c, "attack") or "none" for c in by_cell})
+        cmap = plt.get_cmap("tab10")
+        styles = ["-", "--", ":", "-.", (0, (3, 1, 1, 1))]
+        for cell, evs in sorted(by_cell.items()):
+            rnd = _series(evs, "round")
+            acc = _series(evs, "accuracy")
+            m = ~np.isnan(acc)
+            if not m.any():
+                continue
+            a = _coord(cell, "aggregator") or "saa"
+            k = _coord(cell, "attack") or "none"
+            ax.plot(rnd[m], 100 * acc[m], marker="o", ms=3,
+                    color=cmap(aggs.index(a) % 10),
+                    linestyle=styles[atks.index(k) % len(styles)],
+                    label=f"{a} / {k}")
+        ax.set_xlabel("round")
+        ax.set_ylabel("eval accuracy (%)")
+        ax.set_title("accuracy under attack "
+                     "(color = aggregator, linestyle = attack)")
+        ax.legend(fontsize=6)
+        fig.tight_layout()
+        p = odir / "accuracy_under_attack.png"
+        fig.savefig(p, dpi=120)
+        plt.close(fig)
+        written.append(p)
     return written
 
 

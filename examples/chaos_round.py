@@ -1,23 +1,33 @@
-"""Chaos demo: a federated round pipeline under deterministic fault injection.
+"""Chaos demo: a federated round pipeline under deterministic fault
+injection and coordinated attacks.
 
-Runs the same config three times on the fused round pipeline:
+Runs exactly ONE scenario per guard mode on the fused round pipeline —
+same config, same seeded fault plan, so every delta is attributable to
+the guard mode alone:
 
-  1. clean baseline — no faults, no guards;
-  2. unguarded under faults — NaN/Inf emitters, byzantine scaled-garbage
-     rows, post-training drops and replay duplicates poison the model;
-  3. guarded under the identical fault plan — non-finite and norm-outlier
-     rows are rejected in-program, quorum skips protect empty rounds, and
-     the run lands close to the clean baseline.
+  1. clean baseline    — no faults, no guards;
+  2. guard=off         — NaN/Inf emitters, byzantine scaled-garbage rows,
+     post-training drops and replay duplicates poison the model;
+  3. guard=reject      — median-norm reject + quorum: poison rows are
+     rejected in-program and the run lands near the clean baseline;
+  4. guard=clip+reject — adds an L2 clip on the surviving rows (the
+     belt-and-braces mode the CI chaos leg runs).
 
-A fourth phase crashes the guarded run mid-flight (soft crash at a
+A robustness phase then arms a coordinated ``collude_signflip`` attack
+(seeded attacker sets, identical for both cells) and compares plain
+``saa`` aggregation against the ``coord_median`` robust aggregator: the
+defense must beat the undefended run or the demo exits non-zero (an
+unexpected winner means the robust layer regressed).
+
+A final phase crashes the guarded run mid-flight (soft crash at a
 checkpoint boundary, full telemetry on) and resumes it from the snapshot:
 the resumed run must land bit-identical to the uninterrupted one AND its
 exported ``rounds.jsonl`` round log must byte-continue the crashed run's.
 
-Prints the scheduled-fault table, the per-run rejection/quorum counters,
-and exits non-zero if the guarded run diverges from the clean baseline
-beyond tolerance or the crash/resume round logs disagree (the CI chaos
-leg runs ``--smoke``).
+Prints the scheduled-fault table, the per-scenario rejection/quorum
+counters and the attack outcome, and exits non-zero if the guarded run
+diverges from the clean baseline beyond tolerance, the defense loses, or
+the crash/resume round logs disagree (the CI chaos leg runs ``--smoke``).
 
   PYTHONPATH=src python examples/chaos_round.py [--smoke]
 """
@@ -51,6 +61,17 @@ def build(smoke: bool):
     return common, plan
 
 
+# one scenario per guard mode: (label, config overrides, faulted?)
+GUARD_MODES = (
+    ("clean", dict(), False),
+    ("guard=off", dict(), True),
+    ("guard=reject", dict(guard=True, guard_reject_mult=5.0, quorum=1),
+     True),
+    ("guard=clip+reject", dict(guard=True, guard_clip=10.0,
+                               guard_reject_mult=5.0, quorum=1), True),
+)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true", help="small CI run")
@@ -63,24 +84,23 @@ def main(argv=None) -> int:
     print("=== scheduled faults (deterministic, seed=42) ===")
     print("  " + "  ".join(f"{k}={v}" for k, v in counts.items() if v))
 
-    print("\n=== 1/3 clean baseline ===")
-    clean = Simulator(SimConfig(**common)).run().summary()
-    print("\n=== 2/3 unguarded under faults ===")
-    raw = Simulator(SimConfig(**common),
-                    fault_plan=plan).run().summary()
-    print("\n=== 3/3 guarded under the identical faults ===")
-    grd = Simulator(SimConfig(guard=True, guard_reject_mult=5.0, quorum=1,
-                              **common),
-                    fault_plan=plan).run().summary()
+    runs = {}
+    for i, (label, extra, faulted) in enumerate(GUARD_MODES):
+        print(f"\n=== {i + 1}/{len(GUARD_MODES)} {label} ===")
+        runs[label] = Simulator(
+            SimConfig(**common, **extra),
+            fault_plan=plan if faulted else None).run().summary()
 
     print("\n--- outcome ---")
-    hdr = f"{'':12s}{'accuracy':>10s}{'rej_nonfin':>12s}{'rej_norm':>10s}{'quorum':>8s}"
+    hdr = (f"{'':20s}{'accuracy':>10s}{'rej_nonfin':>12s}{'rej_norm':>10s}"
+           f"{'quorum':>8s}")
     print(hdr)
-    for name, s in (("clean", clean), ("unguarded", raw), ("guarded", grd)):
-        print(f"{name:12s}{s['final_accuracy']:10.3f}"
+    for label, s in runs.items():
+        print(f"{label:20s}{s['final_accuracy']:10.3f}"
               f"{s['rejected_nonfinite']:12d}{s['rejected_norm']:10d}"
               f"{s['quorum_skips']:8d}")
 
+    clean, raw = runs["clean"], runs["guard=off"]
     if math.isfinite(raw["final_accuracy"]):
         print("\nunguarded run survived numerically "
               "(faults landed but did not poison the aggregate this seed)")
@@ -88,26 +108,68 @@ def main(argv=None) -> int:
         print("\nunguarded run was poisoned (non-finite accuracy) — "
               "exactly what the guard prevents")
 
-    gap = abs(grd["final_accuracy"] - clean["final_accuracy"])
-    rejected = grd["rejected_nonfinite"] + grd["rejected_norm"]
-    print(f"guarded run rejected {rejected} poisoned rows, skipped "
-          f"{grd['quorum_skips']} quorum-less applies, and landed within "
-          f"{gap:.3f} of the clean baseline (tolerance {args.tolerance})")
+    for label in ("guard=reject", "guard=clip+reject"):
+        grd = runs[label]
+        gap = abs(grd["final_accuracy"] - clean["final_accuracy"])
+        rejected = grd["rejected_nonfinite"] + grd["rejected_norm"]
+        print(f"{label}: rejected {rejected} poisoned rows, skipped "
+              f"{grd['quorum_skips']} quorum-less applies, landed within "
+              f"{gap:.3f} of clean (tolerance {args.tolerance})")
+        if not math.isfinite(grd["final_accuracy"]) or gap > args.tolerance:
+            print(f"FAIL: {label} diverged from the clean baseline",
+                  file=sys.stderr)
+            return 1
+        if rejected == 0:
+            print("FAIL: fault plan scheduled corruption but nothing was "
+                  "rejected", file=sys.stderr)
+            return 1
 
-    if not math.isfinite(grd["final_accuracy"]) or gap > args.tolerance:
-        print("FAIL: guarded run diverged from the clean baseline",
-              file=sys.stderr)
-        return 1
-    if rejected == 0:
-        print("FAIL: fault plan scheduled corruption but nothing was "
-              "rejected", file=sys.stderr)
+    print(f"\n=== {len(GUARD_MODES) + 1}/{len(GUARD_MODES) + 2} "
+          "coordinated attack: saa vs coord_median ===")
+    if not attacked_cohort_phase(args.smoke):
         return 1
 
-    print("\n=== 4/4 crash mid-run, resume, compare round logs ===")
+    print(f"\n=== {len(GUARD_MODES) + 2}/{len(GUARD_MODES) + 2} "
+          "crash mid-run, resume, compare round logs ===")
     if not crash_resume_round_log(common, plan):
         return 1
     print("OK")
     return 0
+
+
+def attacked_cohort_phase(smoke: bool) -> bool:
+    """Arm ``collude_signflip`` (seeded attacker sets, shared by both
+    cells — the attacker stream is independent of the schedule) and race
+    plain ``saa`` against the ``coord_median`` robust aggregator.  The
+    deadline setting keeps cohorts large enough that the scheduled
+    attacker fraction sits below the median's breakdown point, so the
+    expected winner is the defense — anything else is a regression."""
+    base = dict(n_learners=40 if smoke else 100,
+                rounds=10 if smoke else 40,
+                eval_every=5 if smoke else 10,
+                n_target=10, selector="priority", saa=True,
+                scaling_rule="relay", mapping="label_uniform", seed=0,
+                setting="DL", deadline=1e6,
+                attack="collude_signflip", attack_frac=0.1,
+                attack_scale=50.0)
+    under = Simulator(SimConfig(**base)).run().summary()
+    defended = Simulator(SimConfig(**base, aggregator="coord_median")) \
+        .run().summary()
+    print(f"{'saa (attacked)':20s}{under['final_accuracy']:10.3f}")
+    print(f"{'coord_median':20s}{defended['final_accuracy']:10.3f}"
+          f"   trimmed {defended['robust_trimmed']} rows")
+    if defended["robust_trimmed"] == 0:
+        print("FAIL: the robust aggregator never trimmed a row under a "
+              "live attack", file=sys.stderr)
+        return False
+    if defended["final_accuracy"] <= under["final_accuracy"]:
+        print("FAIL: unexpected winner — plain saa beat coord_median "
+              "under a coordinated attack", file=sys.stderr)
+        return False
+    print("coord_median held; undefended saa lost "
+          f"{defended['final_accuracy'] - under['final_accuracy']:.3f} "
+          "accuracy to the attack")
+    return True
 
 
 def crash_resume_round_log(common, plan) -> bool:

@@ -1,2 +1,4 @@
+from repro.faults.attacks import (ATTACK_KINDS, AttackSpec,  # noqa: F401
+                                  apply_attack, attack_key)
 from repro.faults.plan import (CORRUPTION_KINDS, KINDS,  # noqa: F401
                                FaultPlan, FaultSpec, InjectedCrash)

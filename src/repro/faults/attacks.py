@@ -1,0 +1,99 @@
+"""Coordinated (colluding) attack models for the chaos harness.
+
+PR-6 faults corrupt rows *independently*; an ``AttackSpec`` instead
+drives a seeded per-round attacker set (drawn by ``FaultPlan.with_attack``
+from its own RNG stream, so existing fault draws are untouched) whose
+rows are rewritten *jointly* at aggregation time.  The rewrite is a pure
+jnp formula applied to the post-psum ``(..., n, D)`` operand with the
+attacker/valid masks, shared verbatim by the fused round program, the
+per-stage sweep executor and the engine's flat/legacy paths — so an
+attack replays bit-identically on every substrate, like existing faults.
+
+Attack kinds (``SimConfig.attack``):
+
+* ``collude_signflip``   — attackers submit ``-scale * u_i``.
+* ``collude_same_value`` — attackers all submit one shared constant
+  vector of L2 norm ``scale`` (maximal collusion; defeats per-row
+  screens, shifts the mean together).
+* ``alie``               — "A Little Is Enough"-style: attackers submit
+  ``mu - z * sigma`` of the *honest* rows, a small coordinated nudge
+  that sits inside the honest empirical spread.
+* ``adaptive``           — under-the-norm-screen: attackers submit
+  ``-u_i`` rescaled to ``scale * sqrt(median honest ||u||^2)`` (the same
+  median convention the guard's norm screen uses), i.e. the largest
+  reversed update that a median-norm reject with
+  ``guard_reject_mult > scale`` will not flag.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+ATTACK_KINDS = ("none", "collude_signflip", "collude_same_value", "alie",
+                "adaptive")
+_EPS = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class AttackSpec:
+    """Static description of a coordinated attack (hashable; part of the
+    pipeline program key via ``attack_key``)."""
+    kind: str
+    frac: float = 0.25       # attacker fraction of the population, per round
+    scale: float = 10.0      # magnitude knob (see kind docs above)
+    z: float = 1.5           # alie sigma multiplier
+
+    def __post_init__(self):
+        if self.kind not in ATTACK_KINDS:
+            raise ValueError(f"unknown attack kind {self.kind!r} "
+                             f"(choose from {ATTACK_KINDS})")
+
+
+def attack_key(cfg) -> Optional[Tuple[str, float, float]]:
+    """Static attack descriptor for a ``SimConfig`` (None == no attack,
+    i.e. today's program — the static half of the bit-parity gate)."""
+    if cfg.attack == "none" or float(cfg.attack_frac) <= 0.0:
+        return None
+    if cfg.attack not in ATTACK_KINDS:
+        raise ValueError(f"unknown attack kind {cfg.attack!r} "
+                         f"(choose from {ATTACK_KINDS})")
+    return (cfg.attack, float(cfg.attack_scale), float(cfg.attack_z))
+
+
+def apply_attack(u: jnp.ndarray, att: jnp.ndarray, valid: jnp.ndarray, *,
+                 kind: str, scale: float, z: float) -> jnp.ndarray:
+    """Rewrite attacker rows of the aggregation operand.
+
+    ``u``: ``(..., n, D)`` update rows; ``att`` / ``valid``: ``(..., n)``
+    bool masks (``att`` marks columns whose learner is in this round's
+    attacker set).  Rows with ``att`` False pass through via ``where``
+    bit-exactly, so attack-free rounds of an attacked program stay
+    bit-identical to the clean program (the dynamic parity half).
+    """
+    attc = (att & valid)[..., None]
+    if kind == "collude_signflip":
+        return jnp.where(attc, -scale * u, u)
+    if kind == "collude_same_value":
+        d = u.shape[-1]
+        crafted = jnp.full(u.shape[-1:], scale / (d ** 0.5), u.dtype)
+        return jnp.where(attc, crafted, u)
+    honest = (valid & ~att)[..., None]
+    hcnt = jnp.maximum(jnp.sum(honest, axis=-2, keepdims=True), 1)
+    if kind == "alie":
+        mu = jnp.sum(jnp.where(honest, u, 0.0), axis=-2, keepdims=True) / hcnt
+        var = jnp.sum(jnp.where(honest, (u - mu) ** 2, 0.0), axis=-2,
+                      keepdims=True) / hcnt
+        crafted = mu - z * jnp.sqrt(var)
+        return jnp.where(attc, crafted, u)
+    if kind == "adaptive":
+        n2 = jnp.sum(u * u, axis=-1)
+        srt = jnp.sort(jnp.where(honest[..., 0], n2, jnp.inf), axis=-1)
+        h1 = hcnt[..., 0, 0]
+        med = jnp.take_along_axis(
+            srt, (jnp.maximum(h1, 1) - 1)[..., None] // 2, axis=-1)
+        target = scale * jnp.sqrt(jnp.maximum(med, 0.0))
+        rn = jnp.sqrt(jnp.maximum(n2, _EPS))[..., None]
+        return jnp.where(attc, -u * (target[..., None] / rn), u)
+    raise ValueError(f"unknown attack kind {kind!r}")

@@ -1,0 +1,1 @@
+from repro.kernels.trimmed_agg import ops, ref  # noqa: F401

@@ -1,0 +1,22 @@
+"""Padding wrapper for the trimmed-mean kernel (the entry every caller
+uses: the fused round body, the sweep executor, the engine host paths)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.trimmed_agg.trimmed_agg import (D_BLK,
+                                                   sweep_trimmed_aggregate
+                                                   as _kernel)
+
+
+def sweep_trimmed_aggregate(y, k_eff, c, *, interpret=None):
+    """y: (S, n, D) fp32 with excluded rows ``+inf``; k_eff / c: (S,)
+    int32.  Pads the feature axis to a ``D_BLK`` multiple (zero columns:
+    every valid row ties at 0, the band mean of zeros is 0) and truncates
+    it back.  Returns (S, D)."""
+    s, n, d = y.shape
+    pad = (-d) % D_BLK
+    if pad:
+        y = jnp.pad(y, ((0, 0), (0, 0), (0, pad)))
+    out = _kernel(y, k_eff, c, interpret=interpret)
+    return out[:, :d]

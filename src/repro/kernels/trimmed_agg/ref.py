@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the trimmed-mean kernel — delegates to the core
+robust module (the sort-based formula IS the reference semantics)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.robust.aggregators import trimmed_from_sorted
+
+
+def trimmed_ref(y, k_eff, c):
+    """Sort-based band mean for one cell: y (n, D), scalar k_eff / c."""
+    return trimmed_from_sorted(jnp.sort(y, axis=0), c, k_eff)
+
+
+def sweep_trimmed_ref(y, k_eff, c):
+    """Batched oracle: y (S, n, D), k_eff / c (S,) -> (S, D)."""
+    return jax.vmap(trimmed_ref)(y, k_eff, c)

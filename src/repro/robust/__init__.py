@@ -1,0 +1,14 @@
+"""Byzantine-resilient aggregation strategies (pluggable robust aggregators).
+
+``SimConfig.aggregator`` selects a strategy from ``ROBUST_AGGREGATORS``;
+``robust_key`` maps a config to the static program descriptor the fused
+round pipeline, the per-stage sweep executor and the engine's flat/legacy
+paths all share.  This is the repo's first strategy-plugin interface —
+the selector zoo (ROADMAP item 4) is meant to follow the same shape.
+"""
+from repro.robust.aggregators import (COORD_KINDS, MASK_KINDS,
+                                      ROBUST_AGGREGATORS, krum_select,
+                                      robust_key, trimmed_weighted_aggregate)
+
+__all__ = ["ROBUST_AGGREGATORS", "COORD_KINDS", "MASK_KINDS", "robust_key",
+           "krum_select", "trimmed_weighted_aggregate"]

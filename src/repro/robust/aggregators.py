@@ -1,0 +1,277 @@
+"""Robust aggregation strategies over the flat ``(n, D)`` update operand.
+
+Two strategy styles, both composed with SAA staleness weighting:
+
+* **mask-style** (``krum``, ``multi_krum``, ``norm_median_clip``): the
+  strategy computes a survivor mask over rows; the existing SAA
+  weights-and-aggregate runs on the survivors.  When the mask keeps every
+  valid row the result is bit-identical to plain SAA — that is the
+  dynamic half of the bit-parity gate.
+* **coordinate-wise** (``trimmed_mean``, ``coord_median``): SAA weights
+  ``w`` are computed over the valid rows, each row is rescaled to
+  ``y_i = c * w_i * u_i`` (``c`` = valid count, so the untrimmed mean of
+  ``y`` equals the SAA weighted aggregate), and a per-coordinate k-trimmed
+  mean of ``y`` is taken (robust-of-weighted).  ``coord_median`` is the
+  maximal trim ``k = (c-1)//2``.
+
+Every function here is a pure jnp formula shared verbatim by the fused
+round program (vmapped over groups), the per-stage sweep executor, and
+the engine's flat/legacy paths, so all substrates agree bitwise.
+
+Padding convention: invalid rows are excluded via the ``valid`` mask;
+for the coordinate-wise sort they are replaced by ``+inf`` so they land
+past the inclusion band ``[k, c-k)`` (appending ``+inf`` rows never
+changes which finite values the band selects).  ``NaN`` entries are
+scrubbed to ``+inf`` before the sort so the sort-based formula and the
+rank-based Pallas kernel agree on ordering.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import staleness as stale
+
+ROBUST_AGGREGATORS = ("saa", "coord_median", "trimmed_mean", "krum",
+                      "multi_krum", "norm_median_clip")
+MASK_KINDS = ("krum", "multi_krum", "norm_median_clip")
+COORD_KINDS = ("trimmed_mean", "coord_median")
+
+
+def robust_key(cfg) -> Optional[Tuple]:
+    """Static robust-program descriptor for a ``SimConfig``.
+
+    Returns ``None`` when the configured aggregator statically reduces to
+    the plain SAA program (``saa`` itself, ``trimmed_mean`` with
+    ``trim_k<=0``, ``norm_median_clip`` with both screen knobs unset) —
+    those configs compile to *today's* program, which is the static half
+    of the bit-parity gate.  Otherwise returns a hashable tuple of every
+    static parameter the robust program variant needs.
+    """
+    kind = cfg.aggregator
+    if kind == "saa":
+        return None
+    if kind == "trimmed_mean":
+        return None if int(cfg.trim_k) <= 0 else ("trimmed_mean",
+                                                  int(cfg.trim_k))
+    if kind == "coord_median":
+        return ("coord_median",)
+    if kind in ("krum", "multi_krum"):
+        if kind == "multi_krum" and int(cfg.krum_f) <= 0 \
+                and cfg.multi_krum_m is None:
+            return None       # m = c - 0 = c keeps every row: statically saa
+        m = 1 if kind == "krum" else (
+            None if cfg.multi_krum_m is None else int(cfg.multi_krum_m))
+        return (kind, int(cfg.krum_f), m)
+    if kind == "norm_median_clip":
+        if cfg.guard_clip is None and cfg.guard_reject_mult is None:
+            return None
+        return ("norm_median_clip",
+                None if cfg.guard_clip is None else float(cfg.guard_clip),
+                None if cfg.guard_reject_mult is None
+                else float(cfg.guard_reject_mult))
+    raise ValueError(f"unknown aggregator {kind!r} "
+                     f"(choose from {ROBUST_AGGREGATORS})")
+
+
+# -- mask-style ---------------------------------------------------------------
+
+def krum_select(u: jnp.ndarray, valid: jnp.ndarray, *, f: int,
+                m: Optional[int]) -> jnp.ndarray:
+    """(Multi-)Krum survivor mask for one cell.
+
+    ``u``: ``(n, D)`` rows, ``valid``: ``(n,)`` bool.  Score each valid row
+    by the sum of its ``max(c - f - 2, 1)`` smallest squared distances to
+    other valid rows (``c`` = valid count); keep the ``m`` best-scored rows
+    (``m=None`` → dynamic ``m = c - f``; ``m=1`` is classic Krum).  When
+    ``m >= c`` the mask equals ``valid`` — dynamic bit-parity with SAA.
+    """
+    n = u.shape[0]
+    sq = jnp.sum(u * u, axis=-1)
+    gram = u @ u.T
+    d = sq[:, None] + sq[None, :] - 2.0 * gram
+    idx = jnp.arange(n, dtype=jnp.int32)
+    pair = valid[:, None] & valid[None, :] & (idx[:, None] != idx[None, :])
+    # NaN distances (from nonfinite rows) must not poison sort order.
+    d = jnp.where(pair & jnp.isfinite(d), d, jnp.inf)
+    ds = jnp.sort(d, axis=1)
+    c = jnp.sum(valid.astype(jnp.int32))
+    kk = jnp.clip(c - int(f) - 2, 1, n)
+    col = jnp.arange(n, dtype=jnp.int32)[None, :]
+    score = jnp.sum(jnp.where((col < kk) & jnp.isfinite(ds), ds, 0.0), axis=1)
+    # Rows whose neighbour band ran past the finite distances score +inf.
+    short = jnp.sum(jnp.isfinite(ds).astype(jnp.int32), axis=1) < kk
+    score = jnp.where(valid & ~short, score, jnp.inf)
+    m_eff = jnp.clip(c - int(f) if m is None else int(m), 1, n)
+    # Rank with index tie-break; invalid rows tie-break behind every valid
+    # row so an all-+inf column of scores still selects valid rows first.
+    tie = jnp.where(valid, idx, idx + n)
+    rank = jnp.sum(((score[None, :] < score[:, None])
+                    | ((score[None, :] == score[:, None])
+                       & (tie[None, :] < tie[:, None]))).astype(jnp.int32),
+                   axis=1)
+    return valid & (rank < m_eff)
+
+
+# -- coordinate-wise ----------------------------------------------------------
+
+def weighted_rows(u: jnp.ndarray, fresh: jnp.ndarray, tau: jnp.ndarray,
+                  valid: jnp.ndarray, beta, rule_id):
+    """Rescale rows to ``y_i = c * w_i * u_i`` with SAA weights ``w``.
+
+    Invalid rows become ``+inf`` and NaNs are scrubbed to ``+inf`` so both
+    the sort-based formula and the rank-based kernel see one ordering.
+    Returns ``(y, c)`` with ``c`` the int32 valid count.
+    """
+    w = stale.staleness_weights_by_id(u, fresh, tau, rule_id,
+                                      beta=beta, valid=valid)
+    c = jnp.sum(valid.astype(jnp.int32))
+    y = c.astype(u.dtype) * w[:, None] * u
+    y = jnp.where(valid[:, None], y, jnp.inf)
+    return jnp.where(jnp.isnan(y), jnp.inf, y), c
+
+
+def trimmed_from_sorted(ys: jnp.ndarray, c, k_eff):
+    """Mean of the sorted column band ``[k_eff, c - k_eff)`` (shared by the
+    sort path and the kernel reference)."""
+    n = ys.shape[0]
+    ridx = jnp.arange(n, dtype=jnp.int32)[:, None]
+    include = (ridx >= k_eff) & (ridx < c - k_eff)
+    denom = jnp.maximum(c - 2 * k_eff, 1).astype(ys.dtype)
+    return jnp.sum(jnp.where(include, ys, 0.0), axis=0) / denom
+
+
+def trimmed_weighted_aggregate(u, fresh, tau, valid, beta, rule_id, *,
+                               trim_k: int, median: bool):
+    """Per-coordinate k-trimmed mean of the SAA-weighted rows for one cell.
+
+    ``median=True`` ignores ``trim_k`` and trims maximally
+    (``k = (c-1)//2``; even ``c`` averages the middle pair).  Returns
+    ``(aggregate (D,), n_trimmed int32)`` where ``n_trimmed = 2*k_eff``
+    counts rows excluded per coordinate band.
+    """
+    y, c = weighted_rows(u, fresh, tau, valid, beta, rule_id)
+    k_half = jnp.maximum((c - 1) // 2, 0)
+    k_eff = k_half if median else jnp.minimum(jnp.int32(trim_k), k_half)
+    out = trimmed_from_sorted(jnp.sort(y, axis=0), c, k_eff)
+    out = jnp.where(c > 0, out, 0.0)
+    return out, jnp.where(c > 0, 2 * k_eff, 0)
+
+
+# -- shared composition: attack -> guard -> robust -> aggregate ---------------
+#
+# One per-cell function every attacked/robust path runs: the fused round
+# body vmaps it over groups, ``robust_sweep_fn`` vmaps it over sweep cells,
+# and the engine's flat/legacy paths call the S=1 slice of the *same*
+# compiled sweep program — so all substrates share one set of numerics.
+# Robust/attacked configs always take the jnp weights path for the SAA
+# part (``SimConfig.use_agg_kernel`` only routes the coordinate-wise
+# statistic through the ``trimmed_agg`` Pallas kernel), keeping the
+# cross-substrate story simple; statically-inactive configs
+# (``robust_key``/``attack_key`` both None) never reach this code and
+# compile to today's program unchanged.
+
+def _robust_cell(u, fresh, tau, valid, att, beta, rule_id, *, attack, guard,
+                 robust, want_y):
+    """attack + screen + robust aggregate for one cell.
+
+    Returns ``(out, stats)`` with ``stats`` int32 ``(5,)``:
+    ``[n_nonfinite, n_norm_rejected, survivors, robust_rejected,
+    robust_trimmed]``.  ``want_y`` (static) returns the kernel operand
+    ``(y, k_eff, c)`` instead of the coordinate-wise aggregate so a caller
+    can run the trimmed kernel outside the vmap.
+    """
+    from repro.core import aggregation as agg
+    from repro.faults.attacks import apply_attack
+    zero = jnp.int32(0)
+    if attack is not None:
+        kind, scale, z = attack
+        u = apply_attack(u, att, valid, kind=kind, scale=scale, z=z)
+    n_nf = n_out = zero
+    if guard is not None:
+        clip, rej = guard
+        u, valid, n_nf, n_out, _ = agg.screen_rows(u, valid, clip=clip,
+                                                   reject_mult=rej)
+    rrej = rtrim = zero
+    coord = robust is not None and robust[0] in COORD_KINDS
+    if robust is not None and not coord:
+        if robust[0] in ("krum", "multi_krum"):
+            sel = krum_select(u, valid, f=robust[1], m=robust[2])
+            rrej = jnp.sum((valid & ~sel).astype(jnp.int32))
+            valid = sel
+        else:                                        # norm_median_clip
+            _, clip2, rej2 = robust
+            u, v2, nf2, out2, ncl2 = agg.screen_rows(u, valid, clip=clip2,
+                                                     reject_mult=rej2)
+            rrej, rtrim, valid = nf2 + out2, ncl2, v2
+
+    def stats(rt):
+        return jnp.stack([n_nf, n_out, jnp.sum(valid.astype(jnp.int32)),
+                          rrej, rt])
+
+    if coord:
+        median = robust[0] == "coord_median"
+        trim_k = 0 if median else robust[1]
+        if want_y:
+            y, c = weighted_rows(u, fresh, tau, valid, beta, rule_id)
+            k_half = jnp.maximum((c - 1) // 2, 0)
+            k_eff = k_half if median else jnp.minimum(jnp.int32(trim_k),
+                                                      k_half)
+            return (y, k_eff, c), stats(jnp.where(c > 0, 2 * k_eff, 0))
+        out, rt = trimmed_weighted_aggregate(u, fresh, tau, valid, beta,
+                                             rule_id, trim_k=trim_k,
+                                             median=median)
+        return out, stats(rt)
+    out, _ = agg.weights_and_aggregate_by_id(u, fresh, tau, valid, beta,
+                                             rule_id)
+    return out, stats(rtrim)
+
+
+@functools.lru_cache(maxsize=64)
+def robust_sweep_fn(attack, guard, robust, kernel: bool):
+    """Jitted sweep-axis program: ``(u (S,n,D), fresh, tau, valid, att
+    (S,n), beta (S,), rule_id (S,)) -> (agg (S,D), stats (S,5))``."""
+    coord = robust is not None and robust[0] in COORD_KINDS
+    base = functools.partial(_robust_cell, attack=attack, guard=guard,
+                             robust=robust, want_y=coord and kernel)
+    if not (coord and kernel):
+        return jax.jit(jax.vmap(base))
+
+    def f(u, fresh, tau, valid, att, beta, rule_id):
+        (y, k_eff, c), st = jax.vmap(base)(u, fresh, tau, valid, att, beta,
+                                           rule_id)
+        from repro.kernels.trimmed_agg import ops as tops
+        return tops.sweep_trimmed_aggregate(y, k_eff, c), st
+    return jax.jit(f)
+
+
+def robust_host_aggregate(stacked, fresh, tau, att, *, attack, guard, robust,
+                          use_kernel: bool, beta: float, rule: str,
+                          quorum: int = 1, bucketed: bool = True):
+    """Engine flat/legacy entry for attacked/robust rounds.
+
+    ``stacked``: (n, D) update rows; ``att``: (n,) attacker mask for this
+    round's operand.  Pads like the guarded path and runs the S=1 slice of
+    the shared sweep program.  Returns ``(agg (D,), info)``; ``applied`` is
+    the guard's quorum verdict (always True when ``guard`` is None).
+    """
+    from repro.core import aggregation as agg
+    n = int(np.shape(stacked)[0])
+    u, fr, ta, valid = agg.bucket_pad(stacked, fresh, tau, bucketed=bucketed)
+    am = np.zeros(len(valid), bool)
+    am[:n] = np.asarray(att, bool)
+    fn = robust_sweep_fn(attack, guard, robust, bool(use_kernel))
+    out, st = fn(u[None], fr[None], ta[None], valid[None], am[None],
+                 np.asarray([beta], np.float32),
+                 np.asarray([stale.RULE_ID[rule]], np.int32))
+    n_nf, n_out, survivors, rrej, rtrim = [int(x)
+                                           for x in jax.device_get(st[0])]
+    applied = guard is None or survivors >= max(int(quorum), 1)
+    info = {"nonfinite": n_nf, "norm": n_out, "survivors": survivors,
+            "applied": applied, "robust_rejected": rrej,
+            "robust_trimmed": rtrim}
+    return out[0], info

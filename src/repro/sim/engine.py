@@ -78,6 +78,8 @@ from repro.core.aggregation import (fedavg_apply, stale_synchronous_aggregate,
 from repro.core.apt import AdaptiveParticipantTarget
 from repro.core.availability import AvailabilityForecaster, ForecasterBank
 from repro.core.selection import SELECTORS, LearnerView, OortSelector, PrioritySelector
+from repro.faults.attacks import attack_key
+from repro.robust.aggregators import robust_host_aggregate, robust_key
 from repro.sim import devices as dev
 from repro.sim import learner as ln
 from repro.sim import partition as part
@@ -144,7 +146,26 @@ class SimConfig:
     n_learners: int = 200
     rounds: int = 200
     selector: str = "random"          # random | oort | priority | safa
-    aggregator: str = "fedavg"        # fedavg | yogi
+    server_opt: str = "fedavg"        # fedavg | yogi server optimizer (named
+                                      # `aggregator` before PR 8; old configs
+                                      # migrate in __post_init__)
+    aggregator: str = "saa"           # robust aggregation strategy: saa |
+                                      # coord_median | trimmed_mean | krum |
+                                      # multi_krum | norm_median_clip
+                                      # (repro.robust; saa = plain weighted
+                                      # path, the default and parity baseline)
+    trim_k: int = 1                   # trimmed_mean: rows trimmed per tail,
+                                      # per coordinate (0 = statically saa)
+    krum_f: int = 0                   # krum/multi_krum byzantine allowance f
+    multi_krum_m: Optional[int] = None  # multi_krum survivors (None = c - f)
+    attack: str = "none"              # coordinated attack: none |
+                                      # collude_signflip | collude_same_value
+                                      # | alie | adaptive (repro.faults.attacks;
+                                      # auto-attaches an AttackSpec to the
+                                      # fault plan)
+    attack_frac: float = 0.25         # attacker fraction of the population
+    attack_scale: float = 10.0        # attack magnitude knob
+    attack_z: float = 1.5             # alie sigma multiplier
     scaling_rule: str = "relay"       # equal | dynsgd | adasgd | relay
     beta: float = 0.35                # Eq. 2 averaging weight
     saa: bool = False                 # accept stale updates
@@ -195,6 +216,21 @@ class SimConfig:
                                       # the in-program round-stats lane +
                                       # per-round JSONL events.  Static in
                                       # pipeline_key (program structure)
+
+    def __post_init__(self):
+        # pre-PR-8 configs (and their snapshots) used `aggregator` for the
+        # server optimizer; migrate so old dicts keep working
+        if self.aggregator in ("fedavg", "yogi"):
+            self.server_opt = self.aggregator
+            self.aggregator = "saa"
+        from repro.faults.attacks import ATTACK_KINDS
+        from repro.robust import ROBUST_AGGREGATORS
+        if self.aggregator not in ROBUST_AGGREGATORS:
+            raise ValueError(f"unknown aggregator {self.aggregator!r} "
+                             f"(choose from {ROBUST_AGGREGATORS})")
+        if self.attack not in ATTACK_KINDS:
+            raise ValueError(f"unknown attack {self.attack!r} "
+                             f"(choose from {ATTACK_KINDS})")
 
 
 def substrate_key(cfg: SimConfig) -> tuple:
@@ -315,6 +351,21 @@ class Simulator:
                  fault_plan=None):
         self.cfg = cfg
         self.fault_plan = fault_plan  # repro.faults.FaultPlan or None
+        if cfg.attack != "none" and cfg.attack_frac > 0:
+            # auto-attach the coordinated attack to the fault plan; a
+            # restored plan already carries one (resume-safe), and the
+            # attacker stream is independent of the fault draws, so two
+            # cells differing only in aggregator share identical attacks
+            from repro.faults import AttackSpec, FaultPlan
+            plan = self.fault_plan
+            if plan is None:
+                plan = FaultPlan(cfg.n_learners, cfg.rounds, specs=(),
+                                 seed=cfg.seed)
+            if getattr(plan, "attack", None) is None:
+                plan = plan.with_attack(AttackSpec(
+                    cfg.attack, cfg.attack_frac, cfg.attack_scale,
+                    cfg.attack_z))
+            self.fault_plan = plan
         if substrate is None:
             substrate = Substrate.build(cfg)
         else:
@@ -348,12 +399,12 @@ class Simulator:
         if cfg.fast_path:
             self.flat_params = jnp.asarray(substrate.flat_params0)
             self.flat_opt_state = (yogi_init_flat(len(substrate.flat_params0))
-                                   if cfg.aggregator == "yogi" else None)
+                                   if cfg.server_opt == "yogi" else None)
             self.opt_state = None
         else:
             self.flat_params = None
             self.flat_opt_state = None
-            self.opt_state = yogi_init(self.params) if cfg.aggregator == "yogi" else None
+            self.opt_state = yogi_init(self.params) if cfg.server_opt == "yogi" else None
         self.acct = Accounting()
         self.stale_cache: list[_InFlight] = []
         self.busy_until = np.zeros(cfg.n_learners)  # device busy training/uploading
@@ -601,7 +652,9 @@ class Simulator:
         """Host post-step for the per-stage paths: schedule the round, apply
         selector feedback, then materialize the scheduled rows from the
         round's update values.  Returns (t_end, fresh_updates, stale_updates,
-        stale_taus)."""
+        stale_taus, agg_lids) where ``agg_lids`` are the learner ids behind
+        each aggregation-operand row, fresh first then landing stale (the
+        attack paths map them to the round's attacker set)."""
         cfg = self.cfg
         sched = self._schedule_round(r, plan)
         self._apply_feedback(r, sched, l2s)
@@ -621,7 +674,10 @@ class Simulator:
             self.stale_cache.append(_InFlight(lid, r, arr, dur, delta_i,
                                               self._stat_util(i, l2s)))
         stale_updates = [f.delta for f in sched.landing]
-        return sched.t_end, fresh_updates, stale_updates, sched.landing_taus
+        agg_lids = ([int(plan.chosen[i]) for i in sched.fresh_rows]
+                    + [f.learner_id for f in sched.landing])
+        return (sched.t_end, fresh_updates, stale_updates,
+                sched.landing_taus, agg_lids)
 
     def _corrupt_deltas(self, r: int, plan: RoundPlan, deltas):
         """Apply the fault plan's per-row update corruption (chaos harness).
@@ -642,12 +698,49 @@ class Simulator:
             lambda d: d * jnp.asarray(fscale).reshape((k,) + (1,) * (d.ndim - 1)),
             deltas)
 
-    def _aggregate(self, fresh_updates, stale_updates, stale_taus):
+    def _aggregate(self, r, agg_lids, fresh_updates, stale_updates,
+                   stale_taus):
         """Returns the aggregated delta, or None when the guard's quorum
         check rejects the round (caller carries params unchanged)."""
         cfg = self.cfg
         fresh_mask = [True] * len(fresh_updates) + [False] * len(stale_updates)
         taus = [0] * len(fresh_updates) + stale_taus
+        atk = attack_key(cfg)
+        rob = robust_key(cfg)
+        if atk is not None or rob is not None:
+            # attacked / robust route: one shared composition program
+            # (attack -> guard screen -> robust strategy -> SAA weights),
+            # the same per-cell numerics the fused pipeline and the batched
+            # sweep executor run.  Legacy trees flatten exactly as the
+            # guarded path does.
+            if cfg.fast_path:
+                stacked = np.stack(fresh_updates + stale_updates)
+                spec = None
+            else:
+                flats, spec = [], None
+                for t in fresh_updates + stale_updates:
+                    f, spec = agg.flatten_update(t)
+                    flats.append(f)
+                stacked = jnp.stack(flats)
+            att = (self.fault_plan.attack_flags(r, agg_lids)
+                   if atk is not None else np.zeros(len(fresh_mask), bool))
+            guard_desc = ((cfg.guard_clip, cfg.guard_reject_mult)
+                          if cfg.guard else None)
+            agg_out, info = robust_host_aggregate(
+                stacked, fresh_mask, taus, att, attack=atk, guard=guard_desc,
+                robust=rob, use_kernel=cfg.use_agg_kernel, beta=cfg.beta,
+                rule=cfg.scaling_rule, quorum=cfg.quorum,
+                bucketed=cfg.fast_path)
+            if cfg.guard:
+                self.acct.note_guard(info["nonfinite"], info["norm"],
+                                     info["applied"])
+            if rob is not None:
+                self.acct.note_robust(info["robust_rejected"],
+                                      info["robust_trimmed"])
+            if not info["applied"]:
+                return None
+            return agg_out if spec is None else unflatten_update(agg_out,
+                                                                 spec)
         if not cfg.guard:
             if cfg.fast_path:
                 stacked = np.stack(fresh_updates + stale_updates)
@@ -688,13 +781,13 @@ class Simulator:
         """Server optimizer step on the aggregated delta."""
         cfg = self.cfg
         if cfg.fast_path:
-            if cfg.aggregator == "yogi":
+            if cfg.server_opt == "yogi":
                 self.flat_params, self.flat_opt_state = _yogi_flat_fn()(
                     self.flat_params, agg_out, self.flat_opt_state)
             else:
                 self.flat_params = _flat_apply_fn()(self.flat_params, agg_out,
                                                     cfg.server_lr)
-        elif cfg.aggregator == "yogi":
+        elif cfg.server_opt == "yogi":
             self.params, self.opt_state = yogi_apply(self.params, agg_out,
                                                      self.opt_state)
         else:
@@ -872,10 +965,11 @@ class Simulator:
                     deltas, losses, l2s = self._train(plan)
                     deltas = self._corrupt_deltas(r, plan, deltas)
                 with telemetry.span("fetch", round=r):
-                    t_end, fresh_updates, stale_updates, stale_taus = \
+                    t_end, fresh_updates, stale_updates, stale_taus, \
+                        agg_lids = \
                         self._collect_updates(r, plan, deltas, losses, l2s)
                     if fresh_updates or stale_updates:
-                        agg_out = self._aggregate(fresh_updates,
+                        agg_out = self._aggregate(r, agg_lids, fresh_updates,
                                                   stale_updates, stale_taus)
                         if agg_out is not None:
                             self._apply_update(agg_out)

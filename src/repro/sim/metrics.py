@@ -34,6 +34,12 @@ class SimSummary(TypedDict):
     rejected_nonfinite: int      # guard: update rows rejected for NaN/Inf
     rejected_norm: int           # guard: rows rejected as norm outliers
     quorum_skips: int            # rounds whose server apply was skipped (quorum)
+    robust_rejected: int         # robust aggregator: rows rejected (krum /
+                                 # multi_krum losers, norm_median_clip rejects)
+    robust_trimmed: int          # robust aggregator: rows trimmed per
+                                 # coordinate band (trimmed_mean/coord_median
+                                 # 2*k_eff per round) or clipped
+                                 # (norm_median_clip)
 
 
 SUMMARY_KEYS = tuple(SimSummary.__annotations__)
@@ -63,6 +69,8 @@ class Accounting:
     rejected_nonfinite: int = 0   # guard: rows rejected for NaN/Inf values
     rejected_norm: int = 0        # guard: rows rejected as norm outliers
     quorum_skips: int = 0         # rounds where the apply was quorum-skipped
+    robust_rejected: int = 0      # robust aggregator: rows rejected
+    robust_trimmed: int = 0       # robust aggregator: rows trimmed/clipped
     round_events: List[dict] = dataclasses.field(default_factory=list)
     # ^ telemetry round log (SimConfig.telemetry >= 2): one pinned-schema
     #   event dict per recorded round (repro.telemetry.schema
@@ -75,6 +83,11 @@ class Accounting:
         self.rejected_norm += int(norm)
         if not applied:
             self.quorum_skips += 1
+
+    def note_robust(self, rejected: int, trimmed: int):
+        """Record one aggregation's robust-strategy outcome."""
+        self.robust_rejected += int(rejected)
+        self.robust_trimmed += int(trimmed)
 
     def charge(self, seconds: float, wasted: bool):
         self.resource_used += seconds
@@ -112,4 +125,6 @@ class Accounting:
             rejected_nonfinite=self.rejected_nonfinite,
             rejected_norm=self.rejected_norm,
             quorum_skips=self.quorum_skips,
+            robust_rejected=self.robust_rejected,
+            robust_trimmed=self.robust_trimmed,
         )

@@ -108,11 +108,16 @@ from repro.core.aggregation import (aggregate_updates, unflatten_update,
                                     yogi_apply_flat)
 from repro.core.stale_cache import DeviceStaleCache, ShardedSlotAccounts
 from repro.core.staleness import EPS, RULE_ID
+from repro.faults.attacks import apply_attack, attack_key
+from repro.robust.aggregators import (COORD_KINDS, krum_select, robust_key,
+                                      trimmed_weighted_aggregate,
+                                      weighted_rows)
 from repro.sim import learner as ln
 from repro.sim.participant_sharding import PART_AXIS, split_balanced
 from repro.telemetry import TelemetrySession
 from repro.telemetry.registry import CounterView, MetricsRegistry
-from repro.telemetry.schema import (DISPATCH_KINDS, LANE_WIDTH, N_LANE_HOST,
+from repro.telemetry.schema import (DISPATCH_KINDS, GUARD_COUNTERS,
+                                    LANE_WIDTH, N_LANE_HOST,
                                     PIPELINE_COUNTERS)
 
 ROW_BLOCK = 128   # packed participant-row padding bucket (bucket_block)
@@ -124,7 +129,8 @@ def pipeline_key(cfg) -> tuple:
     the compiled round program's static structure or the lockstep cadence.
     ``repro.sweeps.runner.compat_key`` groups cells by (a superset of) this."""
     return (cfg.benchmark, cfg.local_steps, cfg.local_batch, cfg.local_lr,
-            cfg.prox_mu, cfg.rounds, cfg.eval_every, cfg.aggregator,
+            cfg.prox_mu, cfg.rounds, cfg.eval_every, cfg.server_opt,
+            robust_key(cfg), attack_key(cfg),
             cfg.use_agg_kernel,
             cfg.scaling_rule if cfg.use_agg_kernel else None,
             cfg.rounds_per_dispatch, cfg.shard_participants,
@@ -146,7 +152,9 @@ class PipelineStats:
     sweep-wide total.
     """
 
-    GUARD_KEYS = ("rejected_nonfinite", "rejected_norm", "quorum_skips")
+    # derived from the telemetry schema so a counter added there (e.g. the
+    # robust-aggregator rejections) can never be silently dropped here
+    GUARD_KEYS = tuple(k[len("guard_"):] for k in GUARD_COUNTERS)
 
     def __init__(self, registry: Optional[MetricsRegistry] = None,
                  n_shards: int = 1, n_pshards: int = 1):
@@ -209,7 +217,8 @@ class PipelineStats:
 
 def _round_body(params, cache, opt_state, x_tr, y_tr, ints, floats, shapes,
                 *, train_unit, steps, batch, yogi, use_kernel, kernel_rule,
-                single, p_axis=None, guard=None, faulty=False, lane=False):
+                single, p_axis=None, guard=None, faulty=False, lane=False,
+                attack=None, robust=None):
     """One round's device work on one (local) params/cache block.
 
     params: (rows, D) — cell rows plus one scratch row; cache: (C + 1, D)
@@ -235,10 +244,25 @@ def _round_body(params, cache, opt_state, x_tr, y_tr, ints, floats, shapes,
     per-row fp32 corruption multiplier to the floats buffer, applied to
     the delta rows between training and the cache scatter — fault
     injection without any extra transfer or collective.  The last two
-    outputs are a (G, 4) int32 guard-stats block
-    [rejected_nonfinite, rejected_norm, survivors, applied] (zeros when
-    unguarded) and the telemetry round-stats lane; both are p-replicated
-    like everything after the psum.
+    outputs are a (G, 6) int32 stats block [rejected_nonfinite,
+    rejected_norm, survivors, applied, robust_rejected, robust_trimmed]
+    (zeros when unguarded/non-robust) and the telemetry round-stats lane;
+    both are p-replicated like everything after the psum.
+
+    ``attack`` (static, ``repro.faults.attacks.attack_key``) appends a
+    per-group attacker mask to the ints buffer and rewrites the attacker
+    rows of the post-psum operand *before* the lane stats and the guard
+    screen (``apply_attack`` — the same formula every host path runs); a
+    round with no scheduled attackers passes through bit-exactly.
+    ``robust`` (static, ``repro.robust.aggregators.robust_key``) runs the
+    robust aggregator: mask-style kinds shrink ``agg_valid`` before the
+    SAA weights pass, coordinate-wise kinds replace it with the trimmed
+    mean of the SAA-weighted rows (robust-of-weighted; the numerics of
+    ``repro.robust.aggregators._robust_cell``, vmapped over groups).
+    When either is active the staleness-agg Pallas kernel is bypassed —
+    ``use_kernel`` then only routes the coordinate-wise statistic through
+    the ``trimmed_agg`` kernel.  Both default to None, leaving the
+    compiled program untouched (the static bit-parity half).
 
     ``lane`` (static, ``SimConfig.telemetry >= 2``) emits a per-group
     fp32 stats row (``telemetry.schema.LANE_FIELDS``): the host-known
@@ -273,6 +297,8 @@ def _round_body(params, cache, opt_state, x_tr, y_tr, ints, floats, shapes,
     agg_valid = take(g_b * n_b, (g_b, n_b), bool)
     agg_mask = take(g_b * n_b, (g_b, n_b), bool)
     has_g = take(g_b, None, bool)
+    agg_att = (take(g_b * n_b, (g_b, n_b), bool) if attack is not None
+               else None)
     beta_g, lr_g = floats[:g_b], floats[g_b:2 * g_b]
 
     # --- train: gather batches + per-row params, one vmapped call ---
@@ -317,6 +343,14 @@ def _round_body(params, cache, opt_state, x_tr, y_tr, ints, floats, shapes,
             us = jnp.where(agg_valid[:, nf_b:, None], us, 0.0)
         u = jnp.concatenate([uf, us], axis=1)
 
+    if attack is not None:
+        # coordinated attack: rewrite the attacker rows of the post-psum
+        # operand (pre-lane, pre-screen — the lane and the guard both see
+        # what the server would see)
+        atk_kind, atk_scale, atk_z = attack
+        u = apply_attack(u, agg_att, agg_valid, kind=atk_kind,
+                         scale=atk_scale, z=atk_z)
+
     if lane:
         # telemetry lane, device half: row-norm stats over the *pre-screen*
         # operand, post-psum (p-replicated, no extra collective).  Finite
@@ -339,42 +373,41 @@ def _round_body(params, cache, opt_state, x_tr, y_tr, ints, floats, shapes,
             / jnp.maximum(cnt, 1).astype(jnp.float32), 0.0)
         lane_nonfin = (agg_valid & ~row_fin).sum(axis=-1)
 
-    # --- guard screening (static: unguarded programs are untouched) --
-    gstats = jnp.zeros((g_b, 4), jnp.int32)
+    # --- guard screening + robust mask step (static: plain programs
+    # are untouched) --------------------------------------------------
+    zeros_g = jnp.zeros(g_b, jnp.int32)
+    n_nf = n_out = rrej = rtrim = zeros_g
     if guard is not None:
         clip_g, mult_g, quorum_g = guard
         u, v2, n_nf, n_out, _ = agg.screen_rows(u, agg_valid, clip=clip_g,
                                                 reject_mult=mult_g)
         agg_valid = v2
-        survivors = v2.sum(axis=-1).astype(jnp.int32)
-        has_eff = has_g & (survivors >= quorum_g)
-        gstats = jnp.stack([n_nf, n_out, survivors,
-                            has_eff.astype(jnp.int32)], axis=1)
-    else:
-        has_eff = has_g
-
-    if lane:
-        # assemble the lane row: host pass-through head (echoed from the
-        # floats buffer), device norm stats, guard tail (agg_valid is the
-        # post-screen survivor mask here; unguarded it is unchanged)
-        host_off = 2 * g_b + (r_b if faulty else 0)
-        lane_host = floats[host_off:host_off + g_b * N_LANE_HOST] \
-            .reshape(g_b, N_LANE_HOST)
-        lanes = jnp.concatenate([
-            lane_host,
-            jnp.stack([l2_min, l2_mean, l2_max,
-                       lane_nonfin.astype(jnp.float32)], axis=1),
-            gstats[:, :2].astype(jnp.float32),
-            jnp.stack([agg_valid.sum(axis=-1).astype(jnp.float32),
-                       has_eff.astype(jnp.float32)], axis=1),
-        ], axis=1)
-    else:
-        # zero-width block keeps the program signature uniform at no cost
-        lanes = jnp.zeros((g_b, 0), jnp.float32)
+    robust_coord = robust is not None and robust[0] in COORD_KINDS
+    if robust is not None and not robust_coord:
+        # mask-style robust kinds shrink the survivor mask before the
+        # SAA weights pass (repro.robust.aggregators._robust_cell order:
+        # attack -> guard screen -> robust mask -> weights)
+        if robust[0] in ("krum", "multi_krum"):
+            sel = jax.vmap(functools.partial(
+                krum_select, f=robust[1], m=robust[2]))(u, agg_valid)
+            rrej = (agg_valid & ~sel).sum(axis=-1).astype(jnp.int32)
+            agg_valid = sel
+        else:                                        # norm_median_clip
+            _, clip_r, mult_r = robust
+            u, v2, nf2, out2, ncl2 = agg.screen_rows(
+                u, agg_valid, clip=clip_r, reject_mult=mult_r)
+            rrej, rtrim, agg_valid = nf2 + out2, ncl2, v2
+    survivors = agg_valid.sum(axis=-1).astype(jnp.int32)
+    has_eff = (has_g & (survivors >= quorum_g) if guard is not None
+               else has_g)
 
     # --- SAA weights + aggregate + server apply ----------------------
     rows_old = params[agg_cell]                       # (G, D)
-    if use_kernel:
+    # robust/attacked programs always take the jnp weights path for the
+    # SAA part; use_kernel then only routes the coordinate-wise trim
+    # through the trimmed_agg kernel (one cross-substrate story)
+    saa_kernel = use_kernel and attack is None and robust is None
+    if saa_kernel:
         from repro.kernels.staleness_agg.staleness_agg import (
             D_BLK, sweep_fused_staleness_apply,
             sweep_fused_staleness_aggregate)
@@ -392,21 +425,69 @@ def _round_body(params, cache, opt_state, x_tr, y_tr, ints, floats, shapes,
                 jnp.pad(rows_old, ((0, 0), (0, pad))), up, agg_fresh,
                 agg_tau, agg_valid, scal, rule=kernel_rule)
             new_rows = new_rows[:, :d]
+    elif robust_coord:
+        # robust-of-weighted: per-coordinate trimmed mean of the SAA-
+        # weighted rows (trimmed_weighted_aggregate's formula, vmapped)
+        median = robust[0] == "coord_median"
+        tk = 0 if median else robust[1]
+        if use_kernel:
+            from repro.kernels.trimmed_agg import ops as tops
+            y, cc = jax.vmap(weighted_rows)(u, agg_fresh, agg_tau,
+                                            agg_valid, beta_g, rule_id)
+            k_half = jnp.maximum((cc - 1) // 2, 0)
+            k_eff = (k_half if median
+                     else jnp.minimum(jnp.int32(tk), k_half))
+            agg_out = tops.sweep_trimmed_aggregate(y, k_eff, cc)
+            agg_out = jnp.where((cc > 0)[:, None], agg_out, 0.0)
+            rtrim = jnp.where(cc > 0, 2 * k_eff, 0)
+        else:
+            agg_out, rtrim = jax.vmap(functools.partial(
+                trimmed_weighted_aggregate, trim_k=tk, median=median))(
+                u, agg_fresh, agg_tau, agg_valid, beta_g, rule_id)
     elif ns_b == 0:
         # no stale rows anywhere this round: Eq. 2 degenerates to the
         # fresh average, so skip the deviation pass entirely.  The
         # weight vector is bit-identical to the general path's (fresh
         # rows weigh 1, padding weighs 0, same normalization).  Under a
-        # guard, rejected fresh rows must weigh 0 too (agg_valid is the
-        # post-screen survivor mask; without faults it covers every
-        # fresh column, so the bits are unchanged).
+        # guard or a mask-style robust kind, rejected fresh rows must
+        # weigh 0 too (agg_valid is the post-screen survivor mask;
+        # without faults it covers every fresh column, so the bits are
+        # unchanged).
         w = ((agg_fresh & agg_valid).astype(jnp.float32)
-             if guard is not None else agg_fresh.astype(jnp.float32))
+             if guard is not None or robust is not None
+             else agg_fresh.astype(jnp.float32))
         w = w / jnp.maximum(w.sum(axis=1, keepdims=True), EPS)
         agg_out = jax.vmap(aggregate_updates)(u, w)
     else:
         agg_out, _ = jax.vmap(weights_and_aggregate_by_id)(
             u, agg_fresh, agg_tau, agg_valid, beta_g, rule_id)
+
+    # --- stats block + lane assembly ---------------------------------
+    if guard is not None or robust is not None:
+        gstats = jnp.stack([n_nf, n_out, survivors,
+                            has_eff.astype(jnp.int32), rrej, rtrim], axis=1)
+    else:
+        gstats = jnp.zeros((g_b, 6), jnp.int32)
+    if lane:
+        # assemble the lane row: host pass-through head (echoed from the
+        # floats buffer), device norm stats, guard + robust tail
+        # (agg_valid is the post-screen/post-mask survivor mask here;
+        # plain programs leave it unchanged)
+        host_off = 2 * g_b + (r_b if faulty else 0)
+        lane_host = floats[host_off:host_off + g_b * N_LANE_HOST] \
+            .reshape(g_b, N_LANE_HOST)
+        lanes = jnp.concatenate([
+            lane_host,
+            jnp.stack([l2_min, l2_mean, l2_max,
+                       lane_nonfin.astype(jnp.float32)], axis=1),
+            jnp.stack([n_nf, n_out, rrej, rtrim],
+                      axis=1).astype(jnp.float32),
+            jnp.stack([agg_valid.sum(axis=-1).astype(jnp.float32),
+                       has_eff.astype(jnp.float32)], axis=1),
+        ], axis=1)
+    else:
+        # zero-width block keeps the program signature uniform at no cost
+        lanes = jnp.zeros((g_b, 0), jnp.float32)
     if yogi:
         state_rows = jax.tree.map(lambda s: s[agg_cell], opt_state)
         new_rows, new_state = jax.vmap(yogi_apply_flat)(
@@ -416,7 +497,7 @@ def _round_body(params, cache, opt_state, x_tr, y_tr, ints, floats, shapes,
         opt_state = jax.tree.map(
             lambda s, ns, os: s.at[agg_cell].set(keep(ns, os)),
             opt_state, new_state, state_rows)
-    elif not use_kernel:
+    elif not saa_kernel:
         new_rows = rows_old + lr_g[:, None] * agg_out
     # quorum failures (has_eff < has_g) carry the old rows unchanged
     new_rows = jnp.where(has_eff[:, None], new_rows, rows_old)
@@ -426,7 +507,7 @@ def _round_body(params, cache, opt_state, x_tr, y_tr, ints, floats, shapes,
 
 @functools.lru_cache(maxsize=16)
 def _chunk_program(spec, lr, prox_mu, steps, batch, yogi, use_kernel,
-                   kernel_rule, guard, faulty, lane, single):
+                   kernel_rule, guard, faulty, lane, attack, robust, single):
     """K-round chunk program (unsharded): ``lax.scan`` of the round body
     with the donated params/cache/optimizer buffers as the scan carry and
     the K prescheduled rounds' index arrays as the scanned inputs.  One
@@ -446,7 +527,8 @@ def _chunk_program(spec, lr, prox_mu, steps, batch, yogi, use_kernel,
     body = functools.partial(_round_body, train_unit=train_unit, steps=steps,
                              batch=batch, yogi=yogi, use_kernel=use_kernel,
                              kernel_rule=kernel_rule, guard=guard,
-                             faulty=faulty, lane=lane, single=single)
+                             faulty=faulty, lane=lane, attack=attack,
+                             robust=robust, single=single)
 
     def prog(params, cache, opt_state, x_tr, y_tr, ints_k, floats_k, shapes):
         def step(carry, xs):
@@ -464,7 +546,8 @@ def _chunk_program(spec, lr, prox_mu, steps, batch, yogi, use_kernel,
 
 @functools.lru_cache(maxsize=16)
 def _sharded_chunk_program(spec, lr, prox_mu, steps, batch, yogi, use_kernel,
-                           kernel_rule, guard, faulty, lane, mesh):
+                           kernel_rule, guard, faulty, lane, attack, robust,
+                           mesh):
     """K-round chunk program sharded over the 2-D ``("s", "p")`` round
     mesh: ``shard_map`` with the chunk scan inside.  Each (s, p) device
     owns its s-block's ``(s_loc + 1, D)`` params rows (replicated along
@@ -482,8 +565,8 @@ def _sharded_chunk_program(spec, lr, prox_mu, steps, batch, yogi, use_kernel,
     body = functools.partial(_round_body, train_unit=train_unit, steps=steps,
                              batch=batch, yogi=yogi, use_kernel=use_kernel,
                              kernel_rule=kernel_rule, guard=guard,
-                             faulty=faulty, lane=lane, single=False,
-                             p_axis=PART_AXIS)
+                             faulty=faulty, lane=lane, attack=attack,
+                             robust=robust, single=False, p_axis=PART_AXIS)
     opt_spec = ({"m": P("s"), "v": P("s"), "t": P("s")} if yogi else None)
 
     def prog(params3, cache3, opt_state, x_tr, y_tr, ints3, floats3, shapes):
@@ -610,7 +693,7 @@ class RoundPipeline:
         self._lane = int(cfg0.telemetry) >= 2
         self.spec = sims[0]._flat_spec
         self.d = agg.flat_dim(self.spec)
-        self.yogi = cfg0.aggregator == "yogi"
+        self.yogi = cfg0.server_opt == "yogi"
         if mesh is None and cfg0.shard_participants:
             from repro.sim.participant_sharding import participant_mesh
             mesh = participant_mesh(cfg0.shard_participants)
@@ -721,10 +804,15 @@ class RoundPipeline:
         self._faulty = any(
             sim.fault_plan is not None and sim.fault_plan.has_corruption
             for sim in sims)
+        # robust aggregation / coordinated attacks are static program
+        # structure like the guard (pipeline_key keeps batches uniform)
+        self._attack = attack_key(cfg0)
+        self._robust = robust_key(cfg0)
         prog_args = (self.spec, cfg0.local_lr, cfg0.prox_mu, cfg0.local_steps,
                      cfg0.local_batch, self.yogi, cfg0.use_agg_kernel,
                      cfg0.scaling_rule if cfg0.use_agg_kernel else None,
-                     self._guard, self._faulty, self._lane)
+                     self._guard, self._faulty, self._lane,
+                     self._attack, self._robust)
         if self.mesh is not None:
             self._prog = _sharded_chunk_program(*prog_args, mesh)
         else:
@@ -1004,6 +1092,8 @@ class RoundPipeline:
                 has_g = np.zeros(g_b, np.int32)
                 beta_g = np.zeros(g_b, np.float32)
                 lr_g = np.zeros(g_b, np.float32)
+                agg_att = (np.zeros((g_b, n_b), np.int32)
+                           if self._attack is not None else None)
                 for g, i in enumerate(groups):
                     sc, cfg = w.scheds[i], sims[i].cfg
                     for col in range(len(sc.fresh_rows)):
@@ -1012,6 +1102,17 @@ class RoundPipeline:
                     for col, tau in enumerate(sc.landing_taus):
                         agg_tau[g, nf_b + col] = tau
                         agg_valid[g, nf_b + col] = 1
+                    if agg_att is not None and sims[i].fault_plan is not None:
+                        # per-column attacker flags by learner id: a stale
+                        # column is flagged for the round the update LANDS
+                        # (the server can only ever see landed rows)
+                        n_fr = len(sc.fresh_rows)
+                        lids = ([int(w.plans[i].chosen[ri])
+                                 for ri in sc.fresh_rows]
+                                + [f.learner_id for f in sc.landing])
+                        fl = sims[i].fault_plan.attack_flags(w.r, lids)
+                        agg_att[g, :n_fr] = fl[:n_fr]
+                        agg_att[g, nf_b:nf_b + len(sc.landing)] = fl[n_fr:]
                     agg_cell[g] = slot_of(i)
                     rule_id[g] = RULE_ID[cfg.scaling_rule]
                     beta_g[g] = cfg.beta
@@ -1100,12 +1201,16 @@ class RoundPipeline:
                         batch_q[q][nloc_q[q]:] = batch_q[q][0]
                         rcell_q[q][nloc_q[q]:] = rcell_q[q][0]
                         rsub_q[q][nloc_q[q]:] = rsub_q[q][0]
-                    per_shard.append(np.concatenate(
-                        [batch_q[q].ravel(), rcell_q[q], rsub_q[q],
-                         scat_q[q], agg_cell, fr_q[q].ravel(),
-                         sl_q[q].ravel(), agg_tau.ravel(), rule_id,
-                         agg_fresh.ravel(), agg_valid.ravel(),
-                         mask_q[q].ravel(), has_g]))
+                    ints_parts = [batch_q[q].ravel(), rcell_q[q], rsub_q[q],
+                                  scat_q[q], agg_cell, fr_q[q].ravel(),
+                                  sl_q[q].ravel(), agg_tau.ravel(), rule_id,
+                                  agg_fresh.ravel(), agg_valid.ravel(),
+                                  mask_q[q].ravel(), has_g]
+                    if agg_att is not None:
+                        # attacker flags ride the ints buffer, p-replicated
+                        # like the rest of the group metadata
+                        ints_parts.append(agg_att.ravel())
+                    per_shard.append(np.concatenate(ints_parts))
                     parts = [floats_j]
                     if self._faulty:
                         parts.append(fscale_q[q])
@@ -1174,29 +1279,33 @@ class RoundPipeline:
         else:
             self.cache_rows = cache_rows
 
-        # --- guard-stats attribution (guarded programs only) --------------
+        # --- guard/robust-stats attribution (active programs only) -------
         lane_np = None
         with self.telemetry.span("fetch"):
-            if self._guard is not None:
+            if self._guard is not None or self._robust is not None:
                 g_np = np.asarray(jax.device_get(gstats))
                 self.stats.d2h_bytes += g_np.nbytes
                 g_b = shapes[2]
                 for k_idx, w in enumerate(works):
-                    # unsharded: (g_b, 4); sharded: (nflat * g_b, 4) with
+                    # unsharded: (g_b, 6); sharded: (nflat * g_b, 6) with
                     # flat shard f = j * n_p + q owning [f*g_b, (f+1)*g_b)
                     # — gstats are p-replicated: read each group's q=0 copy
-                    flat = g_np[k_idx].reshape(-1, 4)
+                    flat = g_np[k_idx].reshape(-1, 6)
                     for j in range(self.n_shards):
                         for g, i in enumerate(gmaps[(k_idx, j)]):
-                            nf, nnorm, _surv, applied = (
+                            nf, nnorm, _surv, applied, rrej, rtrim = (
                                 int(x) for x in
                                 flat[(j * self.n_pshards) * g_b + g])
-                            # single writer for guard accounting: the
-                            # session increments the registry counters
+                            # single writer for guard/robust accounting:
+                            # the session increments the registry counters
                             # (stats.guard is a view) and forwards to the
                             # per-sim Accounting
-                            self.telemetry.note_guard(sims[i].acct, nf,
-                                                      nnorm, bool(applied))
+                            if self._guard is not None:
+                                self.telemetry.note_guard(
+                                    sims[i].acct, nf, nnorm, bool(applied))
+                            if self._robust is not None:
+                                self.telemetry.note_robust(
+                                    sims[i].acct, rrej, rtrim)
 
             if self._lane:
                 lane_np = np.asarray(jax.device_get(lanes))

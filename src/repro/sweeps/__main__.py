@@ -64,6 +64,17 @@ def main(argv=None) -> None:
                     help="run at full telemetry (level 2) and export the run "
                          "timeline there: rounds.jsonl / events.jsonl, "
                          "trace.json (Perfetto), metrics.prom")
+    ap.add_argument("--aggregator", default=None, metavar="A,B",
+                    help="add a robust-aggregator sweep axis (comma list "
+                         "from saa, coord_median, trimmed_mean, krum, "
+                         "multi_krum, norm_median_clip)")
+    ap.add_argument("--attack", default=None, metavar="X,Y",
+                    help="add a coordinated-attack sweep axis (comma list "
+                         "from none, collude_signflip, collude_same_value, "
+                         "alie, adaptive); attacked and clean cells share "
+                         "seeds, so every comparison is matched-condition")
+    ap.add_argument("--attack-frac", type=float, default=0.25,
+                    help="attacker fraction of the population (with --attack)")
     args = ap.parse_args(argv)
 
     telemetry = None
@@ -94,6 +105,18 @@ def _run(args, telemetry) -> None:
         return
 
     spec = demo_spec(args.smoke)
+    # --aggregator / --attack extend the grid: both are raw SimConfig
+    # fields, so they ride the grid's field-axis fallthrough and inherit
+    # shared-seed pairing (attack x defense cells see identical cohorts)
+    if args.aggregator:
+        kinds = args.aggregator.split(",")
+        spec.axes = dict(spec.axes, aggregator=kinds)
+        if any(k in ("krum", "multi_krum") for k in kinds):
+            spec.base = dict(spec.base, krum_f=max(
+                int(dict(spec.base).get("krum_f", 0)), 1))
+    if args.attack:
+        spec.axes = dict(spec.axes, attack=args.attack.split(","))
+        spec.base = dict(spec.base, attack_frac=args.attack_frac)
     cells = spec.expand()
     if args.rounds_per_dispatch != 1:
         cells = [dataclasses.replace(c, config=dataclasses.replace(

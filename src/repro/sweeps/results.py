@@ -113,10 +113,28 @@ class SweepResults:
         return rows
 
     def guard_totals(self) -> dict:
-        """Sweep-wide guarded-aggregation counters (chaos harness): total
-        rejected rows and quorum-skipped applies across every cell."""
-        keys = ("rejected_nonfinite", "rejected_norm", "quorum_skips")
-        return {k: int(sum(r.summary[k] for r in self.results)) for k in keys}
+        """Sweep-wide guard / robust-aggregation counters (chaos harness).
+
+        Keys come from ``PipelineStats.GUARD_KEYS`` (itself derived from the
+        telemetry schema, so a counter added there shows up here too).  A
+        key is present only when some cell actually enables the feature —
+        the guard for the screen/quorum counters, a robust aggregator for
+        the ``robust_*`` counters.  A sweep with the feature off reports
+        the key *absent* rather than a silent 0, so "0 rejections" can
+        never be confused with "nothing was ever screened".
+        """
+        from repro.robust.aggregators import robust_key
+        from repro.sim.pipeline import PipelineStats
+        out = {}
+        for k in PipelineStats.GUARD_KEYS:
+            if k.startswith("robust_"):
+                on = any(robust_key(r.cell.config) is not None
+                         for r in self.results)
+            else:
+                on = any(r.cell.config.guard for r in self.results)
+            if on:
+                out[k] = int(sum(r.summary[k] for r in self.results))
+        return out
 
     def round_logs(self) -> dict:
         """{cell name: telemetry round-event list} for cells that carried a

@@ -47,6 +47,9 @@ import numpy as np
 
 from repro.core import aggregation as agg
 from repro.core.aggregation import unflatten_update, yogi_apply_flat
+from repro.core.staleness import RULE_ID
+from repro.faults.attacks import attack_key
+from repro.robust.aggregators import robust_key, robust_sweep_fn
 from repro.sim import learner as ln
 from repro.sim.engine import Simulator, Substrate, substrate_key
 from repro.sim.pipeline import RoundPipeline, pipeline_key
@@ -256,7 +259,7 @@ class SweepRunner:
         eval_fn = _sweep_eval_shared_fn(spec)
         eval_fn_mixed = _sweep_eval_fn(spec)
         flat_params = jnp.stack([sim.flat_params for sim in sims])
-        yogi = cfg0.aggregator == "yogi"
+        yogi = cfg0.server_opt == "yogi"
         opt_state = (jax.tree.map(lambda *xs: jnp.stack(xs),
                                   *[sim.flat_opt_state for sim in sims])
                      if yogi else None)
@@ -309,13 +312,14 @@ class SweepRunner:
             # --- per-cell host logic + update collection --------------
             tails = {}
             cell_updates = [None] * s_total
+            cell_lids = {}
             off = 0
             for i in live:
                 p = plans[i]
                 sl = slice(off, off + p.k)
                 off += p.k
                 d_i = sims[i]._corrupt_deltas(r, p, deltas[sl])
-                t_end, fresh_up, stale_up, stale_taus = \
+                t_end, fresh_up, stale_up, stale_taus, agg_lids = \
                     sims[i]._collect_updates(r, p, d_i, losses[sl],
                                              l2s[sl])
                 tails[i] = (t_end, len(fresh_up), len(stale_up))
@@ -324,9 +328,50 @@ class SweepRunner:
                         fresh_up + stale_up,
                         [True] * len(fresh_up) + [False] * len(stale_up),
                         [0] * len(fresh_up) + stale_taus)
+                    cell_lids[i] = agg_lids
 
             # --- batched aggregation + server step --------------------
-            if any(c is not None for c in cell_updates):
+            atk = attack_key(cfg0)          # uniform within a compat batch
+            rob = robust_key(cfg0)
+            if any(c is not None for c in cell_updates) and (
+                    atk is not None or rob is not None):
+                # attacked / robust route: the S=N slice of the same
+                # compiled program the engine's flat path runs per cell
+                # (repro.robust.aggregators — one set of numerics)
+                u, fresh, tau, valid, has = agg.sweep_bucket_pad(
+                    cell_updates, d)
+                att = np.zeros(np.shape(valid), bool)
+                for i, lids in cell_lids.items():
+                    fp = sims[i].fault_plan
+                    if fp is not None:
+                        att[i, :len(lids)] = fp.attack_flags(r, lids)
+                guard_desc = ((cfg0.guard_clip, cfg0.guard_reject_mult)
+                              if cfg0.guard else None)
+                fn = robust_sweep_fn(atk, guard_desc, rob,
+                                     bool(cfg0.use_agg_kernel))
+                rule_ids = np.asarray(
+                    [RULE_ID[cfg.scaling_rule] for cfg in cfgs], np.int32)
+                agg_out, st = fn(u, fresh, tau, valid, att, beta, rule_ids)
+                st = np.asarray(jax.device_get(st))
+                if cfg0.guard:
+                    applied = has & (st[:, 2] >= max(int(cfg0.quorum), 1))
+                else:
+                    applied = has
+                for i in np.nonzero(has)[0]:
+                    if cfg0.guard:
+                        sims[i].acct.note_guard(int(st[i, 0]), int(st[i, 1]),
+                                                bool(applied[i]))
+                    if rob is not None:
+                        sims[i].acct.note_robust(int(st[i, 3]),
+                                                 int(st[i, 4]))
+                has = applied
+                if yogi:
+                    flat_params, opt_state = _sweep_yogi_fn()(
+                        flat_params, agg_out, opt_state, has)
+                else:
+                    flat_params = _sweep_apply_fn()(flat_params, agg_out,
+                                                    lr_vec, has)
+            elif any(c is not None for c in cell_updates):
                 u, fresh, tau, valid, has = agg.sweep_bucket_pad(cell_updates, d)
                 if cfg0.guard:      # guard config is uniform (compat_key)
                     # same in-program screening the fused pipeline folds

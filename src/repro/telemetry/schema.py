@@ -29,9 +29,14 @@ LANE_FIELDS = (
     "l2_mean",              # ... mean
     "l2_max",               # ... max
     "nonfinite_rows",       # valid rows containing any non-finite entry
-    # guard columns (mirror gstats; zeros-but-survivors when unguarded)
+    # guard/robust columns (mirror gstats; zeros-but-survivors when
+    # unguarded and non-robust)
     "rejected_nonfinite",   # rows rejected by the non-finite screen
     "rejected_norm",        # rows rejected by the norm-outlier screen
+    "robust_rejected",      # rows the robust aggregator rejected (krum
+                            # losers, norm_median_clip rejects)
+    "robust_trimmed",       # rows trimmed per coordinate band (2*k_eff)
+                            # or clipped by norm_median_clip
     "survivors",            # rows that entered the aggregate
     "applied",              # 1 if the update was applied (quorum met)
 )
@@ -42,8 +47,8 @@ N_LANE_HOST = 6
 # lane fields serialized as ints in round events (the rest stay floats)
 LANE_INT_FIELDS = frozenset((
     "round", "cohort", "fresh", "stale_landed", "cache_occupancy",
-    "nonfinite_rows", "rejected_nonfinite", "rejected_norm", "survivors",
-    "applied",
+    "nonfinite_rows", "rejected_nonfinite", "rejected_norm",
+    "robust_rejected", "robust_trimmed", "survivors", "applied",
 ))
 
 # ---------------------------------------------------------------------------
@@ -72,6 +77,8 @@ GUARD_COUNTERS = (
     "guard_rejected_nonfinite",
     "guard_rejected_norm",
     "guard_quorum_skips",
+    "guard_robust_rejected",
+    "guard_robust_trimmed",
 )
 PIPELINE_COUNTERS = (
     "pipeline_rounds",

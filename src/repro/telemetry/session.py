@@ -117,6 +117,16 @@ class TelemetrySession:
             reg.counter("guard_quorum_skips").inc()
         acct.note_guard(int(nonfinite), int(norm), applied)
 
+    def note_robust(self, acct, rejected: int, trimmed: int) -> None:
+        """The one call site that counts robust-aggregator outcomes
+        (krum/norm-screen rejections, coordinate-band trims)."""
+        reg = self.registry
+        if rejected:
+            reg.counter("guard_robust_rejected").inc(int(rejected))
+        if trimmed:
+            reg.counter("guard_robust_trimmed").inc(int(trimmed))
+        acct.note_robust(int(rejected), int(trimmed))
+
     # -- lifecycle / resume --------------------------------------------------
     def flush(self) -> None:
         if self._rounds is not None:

@@ -76,6 +76,50 @@ def test_crash_resume_under_corruption_faults(tmp_path):
     assert s["rejected_nonfinite"] == ref["rejected_nonfinite"] > 0
 
 
+def test_crash_resume_under_attack_with_guards_and_robust(tmp_path):
+    """SIGKILL-grade contract, soft flavor: a guarded *robust* run under a
+    live coordinated attack crashes mid-attack and resumes bit-exactly —
+    the armed attack rides the snapshot's fault plan, so the resumed tail
+    replays the identical attacker sets, and the guard/robust counters
+    land exactly where the uninterrupted run's do (telemetry round log
+    byte-continues too)."""
+    from repro.telemetry import TelemetrySession
+
+    cfg = _cfg(aggregator="coord_median", attack="collude_signflip",
+               attack_frac=0.25, attack_scale=10.0, guard=True,
+               guard_reject_mult=5.0, quorum=1, telemetry=2,
+               n_target=6, setting="DL", deadline=1e6)
+    specs = (FaultSpec("nan", prob=0.25),)
+    ckpt = str(tmp_path / "run.pkl")
+    dir_a, dir_b = str(tmp_path / "clean"), str(tmp_path / "crashed")
+
+    sess = TelemetrySession(dir_a)
+    ref = Simulator(cfg, fault_plan=_crash_plan(None, specs)) \
+        .run(telemetry=sess)
+    sess.close()
+    s_ref = ref.summary()
+    assert s_ref["robust_trimmed"] > 0          # the defense actually ran
+    assert s_ref["rejected_nonfinite"] > 0      # ... under live faults
+
+    sess = TelemetrySession(dir_b)
+    with pytest.raises(InjectedCrash):
+        Simulator(cfg, fault_plan=_crash_plan(3, specs)).run(
+            checkpoint_path=ckpt, checkpoint_every=2, telemetry=sess)
+    sess.close()
+    sess = TelemetrySession(dir_b)
+    acct = resume_run(ckpt, telemetry=sess)
+    sess.close()
+
+    s = acct.summary()
+    assert summaries_equal(dict(s), dict(s_ref)), (s, s_ref)
+    assert s["robust_trimmed"] == s_ref["robust_trimmed"]
+    assert s["rejected_nonfinite"] == s_ref["rejected_nonfinite"]
+    a = open(os.path.join(dir_a, "rounds.jsonl"), "rb").read()
+    b = open(os.path.join(dir_b, "rounds.jsonl"), "rb").read()
+    assert a == b and a
+    assert acct.round_events == ref.round_events
+
+
 def test_midrun_snapshot_of_clean_run_resumes_identically(tmp_path):
     """Checkpointing is passive: a run that never crashes leaves its last
     mid-run snapshot behind, and resuming *that* still reproduces the full

@@ -62,6 +62,40 @@ def test_fault_plan_scoping_and_kinds():
         FaultSpec("bogus")
 
 
+@pytest.mark.parametrize("seed", [0, 3, 11])
+def test_sparse_plan_replays_dense_bit_exactly(seed):
+    """COO storage is a pure layout change: both modes consume the RNG
+    stream identically, so every per-round query — corruption multipliers,
+    drops, replays, counts — matches the dense plan bit-exactly."""
+    specs = (FaultSpec("nan", prob=0.1),
+             FaultSpec("scale", prob=0.15, scale=1e4),
+             FaultSpec("signflip", prob=0.05, rounds=(2, 6)),
+             FaultSpec("post_drop", prob=0.1, learners=(1, 5, 9)),
+             FaultSpec("replay", prob=0.2))
+    dense = _plan(specs, seed=seed, sparse=False)
+    sparse = _plan(specs, seed=seed, sparse=True)
+    assert dense.counts() == sparse.counts()
+    assert dense.has_corruption == sparse.has_corruption
+    lids = np.arange(BASE["n_learners"])
+    for r in range(BASE["rounds"] + 1):          # +1: beyond the horizon
+        np.testing.assert_array_equal(dense.scale_for(r, lids),
+                                      sparse.scale_for(r, lids))
+        for lid in lids:
+            assert dense.post_drop(r, lid) == sparse.post_drop(r, lid)
+            assert dense.replay(r, lid) == sparse.replay(r, lid)
+
+
+def test_sparse_plan_auto_switch_and_run_parity():
+    """Auto-sparse plans drive a guarded run to the identical summary as
+    the dense plan (the engine only sees the query API)."""
+    mk = lambda sparse: _plan(NAN_PLAN, seed=7, sparse=sparse)
+    assert not _plan(NAN_PLAN, seed=7).sparse      # small plan stays dense
+    a = Simulator(_cfg(guard=True), fault_plan=mk(False)).run().summary()
+    b = Simulator(_cfg(guard=True), fault_plan=mk(True)).run().summary()
+    assert summaries_equal(dict(a), dict(b))
+    assert a["rejected_nonfinite"] > 0
+
+
 def test_without_crash_preserves_corruption():
     p = _plan((FaultSpec("inf", prob=0.5),), crash_after=3)
     q = p.without_crash()

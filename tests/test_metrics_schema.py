@@ -8,7 +8,8 @@ from repro.sim.metrics import SUMMARY_KEYS, Accounting, RoundRecord, SimSummary
 EXPECTED_KEYS = ("rounds", "sim_time", "resource_used", "resource_wasted",
                  "waste_fraction", "unique_participants", "final_accuracy",
                  "best_accuracy", "stopped_early", "rejected_nonfinite",
-                 "rejected_norm", "quorum_skips")
+                 "rejected_norm", "quorum_skips", "robust_rejected",
+                 "robust_trimmed")
 
 
 def test_summary_keys_are_pinned():

@@ -1,0 +1,516 @@
+"""Byzantine-resilient aggregation (ISSUE PR-8).
+
+Contracts under test:
+
+  * **static parity** — configs whose robust/attack descriptors reduce to
+    ``None`` (``saa``, ``trimmed_mean`` with ``trim_k=0``, ``multi_krum``
+    with ``krum_f=0``, knobless ``norm_median_clip``, ``attack="none"``)
+    compile to today's program and run bit-identical to plain SAA on every
+    substrate;
+  * **strategy oracles** — ``krum_select`` and the trimmed/median
+    coordinate-wise aggregate match independent numpy implementations, and
+    the untrimmed band recovers the SAA weighted aggregate
+    (robust-of-weighted composition);
+  * **attack formulas** — each coordinated rewrite matches its closed
+    form, no-attacker rounds pass through bit-exactly, and the attacker
+    stream is decorrelated from the fault draws (shared-seed pairing);
+  * **substrate parity under attack** — an attacked robust cell produces
+    identical summaries on the fused, chunked, flat per-stage and legacy
+    paths, with or without the trimmed-mean kernel;
+  * **exact accounting** — rejection/trim counters equal the closed-form
+    counts (``multi_krum`` rejects exactly ``f`` per applied round;
+    ``trimmed_mean`` trims exactly ``2k``; a norm-screen defense rejects
+    exactly the plan's scheduled attacker rows);
+  * **breakdown** — below the breakdown point the robust aggregators hold
+    near the clean baseline under ``collude_signflip`` while plain SAA
+    demonstrably degrades;
+  * **program structure** — the robust round program keeps the
+    one-psum-per-round and transfer-guard invariants.
+"""
+import math
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation as agg
+from repro.faults import FaultPlan, FaultSpec
+from repro.faults.attacks import AttackSpec, apply_attack, attack_key
+from repro.robust.aggregators import (ROBUST_AGGREGATORS, krum_select,
+                                      robust_host_aggregate, robust_key,
+                                      trimmed_weighted_aggregate,
+                                      weighted_rows)
+from repro.sim.engine import SimConfig, Simulator
+from repro.sweeps.runner import summaries_equal
+
+BASE = dict(n_learners=30, rounds=8, eval_every=4, n_target=4,
+            saa=True, selector="priority")
+
+SIGNFLIP = dict(attack="collude_signflip", attack_frac=0.25,
+                attack_scale=10.0)
+
+
+def _cfg(**kw):
+    return SimConfig(**{**BASE, **kw})
+
+
+# ---------------------------------------------------------------------------
+# static keys + config migration
+# ---------------------------------------------------------------------------
+
+
+def test_robust_key_static_delegation():
+    """Statically-inactive configs map to None == today's program."""
+    assert robust_key(_cfg()) is None
+    assert robust_key(_cfg(aggregator="trimmed_mean", trim_k=0)) is None
+    assert robust_key(_cfg(aggregator="multi_krum", krum_f=0)) is None
+    assert robust_key(_cfg(aggregator="norm_median_clip")) is None
+    assert robust_key(_cfg(aggregator="trimmed_mean", trim_k=2)) == \
+        ("trimmed_mean", 2)
+    assert robust_key(_cfg(aggregator="coord_median")) == ("coord_median",)
+    assert robust_key(_cfg(aggregator="krum", krum_f=1)) == ("krum", 1, 1)
+    assert robust_key(_cfg(aggregator="multi_krum", krum_f=2)) == \
+        ("multi_krum", 2, None)
+    assert robust_key(_cfg(aggregator="multi_krum", krum_f=0,
+                           multi_krum_m=3)) == ("multi_krum", 0, 3)
+    assert robust_key(_cfg(aggregator="norm_median_clip",
+                           guard_reject_mult=5.0)) == \
+        ("norm_median_clip", None, 5.0)
+    with pytest.raises(ValueError, match="unknown aggregator"):
+        _cfg(aggregator="bogus")
+
+
+def test_attack_key_static_delegation():
+    assert attack_key(_cfg()) is None
+    assert attack_key(_cfg(attack="alie", attack_frac=0.0)) is None
+    assert attack_key(_cfg(**SIGNFLIP)) == ("collude_signflip", 10.0, 1.5)
+    with pytest.raises(ValueError, match="unknown attack"):
+        _cfg(attack="bogus")
+    with pytest.raises(ValueError):
+        AttackSpec("bogus")
+
+
+def test_server_opt_migration_from_old_aggregator_field():
+    """Pre-PR-8 configs used ``aggregator`` for the server optimizer; they
+    must keep loading (snapshots carry SimConfig) with the old value
+    rerouted to ``server_opt`` and the robust slot reset to saa."""
+    old = _cfg(aggregator="yogi")
+    assert old.server_opt == "yogi" and old.aggregator == "saa"
+    old = _cfg(aggregator="fedavg")
+    assert old.server_opt == "fedavg" and old.aggregator == "saa"
+    assert _cfg().server_opt == "fedavg"
+    assert set(("saa", "coord_median", "trimmed_mean", "krum", "multi_krum",
+                "norm_median_clip")) == set(ROBUST_AGGREGATORS)
+
+
+# ---------------------------------------------------------------------------
+# strategy oracles (numpy references)
+# ---------------------------------------------------------------------------
+
+
+def _np_krum(u, valid, f, m):
+    """Independent numpy (multi-)Krum: score by the sum of the
+    max(c-f-2, 1) smallest squared distances to other valid rows."""
+    n = len(u)
+    c = int(valid.sum())
+    d = ((u[:, None, :] - u[None, :, :]) ** 2).sum(-1)
+    scores = np.full(n, np.inf)
+    kk = int(np.clip(c - f - 2, 1, n))
+    for i in range(n):
+        if not valid[i]:
+            continue
+        others = sorted(d[i, j] for j in range(n) if valid[j] and j != i)
+        if len(others) >= kk:
+            scores[i] = sum(others[:kk])
+    m_eff = int(np.clip(c - f if m is None else m, 1, n))
+    order = np.argsort(scores, kind="stable")
+    sel = np.zeros(n, bool)
+    sel[order[:m_eff]] = True
+    return sel & valid
+
+
+@pytest.mark.parametrize("f,m", [(1, 1), (2, None), (1, 3), (0, None)])
+def test_krum_select_matches_numpy_oracle(f, m):
+    rng = np.random.default_rng(f * 10 + (0 if m is None else m))
+    u = rng.normal(size=(9, 16)).astype(np.float32)
+    valid = np.array([True] * 7 + [False, True])
+    got = np.asarray(krum_select(jnp.asarray(u), jnp.asarray(valid),
+                                 f=f, m=m))
+    want = _np_krum(u.astype(np.float64), valid, f, m)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_krum_rejects_the_planted_outliers():
+    rng = np.random.default_rng(0)
+    u = rng.normal(size=(8, 32)).astype(np.float32) * 0.1
+    u[2] += 50.0
+    u[5] -= 50.0                       # two colluding-ish outliers
+    valid = np.ones(8, bool)
+    sel = np.asarray(krum_select(jnp.asarray(u), jnp.asarray(valid),
+                                 f=2, m=None))
+    assert not sel[2] and not sel[5]
+    assert sel.sum() == 6              # m = c - f keeps the honest rows
+
+
+def test_trimmed_and_median_match_numpy_oracle():
+    """Equal weights make y == u, so the trimmed aggregate must equal the
+    per-coordinate numpy trimmed mean of the valid rows."""
+    rng = np.random.default_rng(3)
+    n, d = 7, 12
+    u = rng.normal(size=(n, d)).astype(np.float32)
+    valid = np.array([True] * 5 + [False, True])          # c = 6 (even)
+    rows = u[valid].astype(np.float64)
+    fresh = jnp.ones(n, bool)
+    tau = jnp.zeros(n, jnp.int32)
+    for trim_k, median in ((1, False), (2, False), (0, True)):
+        out, n_trim = trimmed_weighted_aggregate(
+            jnp.asarray(u), fresh, tau, jnp.asarray(valid),
+            0.4, 0, trim_k=trim_k, median=median)
+        srt = np.sort(rows, axis=0)
+        k = (len(rows) - 1) // 2 if median else trim_k
+        want = srt[k:len(rows) - k].mean(axis=0)
+        np.testing.assert_allclose(np.asarray(out), want,
+                                   rtol=1e-5, atol=1e-6)
+        assert int(n_trim) == 2 * k
+    # even c: coord_median averages the two middle order statistics
+    out, _ = trimmed_weighted_aggregate(
+        jnp.asarray(u), fresh, tau, jnp.asarray(valid),
+        0.4, 0, trim_k=0, median=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.median(rows, axis=0), rtol=1e-5, atol=1e-6)
+
+
+def test_untrimmed_band_recovers_saa_weighted_aggregate():
+    """Robust-of-weighted composition: the k=0 trimmed mean of the
+    rescaled rows y = c*w*u equals the SAA weighted aggregate."""
+    rng = np.random.default_rng(11)
+    n, d = 6, 10
+    u = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    fresh = jnp.asarray([True, True, False, True, False, True])
+    tau = jnp.asarray([0, 0, 3, 0, 1, 0], jnp.int32)
+    valid = jnp.asarray([True] * 5 + [False])
+    want, _ = agg.weights_and_aggregate_by_id(u, fresh, tau, valid, 0.4,
+                                              jnp.int32(3))
+    y, c = weighted_rows(u, fresh, tau, valid, 0.4, jnp.int32(3))
+    got = np.where(np.asarray(valid)[:, None], np.asarray(y), 0.0) \
+        .sum(axis=0) / int(c)
+    np.testing.assert_allclose(got, np.asarray(want), rtol=1e-5, atol=1e-6)
+    assert int(c) == 5
+    assert np.all(np.asarray(y)[5] == np.inf)      # invalid row -> +inf
+
+
+# ---------------------------------------------------------------------------
+# attack formulas + plan determinism
+# ---------------------------------------------------------------------------
+
+
+def test_attack_formulas_match_closed_forms():
+    rng = np.random.default_rng(5)
+    n, d = 8, 16
+    u = rng.normal(size=(n, d)).astype(np.float32)
+    att = np.zeros(n, bool)
+    att[[1, 4]] = True
+    valid = np.ones(n, bool)
+    valid[7] = False
+    honest = u[valid & ~att].astype(np.float64)
+    run = lambda kind, **kw: np.asarray(apply_attack(
+        jnp.asarray(u), jnp.asarray(att), jnp.asarray(valid),
+        kind=kind, scale=kw.get("scale", 10.0), z=kw.get("z", 1.5)))
+
+    out = run("collude_signflip", scale=3.0)
+    np.testing.assert_array_equal(out[1], -3.0 * u[1])
+    np.testing.assert_array_equal(out[0], u[0])
+
+    out = run("collude_same_value", scale=2.0)
+    np.testing.assert_array_equal(out[1], out[4])   # maximal collusion
+    np.testing.assert_allclose(np.linalg.norm(out[1]), 2.0, rtol=1e-5)
+
+    out = run("alie", z=1.5)
+    mu, sd = honest.mean(0), honest.std(0)
+    np.testing.assert_allclose(out[4], mu - 1.5 * sd, rtol=1e-4, atol=1e-5)
+
+    out = run("adaptive", scale=4.0)
+    med = np.median(np.sort((honest ** 2).sum(-1))[: len(honest)]) \
+        if len(honest) % 2 else \
+        np.sort((honest ** 2).sum(-1))[(len(honest) - 1) // 2]
+    target = 4.0 * math.sqrt(float(med))
+    np.testing.assert_allclose(np.linalg.norm(out[1]), target, rtol=1e-4)
+    np.testing.assert_allclose(
+        out[1] / np.linalg.norm(out[1]), -u[1] / np.linalg.norm(u[1]),
+        rtol=1e-4, atol=1e-5)
+
+
+def test_attack_noop_mask_is_bit_exact():
+    rng = np.random.default_rng(9)
+    u = rng.normal(size=(2, 5, 8)).astype(np.float32)
+    att = np.zeros((2, 5), bool)
+    valid = np.ones((2, 5), bool)
+    for kind in ("collude_signflip", "collude_same_value", "alie",
+                 "adaptive"):
+        out = np.asarray(apply_attack(jnp.asarray(u), jnp.asarray(att),
+                                      jnp.asarray(valid), kind=kind,
+                                      scale=10.0, z=1.5))
+        np.testing.assert_array_equal(out, u)
+
+
+def test_with_attack_keeps_fault_draws_and_is_deterministic():
+    """Shared-seed pairing: arming an attack never perturbs the fault
+    stream, and the attacker sets are a pure function of (seed, spec)."""
+    mk = lambda: FaultPlan(30, 8, (FaultSpec("nan", prob=0.3),), seed=11)
+    plain, armed = mk(), mk().with_attack(AttackSpec("alie", frac=0.2))
+    np.testing.assert_array_equal(plain.corrupt, armed.corrupt)
+    armed2 = mk().with_attack(AttackSpec("alie", frac=0.2))
+    for r in range(8):
+        ids = armed.attackers(r)
+        np.testing.assert_array_equal(ids, armed2.attackers(r))
+        assert len(ids) == math.ceil(0.2 * 30)
+        flags = armed.attack_flags(r, np.arange(30))
+        assert set(np.nonzero(flags)[0]) == set(ids.tolist())
+    assert plain.attackers(0).size == 0
+    assert not plain.attack_flags(0, [1, 2]).any()
+
+
+# ---------------------------------------------------------------------------
+# static parity: inactive configs == plain SAA, bitwise, every substrate
+# ---------------------------------------------------------------------------
+
+
+SUBSTRATES = {
+    "fused": {},
+    "chunked": {"rounds_per_dispatch": 4},
+    "flat": {"fused_rounds": False},
+    "legacy": {"fast_path": False, "fused_rounds": False},
+    "kernel": {"use_agg_kernel": True},
+}
+
+INACTIVE = {
+    "trim0": {"aggregator": "trimmed_mean", "trim_k": 0},
+    "mkrum0": {"aggregator": "multi_krum", "krum_f": 0},
+    "nmc_off": {"aggregator": "norm_median_clip"},
+    "att_off": {"attack": "collude_signflip", "attack_frac": 0.0},
+}
+
+
+@pytest.mark.parametrize("sub", sorted(SUBSTRATES))
+@pytest.mark.parametrize("inactive", sorted(INACTIVE))
+def test_inactive_robust_config_is_bit_identical_to_saa(sub, inactive):
+    extra = SUBSTRATES[sub]
+    ref = Simulator(_cfg(**extra)).run().summary()
+    got = Simulator(_cfg(**extra, **INACTIVE[inactive])).run().summary()
+    assert summaries_equal(dict(ref), dict(got)), (sub, inactive, ref, got)
+    assert got["robust_rejected"] == 0 and got["robust_trimmed"] == 0
+
+
+# ---------------------------------------------------------------------------
+# active robust + attack: substrate parity
+# ---------------------------------------------------------------------------
+
+
+ACTIVE = {
+    "coord_median": {"aggregator": "coord_median"},
+    "trimmed_mean": {"aggregator": "trimmed_mean", "trim_k": 1},
+    "multi_krum": {"aggregator": "multi_krum", "krum_f": 2},
+    "norm_median_clip": {"aggregator": "norm_median_clip",
+                         "guard_reject_mult": 4.0},
+}
+
+
+@pytest.mark.parametrize("kind", sorted(ACTIVE))
+def test_attacked_robust_cell_fused_flat_chunked_parity(kind):
+    mk = lambda **extra: Simulator(
+        _cfg(**ACTIVE[kind], **SIGNFLIP, **extra)).run().summary()
+    fused, flat, chunked = mk(), mk(fused_rounds=False), \
+        mk(rounds_per_dispatch=4)
+    assert summaries_equal(dict(fused), dict(flat)), (kind, fused, flat)
+    assert summaries_equal(dict(fused), dict(chunked)), kind
+    assert fused["robust_rejected"] + fused["robust_trimmed"] > 0, kind
+    assert math.isfinite(fused["final_accuracy"])
+
+
+@pytest.mark.parametrize("kind", ["trimmed_mean", "multi_krum"])
+def test_attacked_robust_cell_legacy_parity(kind):
+    fused = Simulator(_cfg(**ACTIVE[kind], **SIGNFLIP)).run().summary()
+    legacy = Simulator(_cfg(**ACTIVE[kind], **SIGNFLIP, fast_path=False,
+                            fused_rounds=False)).run().summary()
+    for k in ("rounds", "robust_rejected", "robust_trimmed",
+              "unique_participants"):
+        assert legacy[k] == fused[k], (kind, k)
+    assert abs(legacy["final_accuracy"] - fused["final_accuracy"]) < 1e-3
+
+
+def test_trimmed_kernel_routing_matches_jnp_path():
+    """``use_agg_kernel`` routes the coordinate-wise statistic through the
+    trimmed_agg Pallas kernel; fused==flat stays bitwise and the kernel's
+    result matches the sort-based path."""
+    mk = lambda **extra: Simulator(_cfg(
+        aggregator="trimmed_mean", trim_k=1, **SIGNFLIP,
+        **extra)).run().summary()
+    kern, kern_flat, soft = mk(use_agg_kernel=True), \
+        mk(use_agg_kernel=True, fused_rounds=False), mk()
+    assert summaries_equal(dict(kern), dict(kern_flat))
+    assert kern["robust_trimmed"] == soft["robust_trimmed"] > 0
+    assert abs(kern["final_accuracy"] - soft["final_accuracy"]) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# exact counter accounting
+# ---------------------------------------------------------------------------
+
+
+def test_multi_krum_rejects_exactly_f_per_round():
+    """multi_krum keeps m = clip(c - f, 1, n) of c valid rows, so each
+    round rejects exactly min(f, c - 1) — reconcile the counter against
+    the per-round operand sizes from the accounting records."""
+    f = 2
+    acct = Simulator(_cfg(aggregator="multi_krum", krum_f=f)).run()
+    s = acct.summary()
+    expected = sum(min(f, max(rec.n_fresh + rec.n_stale - 1, 0))
+                   for rec in acct.records)
+    assert s["robust_rejected"] == expected > 0
+    assert s["robust_trimmed"] == 0
+
+
+def test_trimmed_mean_trims_exactly_2k_per_round():
+    k = 1
+    acct = Simulator(_cfg(aggregator="trimmed_mean", trim_k=k)).run()
+    s = acct.summary()
+    expected = sum(2 * min(k, max(rec.n_fresh + rec.n_stale - 1, 0) // 2)
+                   for rec in acct.records)
+    assert s["robust_trimmed"] == expected > 0
+    assert s["robust_rejected"] == 0
+
+
+def test_counters_match_scheduled_attacker_rows_exactly():
+    """ISSUE acceptance: the defense's rejection counter equals the plan's
+    scheduled attacker count.  A norm-screen defense against huge-scale
+    signflip rejects exactly the attacked rows — replay every round's
+    operand through the host entry and reconcile row by row."""
+    n, d, rounds = 16, 32, 6
+    plan = FaultPlan(n, rounds, seed=4).with_attack(
+        AttackSpec("collude_signflip", frac=0.25, scale=1e3))
+    rng = np.random.default_rng(0)
+    total = 0
+    for r in range(rounds):
+        u = rng.normal(size=(n, d)).astype(np.float32) * 0.1
+        att = plan.attack_flags(r, np.arange(n))
+        out, info = robust_host_aggregate(
+            u, np.ones(n, bool), np.zeros(n, np.int32), att,
+            attack=("collude_signflip", 1e3, 1.5), guard=None,
+            robust=("norm_median_clip", None, 5.0), use_kernel=False,
+            beta=0.4, rule="equal")
+        assert info["robust_rejected"] == int(att.sum()) \
+            == len(plan.attackers(r))
+        assert info["survivors"] == n - int(att.sum())
+        assert np.all(np.isfinite(np.asarray(out)))
+        total += info["robust_rejected"]
+    assert total == math.ceil(0.25 * n) * rounds
+
+
+# ---------------------------------------------------------------------------
+# breakdown property: below the breakdown point the defenses hold
+# ---------------------------------------------------------------------------
+
+
+def test_breakdown_robust_defends_where_saa_fails():
+    """collude_signflip with attacker counts below every defense's
+    breakdown point (trim_k / krum_f >= scheduled attackers, attackers <
+    half of any cohort): the defenses land near the clean baseline while
+    plain SAA is dragged demonstrably below it (matched cohorts — the
+    attacker stream is independent of the schedule, same seed)."""
+    big = dict(n_learners=40, rounds=10, eval_every=5, n_target=10,
+               saa=True, selector="priority", setting="DL", deadline=1e6)
+    atk = dict(attack="collude_signflip", attack_frac=0.1,
+               attack_scale=50.0)
+    defenses = {
+        "coord_median": {"aggregator": "coord_median"},
+        "trimmed_mean": {"aggregator": "trimmed_mean", "trim_k": 4},
+        "multi_krum": {"aggregator": "multi_krum", "krum_f": 4},
+    }
+    clean = Simulator(SimConfig(**big)).run().summary()["final_accuracy"]
+    saa = Simulator(SimConfig(**big, **atk)).run().summary()[
+        "final_accuracy"]
+    assert math.isfinite(clean)
+    assert saa < clean - 0.3          # the attack demonstrably lands
+    for kind, extra in defenses.items():
+        s = Simulator(SimConfig(**big, **atk, **extra)).run().summary()
+        acc = s["final_accuracy"]
+        assert acc > saa + 0.3, (kind, acc, saa, clean)
+        assert acc > clean - 0.15, (kind, acc, clean)
+        assert s["robust_rejected"] + s["robust_trimmed"] > 0, kind
+
+
+# ---------------------------------------------------------------------------
+# program structure: one psum, transfer-guard clean
+# ---------------------------------------------------------------------------
+
+
+def test_robust_attacked_program_keeps_one_collective():
+    from repro.sim.pipeline import RoundPipeline
+    cfg = _cfg(aggregator="coord_median", **SIGNFLIP,
+               shard_participants=True, rounds_per_dispatch=2)
+    pipe = RoundPipeline([Simulator(cfg)])
+    orig, captured = pipe._prog, []
+
+    def wrapper(*args):
+        if not captured:
+            captured.append(orig.lower(*args).compile().as_text())
+        return orig(*args)
+
+    pipe._prog = wrapper
+    pipe.run()
+    txt = captured[0]
+    n_all_reduce = len(re.findall(r"all-reduce(?:-start)?\(", txt))
+    for op in ("all-gather", "all-to-all", "collective-permute",
+               "reduce-scatter"):
+        assert f"{op}(" not in txt, f"unexpected {op} in the robust program"
+    if len(jax.devices()) > 1:
+        assert n_all_reduce == 1, f"expected 1 all-reduce, got {n_all_reduce}"
+    else:
+        assert n_all_reduce <= 1
+
+
+def test_robust_attacked_pipeline_clean_under_transfer_guard():
+    from repro.sim.pipeline import RoundPipeline
+    cfg = _cfg(aggregator="multi_krum", krum_f=2, **SIGNFLIP)
+    RoundPipeline([Simulator(cfg)]).run()          # warm compiles
+    accts = RoundPipeline([Simulator(cfg)]).run(transfer_guard=True)
+    s = accts[0].summary()
+    assert s["rounds"] > 0 and s["robust_rejected"] > 0
+    assert math.isfinite(s["final_accuracy"])
+
+
+# ---------------------------------------------------------------------------
+# sweep integration: batched==serial for robust cells, guard_totals gating
+# ---------------------------------------------------------------------------
+
+
+def test_robust_attack_sweep_batched_equals_serial():
+    from repro.sweeps import SweepSpec, assert_parity, run_batched, run_serial
+    spec = SweepSpec(
+        axes={"aggregator": ["saa", "coord_median"],
+              "attack": ["none", "collude_signflip"]},
+        base=dict(n_learners=24, rounds=6, eval_every=3, n_target=6,
+                  saa=True, selector="priority", setting="DL",
+                  deadline=1e6, attack_frac=0.25, attack_scale=10.0),
+        seeds=(0,))
+    cells = spec.expand()
+    results, _ = run_batched(cells)
+    serial, _ = run_serial(cells)
+    assert_parity(results, serial)
+    totals = results.guard_totals()
+    assert "robust_rejected" in totals and "robust_trimmed" in totals
+    assert totals["robust_trimmed"] > 0        # coord_median cells trimmed
+    assert "rejected_nonfinite" not in totals  # guard never enabled
+
+
+def test_guard_totals_robust_keys_absent_when_feature_off():
+    from repro.sweeps import SweepSpec, run_batched
+    spec = SweepSpec(
+        axes={"saa": [False, True]},
+        base=dict(n_learners=20, rounds=4, eval_every=2, n_target=3,
+                  selector="priority"),
+        seeds=(0,))
+    results, _ = run_batched(spec.expand())
+    assert results.guard_totals() == {}        # absent, not silent zeros

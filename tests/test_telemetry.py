@@ -72,8 +72,9 @@ def test_lane_schema_is_pinned():
     assert LANE_FIELDS == (
         "round", "sim_time", "cohort", "fresh", "stale_landed",
         "cache_occupancy", "l2_min", "l2_mean", "l2_max", "nonfinite_rows",
-        "rejected_nonfinite", "rejected_norm", "survivors", "applied")
-    assert LANE_WIDTH == 14
+        "rejected_nonfinite", "rejected_norm", "robust_rejected",
+        "robust_trimmed", "survivors", "applied")
+    assert LANE_WIDTH == 16
     assert N_LANE_HOST == 6
     assert LANE_FIELDS[:N_LANE_HOST] == (
         "round", "sim_time", "cohort", "fresh", "stale_landed",
@@ -216,7 +217,9 @@ def test_guard_counters_single_writer(tmp_path):
     assert dict(pipe.stats.guard) == {
         "rejected_nonfinite": sess.registry.value("guard_rejected_nonfinite"),
         "rejected_norm": sess.registry.value("guard_rejected_norm"),
-        "quorum_skips": sess.registry.value("guard_quorum_skips")}
+        "quorum_skips": sess.registry.value("guard_quorum_skips"),
+        "robust_rejected": sess.registry.value("guard_robust_rejected"),
+        "robust_trimmed": sess.registry.value("guard_robust_trimmed")}
     # ... and both equal the sum over the per-cell Accounting fields
     assert pipe.stats.guard["rejected_nonfinite"] == sum(
         a.rejected_nonfinite for a in accts)

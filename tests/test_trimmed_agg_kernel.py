@@ -1,0 +1,90 @@
+"""trimmed_agg Pallas kernel: rank-select band means vs the sort-based
+oracle (the same formula the robust aggregators use), across mixed
+per-cell trim depths / valid counts, +inf-padded rows, ties, and
+non-multiple-of-D_BLK feature sizes (the ops wrapper's zero padding)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.trimmed_agg import ops as tops
+from repro.kernels.trimmed_agg.ref import sweep_trimmed_ref
+from repro.kernels.trimmed_agg.trimmed_agg import D_BLK
+
+
+def _operand(rng, s, n, d, c):
+    """Rows past c are the +inf exclusion padding the robust layer emits."""
+    y = rng.normal(size=(s, n, d)).astype(np.float32)
+    for i, ci in enumerate(c):
+        y[i, ci:] = np.inf
+    return y
+
+
+@pytest.mark.parametrize("n,d", [(6, D_BLK), (9, 2 * D_BLK), (16, D_BLK)])
+def test_kernel_matches_sort_oracle_mixed_k_and_c(n, d):
+    rng = np.random.default_rng(n * d)
+    s = 5
+    c = np.array([n, n - 1, max(n - 3, 1), 2, 1], np.int32)
+    k = np.array([0, 1, (int(c[2]) - 1) // 2, 0, 0], np.int32)
+    y = jnp.asarray(_operand(rng, s, n, d, c))
+    got = tops.sweep_trimmed_aggregate(y, jnp.asarray(k), jnp.asarray(c))
+    want = sweep_trimmed_ref(y, jnp.asarray(k), jnp.asarray(c))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_kernel_pads_feature_axis_and_truncates_back():
+    rng = np.random.default_rng(7)
+    s, n, d = 3, 8, D_BLK + 37                    # not a D_BLK multiple
+    c = np.array([8, 5, 3], np.int32)
+    k = np.array([2, 1, 1], np.int32)
+    y = jnp.asarray(_operand(rng, s, n, d, c))
+    got = tops.sweep_trimmed_aggregate(y, jnp.asarray(k), jnp.asarray(c))
+    assert got.shape == (s, n, d)[:1] + (d,)
+    want = sweep_trimmed_ref(y, jnp.asarray(k), jnp.asarray(c))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_kernel_tie_ranks_agree_with_stable_sort():
+    """Duplicated values force the rank tie-break (row index) to matter:
+    the kernel's stable-rank order must select the same band members as
+    the stable sort."""
+    n, d = 6, D_BLK
+    y = np.ones((1, n, d), np.float32)
+    y[0, 3] = 2.0
+    y[0, 4] = 0.0
+    c = jnp.asarray([n], jnp.int32)
+    k = jnp.asarray([1], jnp.int32)
+    got = tops.sweep_trimmed_aggregate(jnp.asarray(y), k, c)
+    want = sweep_trimmed_ref(jnp.asarray(y), k, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_kernel_median_band_even_and_odd():
+    """Maximal trim k=(c-1)//2 is the coordinate median (even c averages
+    the middle pair) — the coord_median aggregator's kernel route."""
+    rng = np.random.default_rng(1)
+    n, d = 10, D_BLK
+    for c_val in (9, 10):                          # odd, even
+        c = np.array([c_val], np.int32)
+        k = (c - 1) // 2
+        y = jnp.asarray(_operand(rng, 1, n, d, c))
+        got = np.asarray(tops.sweep_trimmed_aggregate(
+            y, jnp.asarray(k), jnp.asarray(c)))[0]
+        want = np.median(np.asarray(y)[0, :c_val].astype(np.float64),
+                         axis=0)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_kernel_degenerate_cells():
+    """c=0 (denominator floor) and an all-padding cell stay finite zero;
+    c=1 passes the single row through."""
+    n, d = 4, D_BLK
+    y = np.full((2, n, d), np.inf, np.float32)
+    y[1, 0] = 3.0
+    c = jnp.asarray([0, 1], jnp.int32)
+    k = jnp.asarray([0, 0], jnp.int32)
+    got = np.asarray(tops.sweep_trimmed_aggregate(jnp.asarray(y), k, c))
+    np.testing.assert_array_equal(got[0], 0.0)
+    np.testing.assert_array_equal(got[1], 3.0)
