@@ -22,7 +22,9 @@ per-cell parity against early-stopped serial runs.  Variant rows re-run
 the largest grid sharded over the local device mesh (``shard=True``),
 chunked (``rounds_per_dispatch=8``: K rounds per dispatch via lax.scan),
 and both combined — each parity-asserted against the plain batched
-results.  Writes ``BENCH_sweeps.json`` at the repo root for the perf
+results.  A zoo row races every registered selection strategy
+(``repro.selection``) on one shared-seed grid and records per-selector
+accuracy / resource use.  Writes ``BENCH_sweeps.json`` at the repo root for the perf
 trajectory; ``benchmarks/check_regression.py`` compares a fresh smoke run
 against the checked-in rows.
 
@@ -165,9 +167,12 @@ def bench_variants(s_cells: int, n_learners: int, rounds: int,
     """Sharded / chunked execution variants, each parity-asserted (bitwise,
     per cell) against the plain batched run of the same grid.
 
-    The grid is **Oort-free**: an Oort cell's per-round stat-utility
-    feedback forces ``rounds_per_dispatch=1`` for its whole compat batch,
-    which would silently turn the chunked variants into K=1 re-measurements.
+    The grid is **feedback-selector-free** (no oort/ucb/contribution): a
+    feedback cell's per-round stat-utility fetch forces
+    ``rounds_per_dispatch=1`` for its (selector-uniform) compat batch,
+    which would turn that batch's chunked variant into a K=1
+    re-measurement — the variant rows measure chunking, so they keep to
+    selectors that chunk.
     On a single-device host the sharded variants run the shard_map path on
     a trivial 1-device mesh (the multi-device CI leg forces 4 CPU devices
     via ``XLA_FLAGS=--xla_force_host_platform_device_count``); chunking
@@ -234,6 +239,53 @@ def bench_variants(s_cells: int, n_learners: int, rounds: int,
     return out
 
 
+ZOO_SELECTORS = ("random", "oort", "priority", "safa", "flips", "ucb",
+                 "contribution")
+
+
+def bench_zoo(n_learners: int, rounds: int) -> dict:
+    """Selector-zoo race: every registered strategy on one shared-seed grid
+    (matched datasets / device populations / availability traces), batched
+    vs serial parity asserted.  ``selector_key`` lives in ``pipeline_key``,
+    so the zoo splits into selector-uniform compat batches — the feedback
+    selectors (oort/ucb/contribution) run K=1 with the l2s fetch while the
+    rest chunk freely — and the row records per-selector accuracy and
+    resource use for ``benchmarks/figures.py``'s zoo figure.  Smoke and
+    full mode share this config, so the checked-in row doubles as the CI
+    regression baseline (check_regression matches on s_cells/n_learners/
+    rounds)."""
+    spec = SweepSpec(axes={"selector": list(ZOO_SELECTORS)},
+                     base=dict(n_learners=n_learners, rounds=rounds,
+                               eval_every=EVAL_EVERY, saa=True,
+                               mapping="label_uniform"),
+                     seeds=(0,))
+    cells = spec.expand()
+    (results, stats), wall = _best_of(lambda: _run_batched(cells))
+    serial_summaries, serial_wall = _best_of(lambda: run_serial(cells))
+    assert_parity(results, serial_summaries)
+    per_selector = {
+        r.cell.coord("selector"): {
+            "final_accuracy": round(r.summary["final_accuracy"], 4),
+            "resource_used_s": round(r.summary["resource_used"], 1),
+        } for r in results}
+    row = {
+        "s_cells": len(cells),
+        "n_learners": n_learners,
+        "rounds": rounds,
+        "selectors": list(ZOO_SELECTORS),
+        "batched_wall_s": round(wall, 3),
+        "serial_wall_s": round(serial_wall, 3),
+        "speedup": round(serial_wall / max(wall, 1e-9), 2),
+        "feedback_fetches": stats["feedback_fetches"],
+        "per_selector": per_selector,
+        "parity": True,
+    }
+    print(f"sweeps_zoo/S={len(cells)},{1e3 * wall / len(cells):.0f},"
+          f"batched={wall:.2f}s;serial={serial_wall:.2f}s;"
+          f"speedup={row['speedup']}x")
+    return row
+
+
 def main() -> None:
     smoke = "--smoke" in sys.argv
     profile = "--profile" in sys.argv
@@ -255,6 +307,7 @@ def main() -> None:
         "variants": [row for s in es_sizes
                      for row in bench_variants(s, n_learners, rounds,
                                                baseline=measured.get(s))],
+        "zoo": [bench_zoo(n_learners, rounds)],
     }
     if profile:
         result["pipeline_profile"] = rows[-1]["pipeline_stats"]

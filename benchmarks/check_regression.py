@@ -59,6 +59,8 @@ COMPARISONS = [
     ("BENCH_sweeps.json", "variants",
      ("variant", "s_cells", "n_learners", "rounds", "n_devices"),
      lambda r: r["batched_wall_s"], False, "variant wall s"),
+    ("BENCH_sweeps.json", "zoo", ("s_cells", "n_learners", "rounds"),
+     lambda r: r["batched_wall_s"], False, "selector-zoo wall s"),
 ]
 
 

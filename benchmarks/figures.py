@@ -277,7 +277,12 @@ def render_telemetry(telemetry_dir, out_dir) -> list:
       * ``accuracy_under_attack.png`` — accuracy vs round, color keyed by
         aggregator and linestyle by attack kind, emitted only when the
         sweep carried an ``attack`` axis (cell names encode the grid
-        coordinates) — the attack x defense headline view.
+        coordinates) — the attack x defense headline view;
+      * ``resource_to_accuracy_by_selector.png`` — the zoo race: one
+        resource-to-accuracy curve per selection strategy (color = selector,
+        seeds/other axes share the color), emitted only when the sweep
+        carried a ``selector`` axis
+        (``python -m repro.sweeps --selector ... --telemetry-dir DIR``).
 
     Headless (Agg); returns the list of written paths."""
     import pathlib
@@ -384,6 +389,35 @@ def render_telemetry(telemetry_dir, out_dir) -> list:
         ax.legend(fontsize=6)
         fig.tight_layout()
         p = odir / "accuracy_under_attack.png"
+        fig.savefig(p, dpi=120)
+        plt.close(fig)
+        written.append(p)
+
+    # selector-zoo race: sweeps grown from a `selector` axis get the
+    # paper-style resource-to-accuracy view with one color per strategy,
+    # so matched-seed cells of the same selector read as one family
+    if any(_coord(c, "selector") is not None for c in by_cell):
+        fig, ax = plt.subplots(figsize=(6, 4))
+        sels = sorted({_coord(c, "selector") or "?" for c in by_cell})
+        cmap = plt.get_cmap("tab10")
+        seen = set()
+        for cell, evs in sorted(by_cell.items()):
+            res = _series(evs, "resource_used")
+            acc = _series(evs, "accuracy")
+            m = ~np.isnan(acc)
+            if not m.any():
+                continue
+            sel = _coord(cell, "selector") or "?"
+            ax.plot(res[m], 100 * acc[m], marker="o", ms=3,
+                    color=cmap(sels.index(sel) % 10),
+                    label=None if sel in seen else sel)
+            seen.add(sel)
+        ax.set_xlabel("resource used (participant seconds)")
+        ax.set_ylabel("eval accuracy (%)")
+        ax.set_title("selector zoo: resource-to-accuracy (color = selector)")
+        ax.legend(fontsize=7)
+        fig.tight_layout()
+        p = odir / "resource_to_accuracy_by_selector.png"
         fig.savefig(p, dpi=120)
         plt.close(fig)
         written.append(p)

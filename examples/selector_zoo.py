@@ -1,0 +1,99 @@
+"""Selector-zoo race: every registered selection strategy on one
+shared-seed grid, head-to-head on resource-to-accuracy.
+
+Expands a one-axis sweep over the full ``repro.selection`` strategy table
+(``--selectors`` trims it) with shared-seed pairing: every selector sees
+bit-identical datasets, device populations and availability traces, so
+accuracy/resource deltas are attributable to the selection policy alone.
+The batched runner groups the zoo into selector-uniform compat batches
+(``selector_key`` is part of ``pipeline_key``): the feedback selectors
+(oort / ucb / contribution) run K=1 with the per-round stat-utility fetch
+while the rest chunk freely — and every cell is re-run serially to assert
+bit-identical metrics before the table prints.
+
+With ``--telemetry-dir`` the run exports the PR-7 round timeline and
+renders ``resource_to_accuracy_by_selector.png`` (one color per strategy)
+via ``benchmarks.figures``.
+
+  PYTHONPATH=src python examples/selector_zoo.py [--smoke]
+  PYTHONPATH=src python examples/selector_zoo.py \
+      --selectors random,oort,flips --telemetry-dir /tmp/zoo
+"""
+import argparse
+import dataclasses
+import sys
+
+from repro.selection import SELECTOR_TABLE, describe_selectors
+from repro.sweeps import SweepSpec, assert_parity, run_batched, run_serial
+from repro.sweeps.report import text_table
+
+
+def zoo_spec(selectors, smoke: bool, seeds) -> SweepSpec:
+    return SweepSpec(
+        axes={"selector": list(selectors)},
+        base=dict(n_learners=60 if smoke else 100,
+                  rounds=8 if smoke else 40,
+                  eval_every=4 if smoke else 10,
+                  n_target=5 if smoke else 10,
+                  saa=True, mapping="label_uniform"),
+        seeds=seeds)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="tiny CI-sized race")
+    ap.add_argument("--selectors", default=",".join(SELECTOR_TABLE),
+                    help="comma list from the registered zoo "
+                         "(default: all of it)")
+    ap.add_argument("--seeds", default="0", help="comma list of shared seeds")
+    ap.add_argument("--telemetry-dir", default=None, metavar="DIR",
+                    help="export the run timeline and render the zoo "
+                         "resource-to-accuracy figure there")
+    args = ap.parse_args(argv)
+
+    selectors = args.selectors.split(",")
+    unknown = [s for s in selectors if s not in SELECTOR_TABLE]
+    if unknown:
+        print(f"unknown selectors {unknown}; registered zoo:\n")
+        print(describe_selectors())
+        return 2
+    seeds = tuple(int(s) for s in args.seeds.split(","))
+    spec = zoo_spec(selectors, args.smoke, seeds)
+    cells = spec.expand()
+    print(f"# zoo race: {len(selectors)} selectors x {len(seeds)} shared "
+          f"seed(s) = {len(cells)} cells")
+
+    telemetry = None
+    if args.telemetry_dir:
+        from repro.telemetry import TelemetrySession
+        telemetry = TelemetrySession(args.telemetry_dir)
+        cells = [dataclasses.replace(c, config=dataclasses.replace(
+            c.config, telemetry=2)) for c in cells]
+    try:
+        results, batched_wall = run_batched(cells, telemetry=telemetry)
+    finally:
+        if telemetry is not None:
+            telemetry.close()
+    serial_cells = [dataclasses.replace(c, config=dataclasses.replace(
+        c.config, telemetry=0)) for c in cells]
+    serial_summaries, serial_wall = run_serial(serial_cells)
+    assert_parity(results, serial_summaries)
+    print(f"# batched {batched_wall:.2f}s vs serial {serial_wall:.2f}s, "
+          f"per-cell metrics bit-identical\n")
+    print(text_table(results))
+
+    if args.telemetry_dir:
+        # the figures module lives at the repo root, which isn't on
+        # sys.path when this file is launched as a script
+        import pathlib
+        sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+        from benchmarks.figures import render_telemetry
+        written = render_telemetry(args.telemetry_dir,
+                                   f"{args.telemetry_dir}/figures")
+        for p in written:
+            print(f"# wrote {p}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,189 +1,10 @@
-"""Participant selection strategies.
+"""Compatibility shim: participant selection moved to ``repro.selection``.
 
-- RandomSelector: uniform sampling (FedAvg default; Bonawitz et al., 2019)
-- OortSelector: utility-guided selection (Lai et al., OSDI'21) — statistical
-  utility (loss proxy) x system utility (completion-time penalty), with
-  epsilon-greedy exploration and a pacer that trades round duration for
-  statistical efficiency.
-- PrioritySelector: RELAY's IPS (Alg. 1) — least-available-first with tie
-  shuffling and a post-participation hold-off.
-- SafaSelector: SAFA (Wu et al., 2021) — selects *all* available learners;
-  the round ends when a target fraction reports (handled by the engine).
-
-Selectors are host-side policy objects; they see per-learner metadata via a
-``LearnerView`` and return participant id lists.
+The selector zoo lives in ``src/repro/selection/`` (one strategy per
+file, registered in ``SELECTOR_TABLE``; see ``docs/extending.md``).  This
+module re-exports the pre-zoo names so existing imports — and pickled
+checkpoints referencing the old classes — keep working.
 """
-from __future__ import annotations
-
-import dataclasses
-from typing import Dict, List, Sequence
-
-import numpy as np
-
-
-@dataclasses.dataclass
-class LearnerView:
-    """What the server may know about a checked-in learner."""
-    learner_id: int
-    availability_prob: float = 1.0   # learner-reported P(available in [mu, 2mu])
-    last_stat_util: float = 0.0      # |B_i| * sqrt(mean loss^2) from last participation
-    est_duration: float = 0.0        # estimated on-device round time (seconds)
-    explored: bool = False           # has participated before
-
-
-class Selector:
-    name = "base"
-    # Selectors that ignore availability forecasts / utilities set this False
-    # and implement ``select_ids``; the engine then skips building LearnerViews
-    # (and the forecaster window queries behind them) on the hot path.  The
-    # queries are pure reads, so skipping them never changes forecaster state
-    # or the RNG stream — selection is bit-identical either way.
-    needs_views = True
-
-    def select(self, round_idx: int, checked_in: Sequence[LearnerView],
-               n_target: int, rng: np.random.Generator) -> List[int]:
-        raise NotImplementedError
-
-    def select_ids(self, round_idx: int, ids, n_target: int,
-                   rng: np.random.Generator) -> List[int]:
-        """View-free selection for ``needs_views = False`` selectors; ``ids``
-        is the checked-in learner ids in ascending order."""
-        raise NotImplementedError
-
-    def update_feedback(self, learner_id: int, *, stat_util: float = None,
-                        duration: float = None, round_idx: int = None):
-        """Post-round feedback hook (Oort utilities, hold-offs...)."""
-
-
-class RandomSelector(Selector):
-    name = "random"
-    needs_views = False
-
-    def select_ids(self, round_idx, ids, n_target, rng):
-        if len(ids) <= n_target:
-            return list(ids)
-        # rng.choice consumes the same stream for a list or an array of the
-        # same length, so the two entry points draw identical cohorts
-        return list(rng.choice(ids, size=n_target, replace=False))
-
-    def select(self, round_idx, checked_in, n_target, rng):
-        return self.select_ids(round_idx, [v.learner_id for v in checked_in],
-                               n_target, rng)
-
-
-class SafaSelector(Selector):
-    """SAFA flips selection: every available learner trains every round."""
-    name = "safa"
-    needs_views = False
-
-    def select_ids(self, round_idx, ids, n_target, rng):
-        return list(ids)
-
-    def select(self, round_idx, checked_in, n_target, rng):
-        return [v.learner_id for v in checked_in]
-
-
-class PrioritySelector(Selector):
-    """RELAY IPS (Alg. 1): sort availability probabilities ascending, shuffle
-    ties, take the top n_target. Participants then hold off from checking in
-    for ``holdoff`` rounds (Bonawitz et al., 2019 pacing)."""
-    name = "priority"
-
-    def __init__(self, holdoff: int = 5):
-        self.holdoff = holdoff
-        self._held_until: Dict[int, int] = {}
-
-    def select(self, round_idx, checked_in, n_target, rng):
-        eligible = [v for v in checked_in
-                    if self._held_until.get(v.learner_id, -1) < round_idx]
-        if not eligible:
-            eligible = list(checked_in)
-        # ascending availability; random shuffle breaks ties (Alg. 1)
-        jitter = rng.random(len(eligible))
-        order = sorted(range(len(eligible)),
-                       key=lambda i: (eligible[i].availability_prob, jitter[i]))
-        chosen = [eligible[i].learner_id for i in order[:n_target]]
-        for lid in chosen:
-            self._held_until[lid] = round_idx + self.holdoff
-        return chosen
-
-
-class OortSelector(Selector):
-    """Oort (Lai et al., OSDI'21), faithful to its core mechanics:
-
-    util(i) = stat_util(i) * (T_pref / t_i)^alpha  if t_i > T_pref else stat_util(i)
-
-    with epsilon-greedy exploration of never-selected learners (epsilon decays
-    0.9 -> 0.2) and a pacer that raises T_pref by ``pacer_delta`` when the
-    aggregate utility of selected participants stalls.
-    """
-    name = "oort"
-
-    def __init__(self, alpha: float = 2.0, pacer_delta: float = 10.0,
-                 pacer_window: int = 20, eps0: float = 0.9, eps_min: float = 0.2,
-                 eps_decay: float = 0.98):
-        self.alpha = alpha
-        self.pacer_delta = pacer_delta
-        self.pacer_window = pacer_window
-        self.eps = eps0
-        self.eps_min = eps_min
-        self.eps_decay = eps_decay
-        self.t_pref = None            # preferred round duration, set lazily
-        self._util_history: List[float] = []
-        self._stat_util: Dict[int, float] = {}
-        self._duration: Dict[int, float] = {}
-
-    def _utility(self, v: LearnerView) -> float:
-        stat = self._stat_util.get(v.learner_id, v.last_stat_util)
-        dur = self._duration.get(v.learner_id, v.est_duration) or 1.0
-        if self.t_pref is not None and dur > self.t_pref:
-            stat *= (self.t_pref / dur) ** self.alpha
-        return stat
-
-    def select(self, round_idx, checked_in, n_target, rng):
-        if self.t_pref is None:
-            durs = [v.est_duration for v in checked_in if v.est_duration > 0]
-            self.t_pref = float(np.percentile(durs, 50)) if durs else 100.0
-        explored = [v for v in checked_in if v.learner_id in self._stat_util]
-        unexplored = [v for v in checked_in if v.learner_id not in self._stat_util]
-        n_explore = int(round(self.eps * n_target))
-        n_exploit = n_target - n_explore
-
-        exploit_order = sorted(explored, key=self._utility, reverse=True)
-        chosen = [v.learner_id for v in exploit_order[:n_exploit]]
-        # exploration favors fast unexplored learners (Oort's speed heuristic)
-        unexplored.sort(key=lambda v: v.est_duration or 1e9)
-        chosen += [v.learner_id for v in unexplored[:n_target - len(chosen)]]
-        if len(chosen) < n_target:  # backfill from remaining explored
-            rest = [v.learner_id for v in exploit_order[n_exploit:]
-                    if v.learner_id not in chosen]
-            chosen += rest[:n_target - len(chosen)]
-        self.eps = max(self.eps_min, self.eps * self.eps_decay)
-
-        # pacer: if utility over the last window stalls, relax T_pref
-        window_util = sum(self._utility(v) for v in checked_in
-                          if v.learner_id in chosen)
-        self._util_history.append(window_util)
-        h = self._util_history
-        if len(h) >= 2 * self.pacer_window:
-            recent = sum(h[-self.pacer_window:])
-            prev = sum(h[-2 * self.pacer_window:-self.pacer_window])
-            if recent <= prev:
-                self.t_pref += self.pacer_delta
-                self._util_history = h[-self.pacer_window:]
-        return chosen[:n_target]
-
-    def update_feedback(self, learner_id, *, stat_util=None, duration=None,
-                        round_idx=None):
-        if stat_util is not None:
-            self._stat_util[learner_id] = stat_util
-        if duration is not None:
-            self._duration[learner_id] = duration
-
-
-SELECTORS = {
-    "random": RandomSelector,
-    "oort": OortSelector,
-    "priority": PrioritySelector,
-    "safa": SafaSelector,
-}
+from repro.selection import (LearnerView, OortSelector,  # noqa: F401
+                             PrioritySelector, RandomSelector, SafaSelector,
+                             Selector, SELECTORS)

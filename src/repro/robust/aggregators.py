@@ -41,6 +41,34 @@ ROBUST_AGGREGATORS = ("saa", "coord_median", "trimmed_mean", "krum",
 MASK_KINDS = ("krum", "multi_krum", "norm_median_clip")
 COORD_KINDS = ("trimmed_mean", "coord_median")
 
+# one-line docs + knob names for ``--list-aggregators`` (the knobs are the
+# SimConfig fields the kind reads; ``robust_key`` above is the authority on
+# when a knob setting changes the compiled program)
+_AGG_DOCS = {
+    "saa": ("plain SAA staleness-weighted aggregation (baseline)", ()),
+    "coord_median": ("per-coordinate median of SAA-weighted rows", ()),
+    "trimmed_mean": ("per-coordinate k-trimmed mean of SAA-weighted rows",
+                     ("trim_k",)),
+    "krum": ("Krum: keep the single closest-neighborhood row", ("krum_f",)),
+    "multi_krum": ("Multi-Krum: keep the m best-scored rows",
+                   ("krum_f", "multi_krum_m")),
+    "norm_median_clip": ("median-norm clip + reject screen",
+                         ("guard_clip", "guard_reject_mult")),
+}
+
+
+def describe_aggregators() -> str:
+    """Formatted strategy table (``--list-aggregators``)."""
+    rows = [("aggregator", "style", "knobs", "doc")]
+    for kind in ROBUST_AGGREGATORS:
+        style = ("mask" if kind in MASK_KINDS
+                 else "coord" if kind in COORD_KINDS else "baseline")
+        doc, knobs = _AGG_DOCS[kind]
+        rows.append((kind, style, ", ".join(knobs) or "-", doc))
+    widths = [max(len(r[c]) for r in rows) for c in range(3)]
+    return "\n".join("  ".join(v.ljust(w) for v, w in zip(r, widths)) + f"  {r[3]}"
+                     for r in rows)
+
 
 def robust_key(cfg) -> Optional[Tuple]:
     """Static robust-program descriptor for a ``SimConfig``.

@@ -1,0 +1,131 @@
+"""Selector plugin base: the host-side policy interface + strategy spec.
+
+A participant selector is a *host-side* sequential decision process (it
+consumes the engine's ``np.random.Generator`` stream and mutates its own
+plain-attribute state), unlike the robust aggregators, which are pure jnp
+cell functions.  What the two strategy tables share is the static-key
+contract: every selector registers a ``SelectorSpec`` whose static
+properties (``needs_feedback``, ``select_all``) describe how the fused
+round program must be built around it, and ``repro.selection.selector_key``
+folds those into ``repro.sim.pipeline.pipeline_key`` — so each selector
+compiles to its own fused-program variant and sweep batches stay uniform.
+
+The spec properties and the program structure they pin:
+
+``needs_feedback``
+    The selector consumes the per-row statistical-utility feedback
+    (``update_feedback(stat_util=...)`` from the device's loss stats).
+    The fused pipeline then fetches the per-round ``(R,)`` l2s vector
+    (device->host) and defers feedback to post-dispatch; since the *next*
+    round's selection depends on it, prescheduling is capped at K=1
+    (``rounds_per_dispatch`` forced to 1).  Feedback-free selectors keep
+    the round loop's device->host traffic at zero and chunk freely.
+
+``select_all``
+    SAFA semantics: the cohort is every available learner and the round
+    ends when ``safa_target_ratio`` of them report (capped by the
+    deadline).  Cohort sizes then vary wildly round to round, so the
+    pipeline keeps padded shape buckets instead of exact shapes.
+
+Selector state must deep-copy/pickle cleanly (plain attributes only):
+``Simulator.capture_state`` snapshots the selector for crash-safe resume.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class LearnerView:
+    """What the server may know about a checked-in learner."""
+    learner_id: int
+    availability_prob: float = 1.0   # learner-reported P(available in [mu, 2mu])
+    last_stat_util: float = 0.0      # |B_i| * sqrt(mean loss^2) from last participation
+    est_duration: float = 0.0        # estimated on-device round time (seconds)
+    explored: bool = False           # has participated before
+
+
+class Selector:
+    name = "base"
+    # Selectors that ignore availability forecasts / utilities set this False
+    # and implement ``select_ids``; the engine then skips building LearnerViews
+    # (and the forecaster window queries behind them) on the hot path.  The
+    # queries are pure reads, so skipping them never changes forecaster state
+    # or the RNG stream — selection is bit-identical either way.
+    needs_views = True
+
+    def select(self, round_idx: int, checked_in: Sequence[LearnerView],
+               n_target: int, rng: np.random.Generator) -> List[int]:
+        raise NotImplementedError
+
+    def select_ids(self, round_idx: int, ids, n_target: int,
+                   rng: np.random.Generator) -> List[int]:
+        """View-free selection for ``needs_views = False`` selectors; ``ids``
+        is the checked-in learner ids in ascending order."""
+        raise NotImplementedError
+
+    def update_feedback(self, learner_id: int, *, stat_util: float = None,
+                        duration: float = None, round_idx: int = None):
+        """Post-round feedback hook (Oort utilities, hold-offs...)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class BuildContext:
+    """Build-time world state a selector factory may consume.
+
+    ``substrate`` is the seed-built ``repro.sim.engine.Substrate`` (dataset
+    + shards, device profiles, traces); ``durations`` the per-learner
+    config-determined round durations.  Factories must only *read* — the
+    substrate is shared by every cell of a sweep seed.
+    """
+    cfg: object
+    substrate: object = None
+    durations: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Knob:
+    """One documented ``SimConfig.selector_params`` knob."""
+    name: str
+    default: object
+    doc: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class SelectorSpec:
+    """One registered selection strategy (a row of ``SELECTOR_TABLE``).
+
+    ``factory(params, ctx)`` builds the per-run policy object from the
+    cell's ``selector_params`` dict and a ``BuildContext``;
+    ``needs_feedback`` / ``select_all`` are the static program-structure
+    descriptors ``selector_key`` folds into ``pipeline_key`` (see module
+    docstring); ``knobs`` documents the accepted ``selector_params`` and
+    is enforced — an unknown knob is a config error, not a silent no-op.
+    """
+    name: str
+    factory: Callable[[Dict, BuildContext], Selector]
+    doc: str = ""
+    needs_feedback: bool = False
+    select_all: bool = False
+    knobs: tuple = ()                 # Knob(...) entries
+    cls: Optional[type] = None        # policy class, when 1:1 (listing aid)
+
+    def knob_names(self) -> tuple:
+        return tuple(k.name for k in self.knobs)
+
+    def build(self, cfg, substrate=None, durations=None) -> Selector:
+        params = dict(cfg.selector_params or ())
+        unknown = set(params) - set(self.knob_names())
+        if unknown:
+            raise ValueError(
+                f"selector {self.name!r}: unknown knob(s) {sorted(unknown)} "
+                f"(accepted: {list(self.knob_names()) or 'none'})")
+        return self.factory(params, BuildContext(cfg, substrate, durations))
+
+
+def class_factory(cls: type) -> Callable[[Dict, BuildContext], Selector]:
+    """Factory for selectors that are plain ``cls(**knobs)`` constructions."""
+    return lambda params, ctx: cls(**params)

@@ -1,0 +1,47 @@
+"""RELAY's IPS (paper Alg. 1): least-available-first priority selection.
+
+Ported verbatim from the pre-zoo ``repro.core.selection`` — the jitter
+draw (`rng.random(len(eligible))`) is part of the RNG-stream parity
+contract.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.selection.base import Knob, Selector, SelectorSpec, class_factory
+from repro.selection.registry import register_selector
+
+
+class PrioritySelector(Selector):
+    """RELAY IPS (Alg. 1): sort availability probabilities ascending, shuffle
+    ties, take the top n_target. Participants then hold off from checking in
+    for ``holdoff`` rounds (Bonawitz et al., 2019 pacing)."""
+    name = "priority"
+
+    def __init__(self, holdoff: int = 5):
+        self.holdoff = holdoff
+        self._held_until: Dict[int, int] = {}
+
+    def select(self, round_idx, checked_in, n_target, rng):
+        eligible = [v for v in checked_in
+                    if self._held_until.get(v.learner_id, -1) < round_idx]
+        if not eligible:
+            eligible = list(checked_in)
+        # ascending availability; random shuffle breaks ties (Alg. 1)
+        jitter = rng.random(len(eligible))
+        order = sorted(range(len(eligible)),
+                       key=lambda i: (eligible[i].availability_prob, jitter[i]))
+        chosen = [eligible[i].learner_id for i in order[:n_target]]
+        for lid in chosen:
+            self._held_until[lid] = round_idx + self.holdoff
+        return chosen
+
+
+register_selector(SelectorSpec(
+    name="priority",
+    factory=class_factory(PrioritySelector),
+    cls=PrioritySelector,
+    doc="RELAY IPS: least-available-first with tie shuffling + hold-off",
+    knobs=(Knob("holdoff", 5, "rounds a participant holds off after "
+                "selection"),),
+))

@@ -1,0 +1,88 @@
+"""The selector strategy table + the static key folded into pipeline_key.
+
+Mirrors ``repro.robust.aggregators``: adding a selector is a file-local
+change — write a ``Selector`` subclass, register a ``SelectorSpec`` for it
+(one ``register_selector`` call at import time), and it is sweepable by
+name everywhere a ``SimConfig.selector`` goes.  See ``docs/extending.md``
+for the worked example.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.selection.base import SelectorSpec
+
+SELECTOR_TABLE: Dict[str, SelectorSpec] = {}
+
+
+def register_selector(spec: SelectorSpec) -> SelectorSpec:
+    """Register a selection strategy under ``spec.name``.
+
+    Idempotent re-registration of the identical spec is allowed (module
+    reloads); a *different* spec under a taken name is an error.
+    """
+    prev = SELECTOR_TABLE.get(spec.name)
+    if prev is not None and prev != spec:
+        raise ValueError(f"selector {spec.name!r} already registered")
+    SELECTOR_TABLE[spec.name] = spec
+    return spec
+
+
+def normalize_selector_params(name: str, params) -> tuple:
+    """Canonicalize ``SimConfig.selector_params`` to a sorted, hashable
+    ``((knob, value), ...)`` tuple, validating knob names against the
+    spec so a typo'd knob fails at config time, not silently."""
+    spec = SELECTOR_TABLE[name]
+    items = sorted(dict(params or ()).items())
+    unknown = [k for k, _ in items if k not in spec.knob_names()]
+    if unknown:
+        raise ValueError(
+            f"selector {name!r}: unknown knob(s) {unknown} "
+            f"(accepted: {list(spec.knob_names()) or 'none'})")
+    return tuple(items)
+
+
+def selector_key(cfg) -> tuple:
+    """Static descriptor of the selection strategy for ``pipeline_key``.
+
+    Two configs with equal ``selector_key`` impose identical structure on
+    the fused round program: the same feedback-fetch path (and therefore
+    the same ``rounds_per_dispatch`` cap) and the same cohort-shape
+    regime.  Folding the full ``(name, params)`` pair — not just the
+    structural bits — keeps sweep batches selector-uniform, so one Oort
+    cell can no longer force K=1 on a whole mixed batch and each selector
+    compiles to its own program variant.
+    """
+    spec = SELECTOR_TABLE[cfg.selector]
+    return (spec.name, tuple(cfg.selector_params or ()),
+            spec.needs_feedback, spec.select_all)
+
+
+def build_selector(cfg, substrate=None, durations=None):
+    """Construct the policy object for ``cfg.selector`` (engine entry)."""
+    return SELECTOR_TABLE[cfg.selector].build(cfg, substrate=substrate,
+                                              durations=durations)
+
+
+def describe_selectors() -> str:
+    """Human-readable strategy table (``--list-selectors``)."""
+    rows = [("selector", "K", "cohort", "knobs (selector_params)", "")]
+    for spec in SELECTOR_TABLE.values():
+        rows.append((
+            spec.name,
+            "1" if spec.needs_feedback else "free",
+            "all available" if spec.select_all else "n_target",
+            ", ".join(f"{k.name}={k.default!r}" for k in spec.knobs) or "-",
+            spec.doc,
+        ))
+    widths = [max(len(r[i]) for r in rows) for i in range(4)]
+    out = []
+    for i, r in enumerate(rows):
+        line = "  ".join(c.ljust(w) for c, w in zip(r[:4], widths)).rstrip()
+        out.append(f"{line}  {r[4]}".rstrip())
+        if i == 0:
+            out.append("-" * len(out[0]))
+    out.append("")
+    out.append("K = rounds_per_dispatch cap: feedback selectors consume the "
+               "per-round device stat-utility vector, forcing K=1.")
+    return "\n".join(out)

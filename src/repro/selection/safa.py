@@ -1,0 +1,33 @@
+"""SAFA selection (Wu et al., 2021): every available learner trains.
+
+The round-end rule — stop when ``safa_target_ratio`` of the cohort has
+reported, capped by the deadline — lives in the engine's scheduler and is
+switched by this spec's ``select_all`` flag (no engine special-casing on
+the selector *name* remains).  Ported verbatim from the pre-zoo
+``repro.core.selection``.
+"""
+from __future__ import annotations
+
+from repro.selection.base import Selector, SelectorSpec, class_factory
+from repro.selection.registry import register_selector
+
+
+class SafaSelector(Selector):
+    """SAFA flips selection: every available learner trains every round."""
+    name = "safa"
+    needs_views = False
+
+    def select_ids(self, round_idx, ids, n_target, rng):
+        return list(ids)
+
+    def select(self, round_idx, checked_in, n_target, rng):
+        return [v.learner_id for v in checked_in]
+
+
+register_selector(SelectorSpec(
+    name="safa",
+    factory=class_factory(SafaSelector),
+    cls=SafaSelector,
+    select_all=True,
+    doc="select all available; round ends at safa_target_ratio arrivals",
+))

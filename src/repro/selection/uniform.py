@@ -1,0 +1,33 @@
+"""Uniform random selection (FedAvg default; Bonawitz et al., 2019).
+
+Ported verbatim from the pre-zoo ``repro.core.selection`` — the RNG draw
+order is part of the bit-parity contract (tests/test_selector_zoo.py).
+"""
+from __future__ import annotations
+
+from repro.selection.base import Selector, SelectorSpec, class_factory
+from repro.selection.registry import register_selector
+
+
+class RandomSelector(Selector):
+    name = "random"
+    needs_views = False
+
+    def select_ids(self, round_idx, ids, n_target, rng):
+        if len(ids) <= n_target:
+            return list(ids)
+        # rng.choice consumes the same stream for a list or an array of the
+        # same length, so the two entry points draw identical cohorts
+        return list(rng.choice(ids, size=n_target, replace=False))
+
+    def select(self, round_idx, checked_in, n_target, rng):
+        return self.select_ids(round_idx, [v.learner_id for v in checked_in],
+                               n_target, rng)
+
+
+register_selector(SelectorSpec(
+    name="random",
+    factory=class_factory(RandomSelector),
+    cls=RandomSelector,
+    doc="uniform sampling without replacement (FedAvg baseline)",
+))

@@ -19,8 +19,9 @@ tests/test_fastpath_parity.py and tests/test_pipeline_parity.py):
   parameter/cache buffers (``repro.sim.pipeline``); straggler updates live
   in a device-resident slot cache (``repro.core.stale_cache``), local
   batches are gathered in-program from a device copy of the dataset, and
-  the only per-round device->host traffic is Oort's stat-utility vector
-  (when an Oort selector is present) plus accuracy/loss every
+  the only per-round device->host traffic is the stat-utility vector
+  (when a ``needs_feedback`` selector — Oort, UCB, contribution — is
+  configured; see ``repro.selection``) plus accuracy/loss every
   ``eval_every`` rounds.  ``SimConfig.shard_participants`` additionally
   splits the packed cohort rows over a participant device-mesh axis
   (``repro.sim.participant_sharding``) for 10k+ learner cohorts — the
@@ -77,7 +78,8 @@ from repro.core.aggregation import (fedavg_apply, stale_synchronous_aggregate,
                                     yogi_apply_flat, yogi_init, yogi_init_flat)
 from repro.core.apt import AdaptiveParticipantTarget
 from repro.core.availability import AvailabilityForecaster, ForecasterBank
-from repro.core.selection import SELECTORS, LearnerView, OortSelector, PrioritySelector
+from repro.selection import (SELECTOR_TABLE, LearnerView, build_selector,
+                             normalize_selector_params)
 from repro.faults.attacks import attack_key
 from repro.robust.aggregators import robust_host_aggregate, robust_key
 from repro.sim import devices as dev
@@ -145,7 +147,12 @@ class SimConfig:
     mapping: str = "uniform"          # uniform | fedscale | label_{balanced,uniform,zipf}
     n_learners: int = 200
     rounds: int = 200
-    selector: str = "random"          # random | oort | priority | safa
+    selector: str = "random"          # any repro.selection strategy: random |
+                                      # oort | priority | safa | flips | ucb |
+                                      # contribution (+ registered plugins)
+    selector_params: tuple = ()       # ((knob, value), ...) strategy knobs —
+                                      # validated against the SelectorSpec,
+                                      # folded into selector_key/pipeline_key
     server_opt: str = "fedavg"        # fedavg | yogi server optimizer (named
                                       # `aggregator` before PR 8; old configs
                                       # migrate in __post_init__)
@@ -225,6 +232,13 @@ class SimConfig:
             self.aggregator = "saa"
         from repro.faults.attacks import ATTACK_KINDS
         from repro.robust import ROBUST_AGGREGATORS
+        if self.selector not in SELECTOR_TABLE:
+            raise ValueError(f"unknown selector {self.selector!r} "
+                             f"(choose from {tuple(SELECTOR_TABLE)})")
+        # canonical sorted-tuple form: hashable (pipeline_key), picklable
+        # (checkpoints), and knob-validated at config time
+        self.selector_params = normalize_selector_params(
+            self.selector, self.selector_params)
         if self.aggregator not in ROBUST_AGGREGATORS:
             raise ValueError(f"unknown aggregator {self.aggregator!r} "
                              f"(choose from {ROBUST_AGGREGATORS})")
@@ -391,8 +405,12 @@ class Simulator:
             self.fbank = None
             self.forecasters = [AvailabilityForecaster() for _ in range(cfg.n_learners)]
         self._warmup_forecasters()
-        sel_cls = SELECTORS[cfg.selector]
-        self.selector = sel_cls()
+        # strategy-table build: the spec's static flags drive the engine's
+        # scheduling rules, the factory gets the build-time world state
+        # (FLIPS clusters the substrate's label shards here)
+        self._sel_spec = SELECTOR_TABLE[cfg.selector]
+        self.selector = build_selector(cfg, substrate=substrate,
+                                       durations=self.durations)
         self.apt = AdaptiveParticipantTarget(n0=cfg.n_target) if cfg.apt else None
         self.params = substrate.params0
         self._flat_spec = substrate.flat_spec
@@ -582,7 +600,7 @@ class Simulator:
         arrivals.sort()
 
         # --- round end time ---------------------------------------
-        if cfg.selector == "safa":
+        if self._sel_spec.select_all:
             need = max(1, int(np.ceil(cfg.safa_target_ratio * len(chosen))))
             t_end = (arrivals[need - 1][0] if len(arrivals) >= need
                      else t_now + cfg.deadline)
@@ -598,7 +616,8 @@ class Simulator:
         for (arr, i) in arrivals:
             lid = chosen[i]
             feedback.append((lid, i, durs[i]))
-            if arr <= t_end and (cfg.setting == "DL" or cfg.selector == "safa"
+            if arr <= t_end and (cfg.setting == "DL"
+                                 or self._sel_spec.select_all
                                  or len(fresh_rows) < n_t):
                 fresh_rows.append(i)
                 self.acct.unique.add(lid)
@@ -635,8 +654,9 @@ class Simulator:
 
     def _apply_feedback(self, r: int, sched: RoundSchedule, l2s) -> None:
         """Selector feedback for every arrival, in arrival order.  ``l2s``
-        holds the per-row Oort loss stats (None when no selector consumes
-        them — only Oort does — in which case stat_util is reported as 0)."""
+        holds the per-row loss stats consumed by ``needs_feedback``
+        selectors (Oort, UCB, contribution); None when the fused pipeline
+        skipped the fetch, in which case stat_util is reported as 0."""
         cfg = self.cfg
         for (lid, i, dur) in sched.feedback:
             stat_util = (float(cfg.local_steps * cfg.local_batch * l2s[i])

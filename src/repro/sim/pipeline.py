@@ -12,7 +12,8 @@ optimizer buffers.  Host<->device traffic per round:
       ownership, cache scatter slots, aggregation gather/mask arrays) via
       explicit ``jax.device_put`` — a few KB of int32/bool, never update
       rows or batch data (the dataset lives on device for the whole run);
-  device -> host: nothing, unless an Oort selector needs its per-row
+  device -> host: nothing, unless a ``needs_feedback`` selector (Oort,
+      UCB, contribution — see ``repro.selection``) needs its per-row
       stat-utility feedback (a (R,) fp32 vector), plus accuracy/loss on
       ``eval_every`` boundaries.
 
@@ -28,11 +29,14 @@ state machine is *prescheduled* K rounds ahead — legal because nothing it
 decides reads update values — and the K rounds run as one ``lax.scan`` over
 the round body with the donated params/cache/optimizer buffers threaded
 through the scan carry.  Chunks always break at ``eval_every`` boundaries,
-so evaluation, accuracy-target early stop and (for Oort) the stat-utility
-feedback keep their exact round semantics; per-cell results are
-bit-identical to K=1 (asserted by tests/test_chunked_sharded.py).  An Oort
-selector needs its per-round device feedback before the *next* round's
-selection, so its presence forces K=1.
+so evaluation, accuracy-target early stop and the stat-utility feedback
+keep their exact round semantics; per-cell results are bit-identical to
+K=1 (asserted by tests/test_chunked_sharded.py).  A ``needs_feedback``
+selector (``repro.selection``: Oort, UCB, contribution) needs its
+per-round device feedback before the *next* round's selection, so it
+forces K=1 — and because ``selector_key`` is part of ``pipeline_key``,
+only *its own* batch: a feedback cell no longer caps prescheduling for
+feedback-free cells sharing a sweep.
 
 Device sharding (``mesh=``): the round program runs under ``shard_map``
 over a 2-D ``("s", "p")`` mesh (``repro.sim.participant_sharding``; a
@@ -112,6 +116,7 @@ from repro.faults.attacks import apply_attack, attack_key
 from repro.robust.aggregators import (COORD_KINDS, krum_select, robust_key,
                                       trimmed_weighted_aggregate,
                                       weighted_rows)
+from repro.selection import SELECTOR_TABLE, selector_key
 from repro.sim import learner as ln
 from repro.sim.participant_sharding import PART_AXIS, split_balanced
 from repro.telemetry import TelemetrySession
@@ -130,7 +135,7 @@ def pipeline_key(cfg) -> tuple:
     ``repro.sweeps.runner.compat_key`` groups cells by (a superset of) this."""
     return (cfg.benchmark, cfg.local_steps, cfg.local_batch, cfg.local_lr,
             cfg.prox_mu, cfg.rounds, cfg.eval_every, cfg.server_opt,
-            robust_key(cfg), attack_key(cfg),
+            robust_key(cfg), attack_key(cfg), selector_key(cfg),
             cfg.use_agg_kernel,
             cfg.scaling_rule if cfg.use_agg_kernel else None,
             cfg.rounds_per_dispatch, cfg.shard_participants,
@@ -188,6 +193,9 @@ class PipelineStats:
     cross_shard_landings = property(
         lambda s: s._counter("cross_shard_landings").value,
         lambda s, v: setattr(s._counter("cross_shard_landings"), "value", v))
+    feedback_fetches = property(
+        lambda s: s._counter("feedback_fetches").value,
+        lambda s, v: setattr(s._counter("feedback_fetches"), "value", v))
 
     def as_dict(self) -> dict:
         per_round = max(self.rounds, 1)
@@ -205,6 +213,7 @@ class PipelineStats:
             "n_pshards": self.n_pshards,
             "rounds_per_dispatch": self.rounds_per_dispatch,
             "cross_shard_landings": self.cross_shard_landings,
+            "feedback_fetches": self.feedback_fetches,
             "guard": dict(self.guard),
         }
 
@@ -714,11 +723,15 @@ class RoundPipeline:
                                    n_pshards=self.n_pshards)
 
         s = len(sims)
-        # Oort is the only selector that consumes the per-row stat-utility
-        # feedback; without one the round loop fetches nothing per round
-        self._fetch_l2s = any(sim.cfg.selector == "oort" for sim in sims)
-        # Oort's selection feedback is device data needed before the next
-        # round's host decisions, so it caps prescheduling at one round
+        # ``needs_feedback`` selectors (Oort, UCB, contribution, ...)
+        # consume the per-row stat-utility feedback; without one the round
+        # loop fetches nothing per round.  selector_key is part of
+        # pipeline_key, so the batch is selector-uniform and one spec lookup
+        # decides for every cell.
+        sel_spec = SELECTOR_TABLE[cfg0.selector]
+        self._fetch_l2s = sel_spec.needs_feedback
+        # A feedback selector's signal is device data needed before the
+        # next round's host decisions, so it caps prescheduling at one round
         self.k_rounds = (1 if self._fetch_l2s
                          else max(1, int(cfg0.rounds_per_dispatch)))
         self.stats.rounds_per_dispatch = self.k_rounds
@@ -826,7 +839,7 @@ class RoundPipeline:
         # everywhere, so the choice never affects results (bucket_block's
         # contract).
         self._exact = (self.mesh is None and self.k_rounds == 1
-                       and len(sims) == 1 and cfg0.selector != "safa"
+                       and len(sims) == 1 and not sel_spec.select_all
                        and cfg0.rounds >= 24)
         self._eval = _eval_program(self.spec)
         self.done = [False] * s
@@ -989,8 +1002,9 @@ class RoundPipeline:
             len(scheds[i].fresh_rows), len(scheds[i].landing))
             for i in order}
         # telemetry: stale-cache occupancy must be read NOW — later rounds
-        # of the same chunk mutate it before the dispatch runs.  (Oort's
-        # new stragglers are appended post-dispatch, so count them in.)
+        # of the same chunk mutate it before the dispatch runs.  (A feedback
+        # selector's new stragglers are appended post-dispatch, so count
+        # them in.)
         occ = {}
         if self._lane:
             for i in order:
@@ -1316,6 +1330,7 @@ class RoundPipeline:
                 from repro.sim.engine import _InFlight
                 l2s_np = np.asarray(jax.device_get(l2s))
                 self.stats.d2h_bytes += l2s_np.nbytes
+                self.stats.feedback_fetches += 1
                 (w,) = works
                 l2s_flat = l2s_np[0].ravel()  # (flat shard, local row) order
                 for i in w.order:

@@ -1,12 +1,16 @@
 """Sweep demo / smoke entry point.
 
-  PYTHONPATH=src python -m repro.sweeps            # demo grid
-  PYTHONPATH=src python -m repro.sweeps --smoke    # small CI grid
+  PYTHONPATH=src python -m repro.sweeps                  # demo grid
+  PYTHONPATH=src python -m repro.sweeps --smoke          # small CI grid
+  PYTHONPATH=src python -m repro.sweeps --list-selectors # strategy tables
+  PYTHONPATH=src python -m repro.sweeps --selector random,oort,flips,ucb
 
-Expands a policy x SAA x hardware grid, runs it batched, re-runs every cell
-serially to assert bit-identical metrics, prints the paper-style
-resource-to-accuracy table, and writes ``BENCH_sweeps.json`` (batched vs
-serial wall-clock) at the repo root.
+Expands a policy x SAA x hardware grid (or, with ``--selector``, a
+selector-zoo grid racing strategies from ``repro.selection`` under
+matched seeds), runs it batched, re-runs every cell serially to assert
+bit-identical metrics, prints the paper-style resource-to-accuracy table,
+and writes ``BENCH_sweeps.json`` (batched vs serial wall-clock) at the
+repo root.
 """
 from __future__ import annotations
 
@@ -75,7 +79,26 @@ def main(argv=None) -> None:
                          "seeds, so every comparison is matched-condition")
     ap.add_argument("--attack-frac", type=float, default=0.25,
                     help="attacker fraction of the population (with --attack)")
+    ap.add_argument("--selector", default=None, metavar="A,B",
+                    help="race selection strategies: replaces the demo grid's "
+                         "policy axis with a selector axis (comma list from "
+                         "the repro.selection zoo; see --list-selectors)")
+    ap.add_argument("--list-selectors", action="store_true",
+                    help="print the registered selector strategy table "
+                         "(name, cadence, knobs) and exit")
+    ap.add_argument("--list-aggregators", action="store_true",
+                    help="print the registered robust-aggregator strategy "
+                         "table and exit")
     args = ap.parse_args(argv)
+
+    if args.list_selectors or args.list_aggregators:
+        if args.list_selectors:
+            from repro.selection import describe_selectors
+            print(describe_selectors())
+        if args.list_aggregators:
+            from repro.robust.aggregators import describe_aggregators
+            print(describe_aggregators())
+        return
 
     telemetry = None
     if args.telemetry_dir:
@@ -105,6 +128,13 @@ def _run(args, telemetry) -> None:
         return
 
     spec = demo_spec(args.smoke)
+    if args.selector:
+        # the selector axis REPLACES the policy axis: policy presets differ
+        # (partly) by selector, so stacking both would collapse cells onto
+        # identical configs (expand() rejects that); shared-seed pairing
+        # makes the zoo race matched-condition
+        axes = {k: v for k, v in spec.axes.items() if k != "policy"}
+        spec.axes = {"selector": args.selector.split(","), **axes}
     # --aggregator / --attack extend the grid: both are raw SimConfig
     # fields, so they ride the grid's field-axis fallthrough and inherit
     # shared-seed pairing (attack x defense cells see identical cohorts)
@@ -162,9 +192,10 @@ def _run(args, telemetry) -> None:
     print(f"# batched {batched_wall:.2f}s vs serial {serial_wall:.2f}s "
           f"({speedup:.1f}x), per-cell metrics bit-identical\n")
     print(text_table(results))
-    print()
-    print(savings_line(results, {"policy": "relay", "saa": True},
-                       {"policy": "random", "saa": False}))
+    if "policy" in spec.axes:
+        print()
+        print(savings_line(results, {"policy": "relay", "saa": True},
+                           {"policy": "random", "saa": False}))
 
     out = (pathlib.Path(args.out) if args.out else
            pathlib.Path(__file__).resolve().parents[3] / "BENCH_sweeps.json")

@@ -42,8 +42,9 @@ def register_axis(name: str, fn: AxisFn) -> AxisFn:
     return fn
 
 
-# End-to-end policy presets (paper §5 baselines); ``selector`` stays available
-# as a raw axis when only the selection strategy should vary.
+# End-to-end policy presets (paper §5 baselines); use the ``selector`` axis
+# when only the selection strategy should vary (the whole
+# ``repro.selection`` zoo, validated against SELECTOR_TABLE).
 POLICIES = {
     "random": dict(selector="random"),
     "oort": dict(selector="oort"),
@@ -53,7 +54,14 @@ POLICIES = {
                   scaling_rule="relay"),
 }
 
+
+def _selector_axis(v):
+    from repro.selection import SELECTOR_TABLE
+    return {"selector": _check(v, tuple(SELECTOR_TABLE), "selector")}
+
+
 register_axis("policy", lambda v: dict(POLICIES[v]))
+register_axis("selector", _selector_axis)
 register_axis("saa", lambda v: {"saa": bool(v)})
 register_axis("apt", lambda v: {"apt": bool(v)})
 register_axis("hardware", lambda v: {"hardware_scenario": _check(

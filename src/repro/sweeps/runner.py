@@ -12,8 +12,8 @@ axis.  Two executors:
     scatter into the shared device stale cache, gathered (G, n, D) SAA
     aggregation and the batched server apply — is ONE jitted dispatch with
     donated buffers.  Update rows never visit the host; per-round traffic
-    is index arrays down and (with an Oort cell) a stat-utility vector
-    back.  Cells that hit their ``target_accuracy`` drop out of the
+    is index arrays down and (for a ``needs_feedback`` selector batch —
+    Oort, UCB, contribution) a stat-utility vector back.  Cells that hit their ``target_accuracy`` drop out of the
     lockstep batch entirely (shrinking bucket-padded repacking), so a
     sweep's cost tracks live cells rather than S x rounds;
 
@@ -63,11 +63,15 @@ ROW_BLOCK = 128   # packed-row padding bucket granularity (see bucket_block)
 def compat_key(cfg) -> tuple:
     """Cells sharing this key run in one lockstep batch: fields that fix the
     compiled programs' shapes/static arguments or the lockstep cadence.
-    Everything else (selector, SAA, APT, setting, hardware, seeds, beta,
-    server_lr, target_accuracy, and — on the jnp path — scaling_rule, which
-    is a traced per-cell ``lax.switch`` operand) varies freely within a
-    batch; the Pallas sweep kernel is compiled per rule, so kernel-backed
-    cells split by rule.  Fused and per-stage cells never share a batch."""
+    Everything else (SAA, APT, setting, hardware, seeds, beta, server_lr,
+    target_accuracy, and — on the jnp path — scaling_rule, which is a
+    traced per-cell ``lax.switch`` operand) varies freely within a batch;
+    the Pallas sweep kernel is compiled per rule, so kernel-backed cells
+    split by rule.  Fused and per-stage cells never share a batch.  The
+    selector (``selector_key`` inside ``pipeline_key``) splits batches
+    too: batches are selector-uniform, so a feedback selector's K=1 cap
+    and l2s fetch apply only to its own cells — and per-cell results stay
+    bit-identical however the batches regroup (padding invariance)."""
     return pipeline_key(cfg) + (cfg.fused_rounds,)
 
 

@@ -86,6 +86,7 @@ PIPELINE_COUNTERS = (
     "pipeline_d2h_bytes",
     "pipeline_init_h2d_bytes",
     "pipeline_cross_shard_landings",
+    "pipeline_feedback_fetches",
 )
 DISPATCH_KINDS = ("round", "eval", "cache_grow", "repack")
 

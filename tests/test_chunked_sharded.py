@@ -219,8 +219,16 @@ def test_sharded_kernel_cells():
 def test_sharded_transfer_guard_clean():
     """The sharded chunked hot loop performs no implicit transfers: index
     uploads are explicit (sharded) device_puts, eviction fetches explicit
-    device_gets."""
-    cfgs = [c.config for c in _grid(4, rounds_per_dispatch=4)]
+    device_gets.  A directly-built pipeline batch must be selector-uniform
+    (``selector_key`` is part of ``pipeline_key``; the sweep runner's
+    ``compat_key`` grouping guarantees this for sweeps), so the 4 cells
+    vary saa x hardware on one selector."""
+    axes = {"saa": [False, True], "hardware": ["HS1", "HS3"]}
+    cells = SweepSpec(axes=axes,
+                      base={**BASE, "selector": "priority",
+                            "rounds_per_dispatch": 4},
+                      seeds=(0,)).expand()
+    cfgs = [c.config for c in cells]
     mesh = sweep_mesh()
     RoundPipeline([Simulator(c) for c in cfgs], mesh=mesh).run()  # warm
     pipe = RoundPipeline([Simulator(c) for c in cfgs], mesh=mesh)

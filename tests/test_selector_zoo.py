@@ -1,0 +1,401 @@
+"""Selector-zoo plugin interface: ported-strategy bit-parity, the new
+strategies' closed-form oracles, selector_key program-variant folding, and
+the sweep/CLI surfaces.
+
+The ported selectors (random/oort/priority/safa) moved from
+``repro.core.selection`` onto the strategy table verbatim; the frozen
+pre-refactor implementations embedded here are driven through identical
+RNG streams and feedback sequences to pin that the move changed no
+selection decision (RNG-stream bit-parity — the host half of the zoo's
+"bit-identical to HEAD" gate; the substrate half is the batched-vs-serial
+parity asserts below and in tests/test_sweep_parity.py).
+"""
+import copy
+import math
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.selection import (SELECTOR_TABLE, ContributionSelector,
+                             FlipsSelector, LearnerView, OortSelector,
+                             PrioritySelector, RandomSelector, SafaSelector,
+                             Selector, SelectorSpec, UcbSelector,
+                             build_selector, normalize_selector_params,
+                             register_selector, selector_key)
+from repro.selection.flips import kmeans_labels, label_histograms
+from repro.sim.engine import SimConfig, Simulator
+from repro.sim.pipeline import pipeline_key
+from repro.sweeps import SweepSpec, assert_parity, run_batched, run_serial
+from repro.sweeps.grid import axis_updates
+from repro.sweeps.runner import compat_key
+
+# ---------------------------------------------------------------------------
+# Frozen pre-refactor implementations (verbatim selection logic at the time
+# of the move to repro.selection; do NOT "fix" these — they are the oracle)
+# ---------------------------------------------------------------------------
+
+
+class _LegacyRandom:
+    def select_ids(self, round_idx, ids, n_target, rng):
+        if len(ids) <= n_target:
+            return list(ids)
+        return list(rng.choice(ids, size=n_target, replace=False))
+
+
+class _LegacyPriority:
+    def __init__(self, holdoff=5):
+        self.holdoff = holdoff
+        self._held_until = {}
+
+    def select(self, round_idx, checked_in, n_target, rng):
+        eligible = [v for v in checked_in
+                    if self._held_until.get(v.learner_id, -1) < round_idx]
+        if not eligible:
+            eligible = list(checked_in)
+        jitter = rng.random(len(eligible))
+        order = sorted(range(len(eligible)),
+                       key=lambda i: (eligible[i].availability_prob, jitter[i]))
+        chosen = [eligible[i].learner_id for i in order[:n_target]]
+        for lid in chosen:
+            self._held_until[lid] = round_idx + self.holdoff
+        return chosen
+
+
+class _LegacyOort:
+    def __init__(self, alpha=2.0, pacer_delta=10.0, pacer_window=20,
+                 eps0=0.9, eps_min=0.2, eps_decay=0.98):
+        self.alpha = alpha
+        self.pacer_delta = pacer_delta
+        self.pacer_window = pacer_window
+        self.eps = eps0
+        self.eps_min = eps_min
+        self.eps_decay = eps_decay
+        self.t_pref = None
+        self._util_history = []
+        self._stat_util = {}
+        self._duration = {}
+
+    def _utility(self, v):
+        stat = self._stat_util.get(v.learner_id, v.last_stat_util)
+        dur = self._duration.get(v.learner_id, v.est_duration) or 1.0
+        if self.t_pref is not None and dur > self.t_pref:
+            stat *= (self.t_pref / dur) ** self.alpha
+        return stat
+
+    def select(self, round_idx, checked_in, n_target, rng):
+        if self.t_pref is None:
+            durs = [v.est_duration for v in checked_in if v.est_duration > 0]
+            self.t_pref = float(np.percentile(durs, 50)) if durs else 100.0
+        explored = [v for v in checked_in if v.learner_id in self._stat_util]
+        unexplored = [v for v in checked_in
+                      if v.learner_id not in self._stat_util]
+        n_explore = int(round(self.eps * n_target))
+        n_exploit = n_target - n_explore
+        exploit_order = sorted(explored, key=self._utility, reverse=True)
+        chosen = [v.learner_id for v in exploit_order[:n_exploit]]
+        unexplored.sort(key=lambda v: v.est_duration or 1e9)
+        chosen += [v.learner_id for v in unexplored[:n_target - len(chosen)]]
+        if len(chosen) < n_target:
+            rest = [v.learner_id for v in exploit_order[n_exploit:]
+                    if v.learner_id not in chosen]
+            chosen += rest[:n_target - len(chosen)]
+        self.eps = max(self.eps_min, self.eps * self.eps_decay)
+        window_util = sum(self._utility(v) for v in checked_in
+                          if v.learner_id in chosen)
+        self._util_history.append(window_util)
+        h = self._util_history
+        if len(h) >= 2 * self.pacer_window:
+            recent = sum(h[-self.pacer_window:])
+            prev = sum(h[-2 * self.pacer_window:-self.pacer_window])
+            if recent <= prev:
+                self.t_pref += self.pacer_delta
+                self._util_history = h[-self.pacer_window:]
+        return chosen[:n_target]
+
+    def update_feedback(self, learner_id, *, stat_util=None, duration=None,
+                        round_idx=None):
+        if stat_util is not None:
+            self._stat_util[learner_id] = stat_util
+        if duration is not None:
+            self._duration[learner_id] = duration
+
+
+def _views(rng, n):
+    return [LearnerView(learner_id=i,
+                        availability_prob=float(rng.random()),
+                        est_duration=float(10 + 90 * rng.random()))
+            for i in range(n)]
+
+
+def test_random_ported_bit_identical():
+    legacy, new = _LegacyRandom(), RandomSelector()
+    for seed in range(5):
+        r1 = np.random.default_rng(seed)
+        r2 = np.random.default_rng(seed)
+        ids = list(range(30))
+        for r in range(10):
+            assert (legacy.select_ids(r, ids, 7, r1)
+                    == new.select_ids(r, ids, 7, r2))
+
+
+def test_safa_ported_bit_identical():
+    new = SafaSelector()
+    ids = [3, 5, 9, 12]
+    assert new.select_ids(0, ids, 2, np.random.default_rng(0)) == ids
+
+
+def test_priority_ported_bit_identical():
+    legacy, new = _LegacyPriority(), PrioritySelector()
+    setup = np.random.default_rng(7)
+    views = _views(setup, 25)
+    r1 = np.random.default_rng(1)
+    r2 = np.random.default_rng(1)
+    for r in range(20):
+        assert legacy.select(r, views, 6, r1) == new.select(r, views, 6, r2)
+    assert legacy._held_until == new._held_until
+
+
+def test_oort_ported_bit_identical():
+    legacy, new = _LegacyOort(), OortSelector()
+    setup = np.random.default_rng(11)
+    views = _views(setup, 30)
+    fb = np.random.default_rng(13)
+    r1 = np.random.default_rng(2)
+    r2 = np.random.default_rng(2)
+    for r in range(50):
+        a = legacy.select(r, views, 8, r1)
+        b = new.select(r, views, 8, r2)
+        assert a == b
+        # identical post-round feedback (same utilities, same durations)
+        for lid in a:
+            u, d = float(fb.random()), float(10 + 50 * fb.random())
+            legacy.update_feedback(lid, stat_util=u, duration=d, round_idx=r)
+            new.update_feedback(lid, stat_util=u, duration=d, round_idx=r)
+    assert legacy.eps == new.eps
+    assert legacy.t_pref == new.t_pref
+    assert legacy._util_history == new._util_history
+
+
+# ---------------------------------------------------------------------------
+# New strategies: closed-form oracles
+# ---------------------------------------------------------------------------
+
+
+def test_flips_quotas_oracle():
+    f = FlipsSelector(np.zeros(1))
+    # even split
+    assert f.quotas([10, 10, 10, 10], 8) == [2, 2, 2, 2]
+    # remainder to the largest clusters first, cluster id breaks ties
+    assert f.quotas([5, 3, 2], 7) == [3, 2, 2]
+    assert f.quotas([3, 5, 2], 7) == [2, 3, 2]
+    assert f.quotas([4, 4, 2], 7) == [3, 2, 2]
+    # overflow past a cluster's population is redistributed
+    assert f.quotas([1, 9], 6) == [1, 5]
+    assert f.quotas([0, 4, 4], 6) == [0, 3, 3]
+    # cannot exceed the total population
+    assert f.quotas([1, 1], 6) == [1, 1]
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        sizes = list(rng.integers(0, 8, size=int(rng.integers(1, 6))))
+        n_t = int(rng.integers(1, 12))
+        q = f.quotas(sizes, n_t)
+        assert all(0 <= qc <= s for qc, s in zip(q, sizes))
+        assert sum(q) == min(n_t, sum(sizes))
+
+
+def test_flips_cluster_balanced_selection():
+    cluster_of = np.array([0, 0, 0, 0, 1, 1, 1, 1, 2, 2])
+    f = FlipsSelector(cluster_of)
+    chosen = f.select_ids(0, list(range(10)), 6, np.random.default_rng(0))
+    counts = np.bincount(cluster_of[chosen], minlength=3)
+    assert list(counts) == [2, 2, 2]
+    assert len(set(chosen)) == 6
+
+
+def test_flips_kmeans_deterministic():
+    rng = np.random.default_rng(3)
+    hists = rng.random((40, 10))
+    hists /= hists.sum(1, keepdims=True)
+    a = kmeans_labels(hists, 4, seed=17)
+    b = kmeans_labels(hists, 4, seed=17)
+    assert (a == b).all()
+    assert a.shape == (40,) and set(a) <= set(range(4))
+
+
+def test_flips_label_histograms_from_shards():
+    class Data:
+        y_train = np.array([0, 0, 1, 1, 2, 2])
+        n_classes = 3
+        shards = [np.array([0, 1, 2]), np.array([4, 5])]
+    h = label_histograms(Data())
+    assert h.shape == (2, 3)
+    np.testing.assert_allclose(h[0], [2 / 3, 1 / 3, 0])
+    np.testing.assert_allclose(h[1], [0, 0, 1])
+
+
+def test_ucb_score_formula_and_ordering():
+    sel = UcbSelector(c=1.5)
+    for lid, (s, n) in {0: (3.0, 3), 1: (1.0, 1), 2: (4.0, 2)}.items():
+        sel._sum[lid], sel._n[lid] = s, n
+    sel.rounds = 10
+    means = {0: 1.0, 1: 1.0, 2: 2.0}
+    for lid in means:
+        expect = (means[lid] / 2.0
+                  + 1.5 * math.sqrt(2 * math.log(10) / sel._n[lid]))
+        assert sel.score(lid) == pytest.approx(expect)
+    # unexplored arms take strict priority over any explored score
+    chosen = sel.select_ids(10, [0, 1, 2, 7, 8], 2, np.random.default_rng(0))
+    assert set(chosen) == {7, 8}
+    # with no unexplored arms left, picks descend by UCB score (the
+    # under-pulled arm 1 wins on its exploration bonus)
+    chosen = sel.select_ids(11, [0, 1, 2], 2, np.random.default_rng(0))
+    scores = sel._scores()           # rounds already advanced by the call
+    assert chosen == sorted([0, 1, 2], key=lambda a: -scores[a])[:2]
+    assert chosen[0] == 1
+
+
+def test_contribution_decay_and_fairness_floor():
+    sel = ContributionSelector(decay=0.5, fairness_frac=0.2)
+    sel.update_feedback(3, stat_util=4.0)
+    sel.update_feedback(3, stat_util=1.0)
+    assert sel._score[3] == pytest.approx(0.5 * 4.0 + 1.0)
+    # ceil(0.2 * 5) = 1 slot reserved for the longest-starved learner even
+    # when its contribution score is the lowest on the board
+    sel = ContributionSelector(decay=0.9, fairness_frac=0.2)
+    ids = list(range(10))
+    for lid in range(9):
+        sel._score[lid] = 10.0 + lid
+        sel._last_sel[lid] = 5
+    sel._score[9] = 0.0              # never selected, worst score
+    chosen = sel.select_ids(6, ids, 5, np.random.default_rng(0))
+    assert 9 in chosen
+    top = sorted(range(9), key=lambda k: -sel._score[k])[:4]
+    assert set(chosen) - {9} == set(top)
+    assert sel._last_sel[9] == 6
+
+
+def test_zoo_selectors_pickle_and_deepcopy():
+    # capture_state deep-copies the selector for crash-safe resume; every
+    # zoo strategy must round-trip plain pickle too (checkpoint files)
+    cfg = SimConfig(n_learners=20, rounds=2)
+    for name in SELECTOR_TABLE:
+        sel = build_selector(
+            SimConfig(n_learners=20, rounds=2, selector=name),
+            substrate=Simulator(cfg).substrate)
+        sel2 = pickle.loads(pickle.dumps(sel))
+        assert type(sel2) is type(sel)
+        copy.deepcopy(sel)
+
+
+# ---------------------------------------------------------------------------
+# selector_key: per-selector program variants, selector-uniform batches
+# ---------------------------------------------------------------------------
+
+
+def test_selector_key_structure():
+    assert selector_key(SimConfig(selector="random")) == \
+        ("random", (), False, False)
+    assert selector_key(SimConfig(selector="oort"))[2] is True
+    assert selector_key(SimConfig(selector="safa"))[3] is True
+    k = selector_key(SimConfig(selector="ucb",
+                               selector_params={"c": 2.0}))
+    assert k == ("ucb", (("c", 2.0),), True, False)
+
+
+def test_selector_key_folds_into_pipeline_and_compat_key():
+    base = SimConfig(rounds=10)
+    for name in SELECTOR_TABLE:
+        cfg = SimConfig(rounds=10, selector=name)
+        assert selector_key(cfg) in pipeline_key(cfg)
+        if name != "random":
+            assert pipeline_key(cfg) != pipeline_key(base)
+            assert compat_key(cfg) != compat_key(base)
+    # knob values split program variants too
+    a = SimConfig(rounds=10, selector="flips")
+    b = SimConfig(rounds=10, selector="flips",
+                  selector_params={"n_clusters": 2})
+    assert compat_key(a) != compat_key(b)
+
+
+def test_unknown_selector_and_knob_rejected():
+    with pytest.raises(ValueError, match="unknown selector"):
+        SimConfig(selector="nope")
+    with pytest.raises(ValueError, match="unknown knob"):
+        SimConfig(selector="random", selector_params={"k": 1})
+    with pytest.raises(ValueError, match="unknown knob"):
+        normalize_selector_params("ucb", {"c": 1.0, "zz": 2})
+    with pytest.raises(ValueError, match="selector"):
+        axis_updates("selector", "nope")
+    assert axis_updates("selector", "flips") == {"selector": "flips"}
+
+
+def test_register_selector_name_collision():
+    spec = SELECTOR_TABLE["random"]
+    register_selector(spec)            # idempotent re-registration is fine
+    clash = SelectorSpec(name="random", factory=lambda p, c: RandomSelector())
+    with pytest.raises(ValueError, match="already registered"):
+        register_selector(clash)
+
+
+# ---------------------------------------------------------------------------
+# Substrate parity: every zoo strategy, batched vs serial vs chunked
+# ---------------------------------------------------------------------------
+
+_ZOO_BASE = dict(n_learners=30, rounds=4, eval_every=2, n_target=4,
+                 mapping="label_uniform")
+
+
+def test_zoo_batched_vs_serial_parity():
+    spec = SweepSpec(axes={"selector": list(SELECTOR_TABLE)},
+                     base=dict(_ZOO_BASE), seeds=(0,))
+    cells = spec.expand()
+    results, _ = run_batched(cells)
+    serial, _ = run_serial(cells)
+    assert_parity(results, serial)
+
+
+def test_feedback_free_selectors_chunk_bit_identically():
+    import dataclasses
+    free = [n for n, s in SELECTOR_TABLE.items()
+            if not s.needs_feedback and not s.select_all]
+    assert {"random", "priority", "flips"} <= set(free)
+    spec = SweepSpec(axes={"selector": free}, base=dict(_ZOO_BASE), seeds=(0,))
+    cells = spec.expand()
+    results, _ = run_batched(cells)
+    chunked = [dataclasses.replace(c, config=dataclasses.replace(
+        c.config, rounds_per_dispatch=2)) for c in cells]
+    results_k, _ = run_batched(chunked)
+    for a, b in zip(results, results_k):
+        assert dict(a.summary) == dict(b.summary), a.cell.name
+
+
+def test_feedback_selector_forces_k1():
+    from repro.sim.pipeline import RoundPipeline
+    for name, want_k in (("ucb", 1), ("flips", 2)):
+        cfg = SimConfig(selector=name, rounds_per_dispatch=2, **_ZOO_BASE)
+        sim = Simulator(cfg)
+        pipe = RoundPipeline([sim])
+        assert pipe.k_rounds == want_k
+        assert pipe._fetch_l2s == (name == "ucb")
+
+
+def test_selector_params_reach_the_policy():
+    cfg = SimConfig(selector="priority", selector_params={"holdoff": 2},
+                    **_ZOO_BASE)
+    assert cfg.selector_params == (("holdoff", 2),)
+    sim = Simulator(cfg)
+    assert sim.selector.holdoff == 2
+    cfg2 = SimConfig(selector="flips", selector_params={"n_clusters": 2},
+                     **_ZOO_BASE)
+    sim2 = Simulator(cfg2)
+    assert len(set(sim2.selector.cluster_of.tolist())) <= 2
+
+
+def test_list_selectors_cli(capsys):
+    from repro.sweeps.__main__ import main
+    main(["--list-selectors", "--list-aggregators"])
+    out = capsys.readouterr().out
+    for name in SELECTOR_TABLE:
+        assert name in out
+    assert "trimmed_mean" in out

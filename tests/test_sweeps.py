@@ -60,9 +60,16 @@ def test_grid_axis_registry_and_raw_fields():
 def test_compat_key_splits_incompatible_cells():
     a = SimConfig(rounds=10)
     b = SimConfig(rounds=20)
-    c = SimConfig(rounds=10, selector="oort", saa=True, hardware_scenario="HS4")
+    c = SimConfig(rounds=10, saa=True, hardware_scenario="HS4")
     assert compat_key(a) != compat_key(b)
     assert compat_key(a) == compat_key(c)  # host-side knobs batch together
+    # selector_key is part of pipeline_key: an Oort cell gets its own
+    # (K=1, l2s-fetching) batch instead of capping everyone's prescheduling
+    d = SimConfig(rounds=10, selector="oort")
+    e = SimConfig(rounds=10, selector="oort",
+                  selector_params=(("alpha", 1.5),))
+    assert compat_key(a) != compat_key(d)
+    assert compat_key(d) != compat_key(e)  # knobs split variants too
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,181 @@
+"""Doc-snippet checker: extract fenced code blocks from the markdown docs
+and verify they are not stale.
+
+Two block classes, two verification modes:
+
+* ``python`` blocks are **executed**, in order, in one shared namespace
+  per file — so a doc can build something in one block and use it in the
+  next (the ``docs/extending.md`` worked example registers a selector,
+  then runs a Simulator against it).  Docs are written to be runnable at
+  smoke scale by construction; an exception fails the check.
+* ``bash``/``sh``/``shell`` blocks are **statically validated** line by
+  line: for every ``python -m <module>`` invocation the module must
+  import (``find_spec``), and every ``--flag`` token on the line must
+  appear in that module's ``--help`` output (captured once per module) —
+  so renaming or dropping a CLI flag fails the doc that still shows it.
+  ``python path/to/script.py`` lines check the script exists and its
+  flags against its ``--help``.  Env-var prefixes (``PYTHONPATH=src``)
+  and line continuations are understood; non-python commands (``cp``,
+  ``git``...) are skipped.
+
+A fence opened with ```` ```python no-run ```` (or ``bash no-check``) is
+skipped — for illustrative fragments that are not meant to execute.
+
+Usage:
+  PYTHONPATH=src python tools/check_docs.py README.md docs/extending.md
+"""
+from __future__ import annotations
+
+import importlib.util
+import os
+import pathlib
+import re
+import shlex
+import subprocess
+import sys
+
+FENCE = re.compile(r"^```(\w+)?([^\n]*)$")
+_HELP_CACHE: dict = {}
+
+# doc commands are written to run from the repo root (with PYTHONPATH=src);
+# make the checker resolve modules the same way regardless of how it was
+# launched
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+for _p in (str(_ROOT), str(_ROOT / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+
+def _find_spec(mod: str):
+    try:
+        return importlib.util.find_spec(mod)
+    except (ImportError, ModuleNotFoundError, ValueError):
+        return None
+
+
+def extract_blocks(text: str):
+    """Yield (lang, tags, code, start_line) for every fenced block."""
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = FENCE.match(lines[i].strip())
+        if m and m.group(1):
+            lang = m.group(1).lower()
+            tags = (m.group(2) or "").split()
+            body, start = [], i + 1
+            i += 1
+            while i < len(lines) and lines[i].strip() != "```":
+                body.append(lines[i])
+                i += 1
+            yield lang, tags, "\n".join(body), start
+        i += 1
+
+
+def _help_text(argv0: list) -> str:
+    """``--help`` output for a ``python -m mod`` / ``python script`` target,
+    captured once (argparse prints the full option set)."""
+    key = tuple(argv0)
+    if key not in _HELP_CACHE:
+        env = dict(os.environ)
+        env["PYTHONPATH"] = str(_ROOT / "src") + os.pathsep + str(_ROOT)
+        proc = subprocess.run(
+            [sys.executable, *argv0, "--help"],
+            capture_output=True, text=True, timeout=120,
+            cwd=str(_ROOT), env=env)
+        _HELP_CACHE[key] = proc.stdout + proc.stderr
+    return _HELP_CACHE[key]
+
+
+def _join_continuations(text: str):
+    out, acc = [], ""
+    for raw in text.splitlines():
+        line = acc + raw
+        if line.rstrip().endswith("\\"):
+            acc = line.rstrip()[:-1] + " "
+            continue
+        acc = ""
+        if line.strip():
+            out.append(line.strip())
+    return out
+
+
+def check_shell_block(code: str, where: str) -> list:
+    failures = []
+    for line in _join_continuations(code):
+        try:
+            toks = shlex.split(line, comments=True)
+        except ValueError:
+            continue
+        while toks and "=" in toks[0] and not toks[0].startswith("-"):
+            toks = toks[1:]                      # strip FOO=bar prefixes
+        if not toks or not re.match(r"python[0-9.]*$", toks[0]):
+            continue                             # non-python commands: skip
+        toks = toks[1:]
+        if toks[:1] == ["-m"]:
+            if len(toks) < 2:
+                continue
+            mod, target = toks[1], ["-m", toks[1]]
+            if _find_spec(mod) is None:
+                failures.append(f"{where}: module {mod!r} not importable "
+                                f"(stale command: {line})")
+                continue
+            rest = toks[2:]
+        elif toks and toks[0].endswith(".py"):
+            target = [toks[0]]
+            if not pathlib.Path(toks[0]).exists():
+                failures.append(f"{where}: script {toks[0]!r} missing "
+                                f"(stale command: {line})")
+                continue
+            rest = toks[1:]
+        else:
+            continue
+        flags = [t.split("=", 1)[0] for t in rest if t.startswith("--")]
+        if not flags:
+            continue
+        helptext = _help_text(target)
+        for fl in flags:
+            if fl not in helptext:
+                failures.append(f"{where}: flag {fl!r} not in "
+                                f"`python {' '.join(target)} --help` "
+                                f"(stale command: {line})")
+    return failures
+
+
+def check_file(path: pathlib.Path) -> list:
+    failures = []
+    ns: dict = {"__name__": f"__doc_snippet__{path.stem}"}
+    for lang, tags, code, line in extract_blocks(path.read_text()):
+        where = f"{path}:{line}"
+        if any(t.startswith("no-") for t in tags):
+            print(f"skip  {where} ({lang} {' '.join(tags)})")
+            continue
+        if lang == "python":
+            print(f"exec  {where} (python, {len(code.splitlines())} lines)")
+            try:
+                exec(compile(code, where, "exec"), ns)   # noqa: S102
+            except Exception as e:                       # noqa: BLE001
+                failures.append(f"{where}: python block raised "
+                                f"{type(e).__name__}: {e}")
+        elif lang in ("bash", "sh", "shell", "console"):
+            print(f"check {where} ({lang})")
+            failures.extend(check_shell_block(code, where))
+    return failures
+
+
+def main(argv=None) -> int:
+    paths = [pathlib.Path(p) for p in (argv or sys.argv[1:])]
+    if not paths:
+        print("usage: python tools/check_docs.py FILE.md [FILE.md ...]",
+              file=sys.stderr)
+        return 2
+    failures = []
+    for p in paths:
+        failures.extend(check_file(p))
+    for f in failures:
+        print(f"FAIL  {f}", file=sys.stderr)
+    print(f"# {len(paths)} files checked, {len(failures)} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
