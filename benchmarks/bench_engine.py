@@ -232,6 +232,85 @@ def bench_telemetry(n_learners: int = 1000, rounds: int = 6,
     return row
 
 
+LM_KNOBS = (("d_ff", 8), ("d_model", 4), ("n_heads", 1), ("n_layers", 1))
+
+
+def bench_lm(rounds: int = 20, trials: int = 2) -> list[dict]:
+    """Learner-model zoo through the fused pipeline: rounds/sec and
+    eval-loss-at-budget for the ``mlp`` classifier baseline vs a tiny
+    ``transformer`` LM at matched flat dimension (D 12,835 vs 8,364 — the
+    same order of magnitude, so the rows compare round machinery, not
+    model size).  Each model row runs fused AND per-stage flat on one
+    shared substrate and asserts the summaries bit-equal before reporting
+    the fused rounds/sec.  The transformer row additionally races
+    selectors at the same budget (``selector_race``: eval loss per
+    selector) — selector choice must move LM eval loss, the claim the
+    model zoo exists to test.  Row configs are identical in smoke and
+    full runs so the regression guard always finds a matching baseline
+    row; a baseline file without the ``lm`` section skips cleanly."""
+    base = dict(n_learners=32, rounds=rounds, eval_every=max(rounds // 4, 1),
+                seed=0, saa=True, n_target=6, local_steps=2, local_batch=4,
+                dynamic_availability=False)
+    cells = {
+        "mlp": SimConfig(**base),
+        "transformer": SimConfig(benchmark="tokens_skew", model="transformer",
+                                 model_params=LM_KNOBS, **base),
+    }
+    out = []
+    for name, cfg in cells.items():
+        sub = Substrate.build(cfg)
+
+        def run(c):
+            acct = Simulator(c, substrate=sub).run()      # warm the jit caches
+            best = None
+            for _ in range(trials):
+                t0 = time.time()
+                acct = Simulator(c, substrate=sub).run()
+                wall = time.time() - t0
+                if best is None or wall < best["wall_s"]:
+                    losses = [r.loss for r in acct.records
+                              if r.loss == r.loss]
+                    summary = acct.summary()
+                    best = {
+                        "wall_s": round(wall, 3),
+                        "rounds_per_sec": round(
+                            summary["rounds"] / max(wall, 1e-9), 2),
+                        "eval_loss": round(float(losses[-1]), 6),
+                        "summary": {k: (round(v, 6) if isinstance(v, float)
+                                        else v) for k, v in summary.items()},
+                    }
+            return best
+
+        res_f = run(cfg)
+        res_flat = run(dataclasses.replace(cfg, fused_rounds=False))
+        assert res_f["summary"] == res_flat["summary"], \
+            f"fused/flat divergence for model={name}"
+        row = {
+            "model": name,
+            "n_learners": cfg.n_learners,
+            "rounds": rounds,
+            "d": int(np.asarray(Simulator(cfg, substrate=sub)
+                                .flat_params).size),
+            **res_f,
+            "flat_rounds_per_sec": res_flat["rounds_per_sec"],
+            "parity": True,
+        }
+        if name == "transformer":
+            race = {"random": res_f["eval_loss"]}
+            for sel in ("flips", "priority"):
+                race[sel] = run(dataclasses.replace(cfg, selector=sel))[
+                    "eval_loss"]
+            assert len(set(race.values())) > 1, \
+                "selector choice did not move LM eval loss"
+            row["selector_race"] = race
+        out.append(row)
+        print(f"lm/model={name},{1e6 / max(res_f['rounds_per_sec'], 1e-9):.0f},"
+              f"d={row['d']};fused={res_f['rounds_per_sec']};"
+              f"flat={res_flat['rounds_per_sec']};"
+              f"eval_loss={res_f['eval_loss']}")
+    return out
+
+
 def profile_pipeline(n_learners: int, rounds: int) -> dict:
     """Per-stage dispatch counts and host-transfer bytes of the fused round
     loop, run under ``jax.transfer_guard("disallow")`` — an implicit host
@@ -289,6 +368,7 @@ def main() -> None:
         "engine": bench_engine(sizes, rounds, trials=2 if smoke else 3),
         # identical configs in smoke and full (the guard matches rows)
         "participant": bench_participant(trials=2),
+        "lm": bench_lm(trials=2),
         "telemetry": [bench_telemetry(trials=2)],
         "server_agg": bench_server_agg(iters=5 if smoke else 30),
     }

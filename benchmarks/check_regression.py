@@ -51,6 +51,10 @@ COMPARISONS = [
     ("BENCH_engine.json", "telemetry", ("n_learners", "rounds"),
      lambda r: r["full"]["rounds_per_sec"], True,
      "telemetry-full rounds/sec"),
+    ("BENCH_engine.json", "lm", ("model", "n_learners", "rounds"),
+     lambda r: r["rounds_per_sec"], True, "lm fused rounds/sec"),
+    ("BENCH_engine.json", "lm", ("model", "n_learners", "rounds"),
+     lambda r: r["eval_loss"], False, "lm eval loss at budget"),
     ("BENCH_sweeps.json", "sweep", ("s_cells", "n_learners", "rounds"),
      lambda r: r["batched_wall_s"], False, "batched wall s"),
     ("BENCH_sweeps.json", "early_stop",

@@ -1,71 +1,90 @@
-"""End-to-end driver: federated training of a transformer LM with the
-pod-native FL train step (Alg. 2 + Eq. 2 as ONE jitted program).
+"""End-to-end driver: federated transformer-LM training through the fused
+round pipeline — the SAME round API every benchmark uses.
 
-Trains a ~10M-param qwen-family model for a few hundred FedAvg rounds on
-synthetic federated token shards, with a stale participant in every round —
-exercising the same code path the multi-pod dry-run lowers at scale.
+The LM is just a model-zoo entry (``SimConfig(model="transformer")``,
+``repro.learners``): selection, staleness-aware aggregation, guards,
+telemetry and the fused/chunked/sharded substrates all come along for
+free, and per-round host->device traffic stays index-arrays-only.  With
+``--race`` the same cells re-run under several selection strategies on a
+shared substrate (matched seeds), showing selector choice moving LM eval
+loss at equal resource budget — the FLIPS/survey claim on a real model.
 
-  PYTHONPATH=src python examples/federated_lm.py [--rounds 200]
+  PYTHONPATH=src python examples/federated_lm.py [--rounds 30]
+  PYTHONPATH=src python examples/federated_lm.py --race random,oort,flips
+  PYTHONPATH=src python examples/federated_lm.py --rounds 6 --parity
+
+(The pod-scale lowering of the same round — one jitted Alg. 2 + Eq. 2
+step over a ("pod","data") mesh — lives in ``repro.launch.train``; this
+host-scale driver replaced its hand-rolled cohort loop.)
 """
 import argparse
+import dataclasses
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.sim import SimConfig, Simulator
+from repro.sim.engine import Substrate
 
-from repro.checkpoint import save_pytree
-from repro.data import federated_token_shards
-from repro.launch.train import make_fl_train_step
-from repro.models import ModelConfig, init_params
-from repro.models.transformer import lm_loss
+MODEL_PARAMS = (("n_layers", 2), ("d_model", 64), ("n_heads", 2),
+                ("d_ff", 128))
 
-CFG = ModelConfig(arch_id="fed-lm-10m", n_layers=4, d_model=256, n_heads=8,
-                  n_kv_heads=4, d_ff=1024, vocab_size=2048, qkv_bias=True,
-                  param_dtype=jnp.float32)
-P_COHORT, LOCAL_B, SEQ = 8, 4, 64
+
+def run_cell(selector: str, rounds: int, seed: int, substrate=None,
+             fused=True):
+    # static availability: all learners check in every round, so the
+    # n_target budget forces a real selection decision (dynamic traces at
+    # this small scale leave fewer checked-in than the budget, collapsing
+    # every strategy to "take everyone")
+    cfg = SimConfig(benchmark="tokens_skew", model="transformer",
+                    model_params=MODEL_PARAMS, selector=selector,
+                    n_learners=32, rounds=rounds, eval_every=max(rounds // 4, 1),
+                    n_target=6, local_steps=2, local_batch=4, saa=True,
+                    dynamic_availability=False, seed=seed)
+    if not fused:
+        cfg = dataclasses.replace(cfg, fused_rounds=False)
+    sub = substrate if substrate is not None else Substrate.build(cfg)
+    t0 = time.time()
+    acct = Simulator(cfg, substrate=sub).run()
+    s = dict(acct.summary())
+    losses = [r.loss for r in acct.records if r.loss == r.loss]
+    return sub, {"selector": selector,
+                 "eval_loss": losses[-1] if losses else float("nan"),
+                 "accuracy": s["final_accuracy"],
+                 "resource": s["resource_used"],
+                 "wall_s": time.time() - t0,
+                 "summary": s}
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--rounds", type=int, default=200)
-    ap.add_argument("--stale-every", type=int, default=3,
-                    help="every k-th round, 2 participants report stale")
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--race", default=None, metavar="A,B",
+                    help="comma list of selectors to race under matched "
+                         "seeds (see python -m repro.sweeps --list-selectors)")
+    ap.add_argument("--parity", action="store_true",
+                    help="rerun the first cell on the per-stage flat path "
+                         "(fused_rounds=False) and require a bit-identical "
+                         "summary — the CI lm-smoke gate")
     args = ap.parse_args()
 
-    key = jax.random.PRNGKey(0)
-    params = init_params(CFG, key)
-    n_params = sum(x.size for x in jax.tree.leaves(params))
-    print(f"model: {n_params/1e6:.1f}M params, cohort={P_COHORT}x{LOCAL_B}x{SEQ}")
-
-    shards = federated_token_shards(CFG.vocab_size, 64, 128, SEQ, skew=0.3)
-    rng = np.random.default_rng(0)
-    step = jax.jit(make_fl_train_step(CFG, local_lr=0.05, rule="relay",
-                                      local_steps=2))
-    eval_batch = {"tokens": shards[0]["tokens"][:16],
-                  "labels": shards[0]["labels"][:16]}
-
-    t0 = time.time()
-    for r in range(args.rounds):
-        lids = rng.choice(len(shards), P_COHORT, replace=False)
-        toks = np.stack([shards[l]["tokens"][
-            rng.integers(0, len(shards[l]["tokens"]), LOCAL_B)] for l in lids])
-        labs = np.stack([shards[l]["labels"][
-            rng.integers(0, len(shards[l]["labels"]), LOCAL_B)] for l in lids])
-        batch = {"tokens": toks, "labels": labs}
-        stale = (r % args.stale_every == 0)
-        fresh = np.ones(P_COHORT, bool)
-        tau = np.zeros(P_COHORT, np.int32)
-        if stale:
-            fresh[-2:] = False
-            tau[-2:] = rng.integers(1, 4, 2)
-        params, m = step(params, batch, jnp.asarray(fresh), jnp.asarray(tau))
-        if (r + 1) % 25 == 0:
-            ev = float(lm_loss(CFG, params, eval_batch))
-            print(f"round {r+1:4d}  train_loss={float(m['loss']):.3f} "
-                  f"eval_loss={ev:.3f}  ({time.time()-t0:.0f}s)")
-    save_pytree("experiments/fed_lm_final.npz", params)
-    print("saved checkpoint to experiments/fed_lm_final.npz")
+    selectors = args.race.split(",") if args.race else ["random"]
+    sub, rows = None, []
+    for sel in selectors:
+        sub, row = run_cell(sel, args.rounds, args.seed, substrate=sub)
+        rows.append(row)
+        print(f"{row['selector']:>10s}  eval_loss={row['eval_loss']:.4f}  "
+              f"acc={row['accuracy']:.4f}  resource={row['resource']:.1f}  "
+              f"({row['wall_s']:.0f}s)")
+    if len(rows) > 1:
+        best = min(rows, key=lambda r: r["eval_loss"])
+        print(f"# best at equal budget: {best['selector']} "
+              f"(eval loss {best['eval_loss']:.4f})")
+    if args.parity:
+        _, flat = run_cell(selectors[0], args.rounds, args.seed,
+                           substrate=sub, fused=False)
+        assert flat["summary"] == rows[0]["summary"], \
+            "fused/flat LM summary divergence"
+        print("# parity: fused == flat (bit-identical summary)")
 
 
 if __name__ == "__main__":

@@ -21,14 +21,22 @@ from repro.core.aggregation import (  # noqa: F401
     stale_synchronous_aggregate,
     stale_synchronous_aggregate_flat,
 )
-from repro.core.selection import (  # noqa: F401
-    RandomSelector,
-    OortSelector,
-    PrioritySelector,
-    SafaSelector,
-)
 from repro.core.apt import AdaptiveParticipantTarget  # noqa: F401
 from repro.core.availability import (  # noqa: F401
     AvailabilityForecaster,
     ForecasterBank,
 )
+
+# The selector classes moved to ``repro.selection`` (PR 9); the
+# ``repro.core.selection`` shim re-imports them, which would cycle now
+# that selection's base imports ``repro.core.registry`` — so the shim
+# names resolve lazily here instead of at package-import time.
+_SELECTION_NAMES = ("RandomSelector", "OortSelector", "PrioritySelector",
+                    "SafaSelector")
+
+
+def __getattr__(name):
+    if name in _SELECTION_NAMES:
+        from repro import selection as _selection
+        return getattr(_selection, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -35,25 +35,39 @@ def flatten_update(tree):
 
 
 def make_flat_spec(tree):
-    """Flatten spec (treedef, shapes, dtypes) without moving any data.
+    """Flatten spec (treedef, shapes, dtypes, offsets) without moving data.
 
     Compute once per model; reuse for every ``unflatten_update`` of the run —
     the flat fast path's round loop never re-derives it.  All-tuple (and thus
     hashable), so jitted helpers can be cached per spec across instances.
+
+    ``offsets`` holds each leaf's start position in the flat vector plus a
+    final total-D sentinel: ``flat[offsets[i]:offsets[i+1]]`` is leaf ``i``'s
+    segment — the layer-blocked view large-D models (the LM zoo) and the
+    D-blocked aggregation layout slice by.  Consumers that predate the
+    offsets unpack ``spec[:3]``; a flat vector longer than ``offsets[-1]``
+    is treated as block-padded and the tail is ignored.
     """
     leaves, treedef = jax.tree.flatten(tree)
-    return (treedef, tuple(l.shape for l in leaves),
-            tuple(l.dtype for l in leaves))
+    shapes = tuple(l.shape for l in leaves)
+    offs, off = [], 0
+    for s in shapes:
+        offs.append(off)
+        off += int(np.prod(s)) if s else 1
+    return (treedef, shapes, tuple(l.dtype for l in leaves),
+            tuple(offs) + (off,))
 
 
 def flat_dim(spec) -> int:
     """Total flat vector length D for a spec from ``make_flat_spec``."""
+    if len(spec) > 3:
+        return int(spec[3][-1])
     _, shapes, _ = spec
     return int(sum(int(np.prod(s)) if s else 1 for s in shapes))
 
 
 def unflatten_update(flat, spec):
-    treedef, shapes, dtypes = spec
+    treedef, shapes, dtypes = spec[0], spec[1], spec[2]
     leaves, off = [], 0
     for shp, dt in zip(shapes, dtypes):
         n = int(np.prod(shp)) if shp else 1
@@ -251,7 +265,7 @@ def sweep_aggregate_flat(stacked, fresh, tau, valid, beta, *,
 # ---------------------------------------------------------------------------
 
 
-def screen_rows(u, valid, *, clip=None, reject_mult=None):
+def screen_rows(u, valid, *, clip=None, reject_mult=None, norm_d=None):
     """In-program screening of an update operand ``u`` (..., n, D).
 
     The one screening formula every guarded aggregation path runs — the
@@ -276,15 +290,22 @@ def screen_rows(u, valid, *, clip=None, reject_mult=None):
     is not counted).  Returns ``(u_screened, valid_out, n_nonfinite,
     n_norm_rejected, n_clipped)`` with int32 counts summed over the row
     axis.
+
+    ``norm_d`` (D-blocked layouts): the finite test and the squared norms
+    reduce over the leading ``norm_d`` columns only, so a block-padded
+    operand screens bit-identically to its true-D slice (reducing across
+    the appended zero columns would repartition the reduction and move
+    bits); the clip rescale and the zeroing still apply to the full row.
     """
     u = jnp.asarray(u, jnp.float32)
     valid = jnp.asarray(valid, bool)
-    finite = jnp.isfinite(u).all(axis=-1)
+    u_t = u if norm_d is None else u[..., :norm_d]
+    finite = jnp.isfinite(u_t).all(axis=-1)
     v1 = valid & finite
     n_nf = (valid & ~finite).sum(axis=-1).astype(jnp.int32)
     # rejected/padded rows get +inf norms: they sort last and never reach
     # the median index, which counts only surviving rows
-    n2 = jnp.where(v1, jnp.sum(u * u, axis=-1), jnp.inf)
+    n2 = jnp.where(v1, jnp.sum(u_t * u_t, axis=-1), jnp.inf)
     if reject_mult is not None:
         srt = jnp.sort(n2, axis=-1)
         idx = jnp.maximum(v1.sum(axis=-1) - 1, 0) // 2

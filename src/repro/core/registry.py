@@ -1,0 +1,142 @@
+"""Shared strategy-table machinery for the repo's plugin registries.
+
+Three subsystems follow the same "a strategy is a file" pattern:
+participant selection (:mod:`repro.selection`, PR 9), robust
+aggregation (:mod:`repro.robust`, PR 8), and learner models
+(:mod:`repro.learners`, this layer).  Each keeps a module-level table of
+frozen spec dataclasses, registers one spec per file at import time,
+folds a static key derived from the spec into ``pipeline_key`` so sweep
+batches stay program-uniform, and renders a ``--list-*`` CLI table.
+
+This module hosts the shared half: :class:`StrategyTable` (an ordered,
+idempotent registry with knob-aware param normalization) and
+:func:`describe_table` (the one column formatter behind
+``--list-selectors`` / ``--list-aggregators`` / ``--list-models``).
+
+Specs only need three attributes to live in a :class:`StrategyTable`:
+``name`` (the registry key), ``doc`` (one line for the CLI table), and
+``knobs`` (a tuple of :class:`Knob`).  Everything else — factories,
+static-key policy, build contexts — stays subsystem-specific.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Knob:
+    """One tunable parameter of a strategy: name, default, one-line doc."""
+
+    name: str
+    default: float
+    doc: str = ""
+
+
+class StrategyTable:
+    """Ordered name → spec registry shared by the strategy subsystems.
+
+    ``kind`` names the strategy family in error messages ("selector",
+    "aggregator", "model").  Registration is idempotent for an identical
+    spec (modules may be re-imported) and rejects a *different* spec
+    under a taken name — silent strategy replacement would undermine the
+    static-key caching everywhere downstream.
+    """
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._specs: Dict[str, object] = {}
+
+    # -- registration -------------------------------------------------
+    def register(self, spec):
+        existing = self._specs.get(spec.name)
+        if existing is not None:
+            if existing == spec:
+                return spec
+            raise ValueError(
+                f"{self.kind} {spec.name!r} is already registered with a "
+                f"different spec")
+        self._specs[spec.name] = spec
+        return spec
+
+    # -- mapping surface ----------------------------------------------
+    def __contains__(self, name: str) -> bool:
+        return name in self._specs
+
+    def __getitem__(self, name: str):
+        try:
+            return self._specs[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown {self.kind} {name!r} "
+                f"(choose from {self.names()})") from None
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._specs)
+
+    def __len__(self) -> int:
+        return len(self._specs)
+
+    def get(self, name: str, default=None):
+        return self._specs.get(name, default)
+
+    def names(self) -> Tuple[str, ...]:
+        return tuple(self._specs)
+
+    def values(self) -> Tuple[object, ...]:
+        return tuple(self._specs.values())
+
+    def items(self):
+        return self._specs.items()
+
+    # -- knob handling ------------------------------------------------
+    def normalize_params(self, name: str,
+                         params: Optional[Sequence[Tuple[str, object]]]
+                         ) -> Tuple[Tuple[str, object], ...]:
+        """Validate and canonicalize ``(knob, value)`` overrides.
+
+        Returns a sorted tuple of ``(name, value)`` pairs — the hashable,
+        order-independent form the static keys embed (later duplicates
+        win, dict semantics).  Unknown knob names raise with the spec's
+        knob list so CLI typos fail loudly at config-build time, not
+        inside a compiled program.
+        """
+        spec = self[name]
+        known = tuple(k.name for k in spec.knobs)
+        items = sorted(dict(params or ()).items())
+        unknown = [k for k, _ in items if k not in known]
+        if unknown:
+            raise ValueError(
+                f"{self.kind} {name!r}: unknown knob(s) {unknown} "
+                f"(accepted: {list(known) or 'none'})")
+        return tuple(items)
+
+    def knob_values(self, name: str,
+                    params: Optional[Sequence[Tuple[str, object]]] = None
+                    ) -> Dict[str, object]:
+        """Spec defaults overlaid with normalized ``params`` overrides."""
+        spec = self[name]
+        values = {k.name: k.default for k in spec.knobs}
+        for key, value in self.normalize_params(name, params):
+            values[key] = value
+        return values
+
+
+def describe_table(title_row: Sequence[str],
+                   rows: Sequence[Sequence[str]],
+                   footnote: str = "") -> str:
+    """Render a left-justified column table for the ``--list-*`` CLIs.
+
+    All columns except the last are padded to their widest cell; the
+    last column (by convention the doc string) is emitted ragged.  A
+    non-empty ``footnote`` is appended as a trailing paragraph.
+    """
+    table = [tuple(title_row)] + [tuple(r) for r in rows]
+    ncol = len(table[0])
+    widths = [max(len(r[c]) for r in table) for c in range(ncol - 1)]
+    lines = ["  ".join(v.ljust(w) for v, w in zip(r[:-1], widths))
+             + f"  {r[-1]}" for r in table]
+    text = "\n".join(lines)
+    if footnote:
+        text += "\n\n" + footnote
+    return text

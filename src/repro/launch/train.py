@@ -1,5 +1,15 @@
 """The FL round as ONE distributed step (paper Alg. 2 on a TPU pod).
 
+This module is the *pod-scale lowering* of the round, not a second round
+API: host-scale federated training — selection, staleness cache, guards,
+telemetry, sweeps — lives entirely in ``repro.sim`` (``Simulator`` +
+``SimConfig(model=...)``, with the LM zoo a ``repro.learners`` strategy
+table; see ``examples/federated_lm.py``).  What remains here is the thin
+mesh-aware wrapper the multi-pod dry-run (``repro.launch.dryrun``) lowers
+at scale: the same Alg. 2 + Eq. 2 numerics as one jitted SPMD program
+over a ("pod","data") mesh, with the cohort-memory strategies below.
+Keep simulation features out of this file — extend the model zoo instead.
+
 ``fl_train_step(params, batch, fresh, tau)`` runs a cohort of P participants:
 each takes K local SGD steps on its own shard (participants ride the
 ("pod","data") mesh axes), produces a delta, and the server applies the

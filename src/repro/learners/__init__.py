@@ -1,0 +1,15 @@
+"""Learner-model zoo behind the round pipeline ("a model is a file").
+
+The third strategy table (after selection and robust aggregation): a
+model file registers a :class:`~repro.learners.base.ModelSpec` into
+``MODEL_TABLE`` and becomes sweepable via ``SimConfig.model`` /
+``model_params`` on every substrate the flat fast path serves.  See
+``docs/extending.md`` for the contributor guide.
+"""
+from repro.learners.base import (DataMeta, Knob, ModelFns,  # noqa: F401
+                                 ModelSpec)
+from repro.learners.registry import (MODEL_TABLE, build_model,  # noqa: F401
+                                     describe_models, model_key,
+                                     normalize_model_params, register_model)
+from repro.learners import mlp as _mlp  # noqa: F401  (registers "mlp")
+from repro.learners import lm as _lm    # noqa: F401  (registers the LM zoo)

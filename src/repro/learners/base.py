@@ -1,0 +1,85 @@
+"""Model plugin base: the learner-model interface + strategy spec.
+
+A *model* is the third strategy family behind the fused round pipeline
+(after the selectors of :mod:`repro.selection` and the robust
+aggregators of :mod:`repro.robust`): a file registers one
+:class:`ModelSpec` in ``repro.learners.MODEL_TABLE`` and the model is
+sweepable by name everywhere a ``SimConfig.model`` goes — the engine,
+the fused pipeline, the batched sweep runner, and the CLI.
+
+What the engine actually consumes is a :class:`ModelFns` triple of pure
+functions over parameter *pytrees*:
+
+``init(key)``
+    PRNG key -> parameter pytree.  Called once per substrate; the flat
+    ``(D,)`` training row and its :func:`repro.core.aggregation.
+    make_flat_spec` layout are derived from this tree, so everything
+    downstream (stale cache, aggregation kernels, server optimizer)
+    is model-agnostic.
+
+``loss(params, x, y) -> (mean_loss, per_example_losses)``
+    The local-training objective ``jax.value_and_grad`` differentiates.
+    ``per_example_losses`` feeds Oort's statistical utility
+    (``sqrt(mean(losses**2))``), so it must be a per-sample (or
+    per-sequence) vector, not a scalar.
+
+``evaluate(params, x, y) -> (accuracy, loss)``
+    Held-out metric pair for the eval lane.
+
+All three must be *hashable-stable*: ``repro.learners.build_model`` is
+``lru_cache``-d per ``(model, model_params, meta)`` so the returned
+function objects are identical across Simulators of a sweep — they are
+part of the jit/lru cache keys of every compiled round program.
+
+``data_kind`` declares the sample layout the model trains on
+(``"classifier"``: ``x (N, dim) fp32 / y (N,) int``; ``"tokens"``:
+``x (N, S) int32 tokens / y (N, S) int32 next-token labels``) and is
+validated against the benchmark's :class:`DataMeta` at build time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+from repro.core.registry import Knob  # noqa: F401  (re-export for model files)
+
+
+@dataclasses.dataclass(frozen=True)
+class DataMeta:
+    """Static description of a benchmark's sample layout.
+
+    Hashable (it is part of ``build_model``'s cache key); built once per
+    :class:`repro.sim.engine.Substrate` from the seed-built dataset.
+    """
+    kind: str = "classifier"         # classifier | tokens
+    feature_dim: int = 0             # classifier: x feature dimension
+    n_classes: int = 0               # classifier: label cardinality
+    vocab: int = 0                   # tokens: vocabulary size
+    seq_len: int = 0                 # tokens: sequence length
+
+
+class ModelFns(NamedTuple):
+    """The three pure functions the round engine consumes (see module
+    docstring for the exact contracts)."""
+    init: Callable
+    loss: Callable
+    evaluate: Callable
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """One registered learner model (a row of ``MODEL_TABLE``).
+
+    ``build(knobs, meta)`` receives the resolved knob dict (defaults
+    overlaid with the cell's ``model_params``) and the benchmark's
+    :class:`DataMeta`, and returns the :class:`ModelFns` triple;
+    ``data_kind`` is the sample layout it requires; ``kernel`` names the
+    accelerator kernel the forward path routes through (README table).
+    """
+    name: str
+    build: Callable[[dict, DataMeta], ModelFns]
+    doc: str = ""
+    data_kind: str = "classifier"    # classifier | tokens
+    family: str = "dense"            # dense | moe | rnn | ... (listing aid)
+    kernel: str = "-"                # accelerator kernel used, if any
+    knobs: tuple = ()                # Knob(...) entries (model_params)

@@ -1,0 +1,35 @@
+"""The default model: the engine's 2-layer MLP classifier, as a plugin.
+
+This file *wraps* ``repro.sim.learner`` rather than reimplementing it:
+``loss`` and ``evaluate`` are the exact function objects the pre-zoo
+engine compiled against, so a ``SimConfig(model="mlp")`` run (the
+default) produces bit-identical jaxprs — and therefore bit-identical
+results — to the code before the model table existed.  Only ``init``
+closes over the knobs (the hidden width), which is why the knob can
+vary without touching the loss/eval cache identity.
+"""
+from __future__ import annotations
+
+import functools
+
+from repro.learners.base import Knob, ModelFns, ModelSpec
+from repro.learners.registry import register_model
+from repro.sim import learner as ln
+
+
+def _build(knobs: dict, meta) -> ModelFns:
+    hidden = int(knobs["hidden"])
+    init = functools.partial(ln.mlp_init, dim=meta.feature_dim,
+                             n_classes=meta.n_classes, hidden=hidden)
+    return ModelFns(init=init, loss=ln._xent, evaluate=ln.evaluate)
+
+
+register_model(ModelSpec(
+    name="mlp",
+    build=_build,
+    doc="2-layer ReLU MLP classifier (the paper-scale statistical stand-in)",
+    data_kind="classifier",
+    family="dense",
+    kernel="-",
+    knobs=(Knob("hidden", 128, "hidden layer width"),),
+))

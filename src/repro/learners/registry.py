@@ -1,0 +1,88 @@
+"""The model strategy table + the static key folded into pipeline_key.
+
+Mirrors ``repro.selection.registry`` and ``repro.robust.aggregators``:
+adding a model is a file-local change — implement the
+:class:`~repro.learners.base.ModelFns` triple, register a
+:class:`~repro.learners.base.ModelSpec` for it (one ``register_model``
+call at import time), and it is sweepable by name everywhere a
+``SimConfig.model`` goes.  See ``docs/extending.md`` for the worked
+example.
+
+``model_key`` is folded into both ``repro.sim.pipeline.pipeline_key``
+(two cells sharing a fused program must train the same architecture —
+sweep batches stay model-uniform) and ``repro.sim.engine.substrate_key``
+(the initial parameter tree is part of the seed-built world state).
+"""
+from __future__ import annotations
+
+import functools
+
+from repro.core.registry import StrategyTable, describe_table
+from repro.learners.base import DataMeta, ModelFns, ModelSpec
+
+MODEL_TABLE: StrategyTable = StrategyTable("model")
+
+
+def register_model(spec: ModelSpec) -> ModelSpec:
+    """Register a learner model under ``spec.name`` (idempotent for an
+    identical spec; a *different* spec under a taken name is an error)."""
+    return MODEL_TABLE.register(spec)
+
+
+def normalize_model_params(name: str, params) -> tuple:
+    """Canonicalize ``SimConfig.model_params`` to a sorted, hashable
+    ``((knob, value), ...)`` tuple, validating knob names against the
+    spec so a typo'd knob fails at config time, not silently."""
+    return MODEL_TABLE.normalize_params(name, params)
+
+
+def model_key(cfg) -> tuple:
+    """Static descriptor of the learner model for ``pipeline_key``.
+
+    Two configs with equal ``model_key`` share one flat spec, one loss
+    jaxpr, and therefore one fused round program — the full
+    ``(name, params)`` pair is folded in (not just the name) so a
+    ``d_model`` override compiles its own program variant instead of
+    poisoning a shared cache entry.
+    """
+    return (cfg.model, tuple(cfg.model_params or ()))
+
+
+@functools.lru_cache(maxsize=32)
+def build_model(name: str, params: tuple, meta: DataMeta) -> ModelFns:
+    """Resolve ``(model, model_params, meta)`` to its :class:`ModelFns`.
+
+    ``lru_cache``-d so every Simulator of a sweep sharing a model cell
+    receives the *identical* function objects — they key the jitted
+    round-program caches downstream, so cache identity here is what
+    keeps a 64-cell sweep at one compile per program shape.
+    """
+    spec = MODEL_TABLE[name]
+    if spec.data_kind != meta.kind:
+        raise ValueError(
+            f"model {name!r} trains on {spec.data_kind!r} data but the "
+            f"benchmark provides {meta.kind!r} samples")
+    knobs = MODEL_TABLE.knob_values(name, params)
+    fns = spec.build(knobs, meta)
+    if not isinstance(fns, ModelFns):
+        fns = ModelFns(*fns)
+    return fns
+
+
+def describe_models() -> str:
+    """Human-readable strategy table (``--list-models``)."""
+    rows = [(
+        spec.name,
+        spec.family,
+        spec.data_kind,
+        spec.kernel,
+        ", ".join(f"{k.name}={k.default!r}" for k in spec.knobs) or "-",
+        spec.doc,
+    ) for spec in MODEL_TABLE.values()]
+    return describe_table(
+        ("model", "family", "data", "kernel", "knobs (model_params)", "doc"),
+        rows,
+        footnote="data = sample layout the model trains on; benchmarks "
+                 "declare theirs (classifier: speech/cifar10/openimage, "
+                 "tokens: tokens/tokens_skew) and the pair is validated "
+                 "at substrate build time.")

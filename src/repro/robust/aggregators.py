@@ -59,15 +59,14 @@ _AGG_DOCS = {
 
 def describe_aggregators() -> str:
     """Formatted strategy table (``--list-aggregators``)."""
-    rows = [("aggregator", "style", "knobs", "doc")]
+    from repro.core.registry import describe_table
+    rows = []
     for kind in ROBUST_AGGREGATORS:
         style = ("mask" if kind in MASK_KINDS
                  else "coord" if kind in COORD_KINDS else "baseline")
         doc, knobs = _AGG_DOCS[kind]
         rows.append((kind, style, ", ".join(knobs) or "-", doc))
-    widths = [max(len(r[c]) for r in rows) for c in range(3)]
-    return "\n".join("  ".join(v.ljust(w) for v, w in zip(r, widths)) + f"  {r[3]}"
-                     for r in rows)
+    return describe_table(("aggregator", "style", "knobs", "doc"), rows)
 
 
 def robust_key(cfg) -> Optional[Tuple]:

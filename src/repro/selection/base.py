@@ -37,6 +37,8 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core import registry as _registry
+
 
 @dataclasses.dataclass
 class LearnerView:
@@ -86,12 +88,9 @@ class BuildContext:
     durations: Optional[np.ndarray] = None
 
 
-@dataclasses.dataclass(frozen=True)
-class Knob:
-    """One documented ``SimConfig.selector_params`` knob."""
-    name: str
-    default: object
-    doc: str = ""
+# One documented ``SimConfig.selector_params`` knob — the shared
+# strategy-table dataclass (re-exported here for selector files).
+Knob = _registry.Knob
 
 
 @dataclasses.dataclass(frozen=True)

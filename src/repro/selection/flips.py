@@ -26,7 +26,7 @@ from repro.selection.registry import register_selector
 
 def label_histograms(data) -> np.ndarray:
     """(n_learners, n_classes) row-normalized label distributions from a
-    ``repro.sim.partition.FederatedDataset``'s shards."""
+    classifier ``repro.sim.partition.FederatedDataset``'s shards."""
     y = np.asarray(data.y_train)
     n_classes = int(data.n_classes)
     hists = np.zeros((len(data.shards), n_classes), np.float64)
@@ -34,6 +34,36 @@ def label_histograms(data) -> np.ndarray:
         h = np.bincount(y[np.asarray(shard, int)], minlength=n_classes)
         hists[i] = h / max(h.sum(), 1)
     return hists
+
+
+def token_histograms(data, top_k: int = 64) -> np.ndarray:
+    """(n_learners, top_k) row-normalized unigram histograms for a token
+    ``FederatedDataset`` — the LM analogue of the label distribution.
+
+    The vocabulary is restricted to the ``top_k`` globally most frequent
+    tokens (count desc, token id asc on ties): the skewed-unigram mappings
+    concentrate their signal there, and a fixed small feature keeps the
+    k-means distance geometry comparable to the classifier case instead of
+    drowning it in thousands of near-zero tail frequencies."""
+    x = np.asarray(data.x_train)
+    vocab = int(data.vocab)
+    top_k = max(1, min(int(top_k), vocab))
+    glob = np.bincount(x.reshape(-1), minlength=vocab)
+    top = np.lexsort((np.arange(vocab), -glob))[:top_k]
+    hists = np.zeros((len(data.shards), top_k), np.float64)
+    for i, shard in enumerate(data.shards):
+        h = np.bincount(x[np.asarray(shard, int)].reshape(-1),
+                        minlength=vocab)[top]
+        hists[i] = h / max(h.sum(), 1)
+    return hists
+
+
+def learner_histograms(data, top_k: int = 64) -> np.ndarray:
+    """Per-learner data-distribution features for clustering, dispatched on
+    the dataset's sample layout (``FederatedDataset.kind``)."""
+    if getattr(data, "kind", "classifier") == "tokens":
+        return token_histograms(data, top_k=top_k)
+    return label_histograms(data)
 
 
 def kmeans_labels(hists: np.ndarray, k: int, seed: int,
@@ -121,10 +151,11 @@ class FlipsSelector(Selector):
 def _build(params, ctx):
     n_clusters = int(params.get("n_clusters", 4))
     iters = int(params.get("kmeans_iters", 8))
+    top_k = int(params.get("token_top_k", 64))
     if ctx.substrate is None:
         raise ValueError("flips selector needs a substrate (label shards) "
                          "to cluster at build time")
-    hists = label_histograms(ctx.substrate.data)
+    hists = learner_histograms(ctx.substrate.data, top_k=top_k)
     # seeded from the cell's config seed: cells sharing a seed share the
     # clustering (and the substrate build it reads), bit-identically on
     # every substrate/execution path
@@ -139,5 +170,7 @@ register_selector(SelectorSpec(
     cls=FlipsSelector,
     doc="FLIPS: label-distribution k-means, per-cluster budget shares",
     knobs=(Knob("n_clusters", 4, "label-distribution clusters"),
-           Knob("kmeans_iters", 8, "fixed k-means iterations")),
+           Knob("kmeans_iters", 8, "fixed k-means iterations"),
+           Knob("token_top_k", 64,
+                "token workloads: unigram histogram width")),
 ))

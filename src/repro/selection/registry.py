@@ -1,18 +1,22 @@
 """The selector strategy table + the static key folded into pipeline_key.
 
-Mirrors ``repro.robust.aggregators``: adding a selector is a file-local
-change — write a ``Selector`` subclass, register a ``SelectorSpec`` for it
-(one ``register_selector`` call at import time), and it is sweepable by
-name everywhere a ``SimConfig.selector`` goes.  See ``docs/extending.md``
-for the worked example.
+Mirrors ``repro.robust.aggregators`` and ``repro.learners``: adding a
+selector is a file-local change — write a ``Selector`` subclass, register
+a ``SelectorSpec`` for it (one ``register_selector`` call at import
+time), and it is sweepable by name everywhere a ``SimConfig.selector``
+goes.  See ``docs/extending.md`` for the worked example.
+
+The registry mechanics (idempotent registration, knob validation, the
+``--list-*`` column formatter) live in :mod:`repro.core.registry`'s
+shared :class:`~repro.core.registry.StrategyTable`; this module keeps
+the selection-specific surface: ``selector_key`` and ``build_selector``.
 """
 from __future__ import annotations
 
-from typing import Dict
-
+from repro.core.registry import StrategyTable, describe_table
 from repro.selection.base import SelectorSpec
 
-SELECTOR_TABLE: Dict[str, SelectorSpec] = {}
+SELECTOR_TABLE: StrategyTable = StrategyTable("selector")
 
 
 def register_selector(spec: SelectorSpec) -> SelectorSpec:
@@ -21,25 +25,14 @@ def register_selector(spec: SelectorSpec) -> SelectorSpec:
     Idempotent re-registration of the identical spec is allowed (module
     reloads); a *different* spec under a taken name is an error.
     """
-    prev = SELECTOR_TABLE.get(spec.name)
-    if prev is not None and prev != spec:
-        raise ValueError(f"selector {spec.name!r} already registered")
-    SELECTOR_TABLE[spec.name] = spec
-    return spec
+    return SELECTOR_TABLE.register(spec)
 
 
 def normalize_selector_params(name: str, params) -> tuple:
     """Canonicalize ``SimConfig.selector_params`` to a sorted, hashable
     ``((knob, value), ...)`` tuple, validating knob names against the
     spec so a typo'd knob fails at config time, not silently."""
-    spec = SELECTOR_TABLE[name]
-    items = sorted(dict(params or ()).items())
-    unknown = [k for k, _ in items if k not in spec.knob_names()]
-    if unknown:
-        raise ValueError(
-            f"selector {name!r}: unknown knob(s) {unknown} "
-            f"(accepted: {list(spec.knob_names()) or 'none'})")
-    return tuple(items)
+    return SELECTOR_TABLE.normalize_params(name, params)
 
 
 def selector_key(cfg) -> tuple:
@@ -66,23 +59,14 @@ def build_selector(cfg, substrate=None, durations=None):
 
 def describe_selectors() -> str:
     """Human-readable strategy table (``--list-selectors``)."""
-    rows = [("selector", "K", "cohort", "knobs (selector_params)", "")]
-    for spec in SELECTOR_TABLE.values():
-        rows.append((
-            spec.name,
-            "1" if spec.needs_feedback else "free",
-            "all available" if spec.select_all else "n_target",
-            ", ".join(f"{k.name}={k.default!r}" for k in spec.knobs) or "-",
-            spec.doc,
-        ))
-    widths = [max(len(r[i]) for r in rows) for i in range(4)]
-    out = []
-    for i, r in enumerate(rows):
-        line = "  ".join(c.ljust(w) for c, w in zip(r[:4], widths)).rstrip()
-        out.append(f"{line}  {r[4]}".rstrip())
-        if i == 0:
-            out.append("-" * len(out[0]))
-    out.append("")
-    out.append("K = rounds_per_dispatch cap: feedback selectors consume the "
-               "per-round device stat-utility vector, forcing K=1.")
-    return "\n".join(out)
+    rows = [(
+        spec.name,
+        "1" if spec.needs_feedback else "free",
+        "all available" if spec.select_all else "n_target",
+        ", ".join(f"{k.name}={k.default!r}" for k in spec.knobs) or "-",
+        spec.doc,
+    ) for spec in SELECTOR_TABLE.values()]
+    return describe_table(
+        ("selector", "K", "cohort", "knobs (selector_params)", "doc"), rows,
+        footnote="K = rounds_per_dispatch cap: feedback selectors consume "
+                 "the per-round device stat-utility vector, forcing K=1.")

@@ -96,27 +96,32 @@ HOUR = 3600.0
 # ---------------------------------------------------------------------------
 
 
-def flat_cohort_step(flat_params, bx, by, *, spec, lr, prox_mu):
+def flat_cohort_step(flat_params, bx, by, *, spec, lr, prox_mu,
+                     loss=ln._xent):
     """One round of local training as a pure function of the flat model.
 
-    flat_params: (D,) fp32 in ``spec`` leaf order; bx: (m, steps, batch, dim);
-    by: (m, steps, batch).  Returns ((m, D) flat deltas, (m,) losses,
-    (m,) Oort l2 stats).  Rows are independent under vmap, so padding rows
-    never perturb real rows, and the whole step can be vmapped along a
-    leading sweep axis (or packed as per-row parameters) with bit-identical
-    per-row results — the property ``repro.sweeps.runner`` builds on.
+    flat_params: (D,) fp32 in ``spec`` leaf order; bx: (m, steps, batch, ...);
+    by: (m, steps, batch, ...).  Returns ((m, D) flat deltas, (m,) losses,
+    (m,) Oort l2 stats).  ``loss`` is the model's objective from the model
+    table (the default is the MLP's).  Rows are independent under vmap, so
+    padding rows never perturb real rows, and the whole step can be vmapped
+    along a leading sweep axis (or packed as per-row parameters) with
+    bit-identical per-row results — the property ``repro.sweeps.runner``
+    builds on.
     """
     step = functools.partial(ln.local_train_flat, spec=spec, lr=lr,
-                             prox_mu=prox_mu)
+                             prox_mu=prox_mu, loss=loss)
     return jax.vmap(step, in_axes=(None, 0, 0))(flat_params, bx, by)
 
 
 @functools.lru_cache(maxsize=8)
-def _cohort_step_fn(spec, lr, prox_mu):
-    """Jitted ``flat_cohort_step``, cached per (spec, lr, prox_mu) so every
-    Simulator with the same model/hyperparameters shares one program."""
+def _cohort_step_fn(spec, lr, prox_mu, loss=ln._xent):
+    """Jitted ``flat_cohort_step``, cached per (spec, lr, prox_mu, loss) so
+    every Simulator with the same model/hyperparameters shares one
+    program (``repro.learners.build_model`` hands out stable function
+    objects, so the loss is cache-key-safe)."""
     return jax.jit(functools.partial(flat_cohort_step, spec=spec, lr=lr,
-                                     prox_mu=prox_mu))
+                                     prox_mu=prox_mu, loss=loss))
 
 
 @functools.lru_cache(maxsize=2)
@@ -131,9 +136,9 @@ def _yogi_flat_fn():
 
 
 @functools.lru_cache(maxsize=8)
-def _flat_eval_fn(spec):
-    return jax.jit(lambda flat, x, y: ln.evaluate(unflatten_update(flat, spec),
-                                                  x, y))
+def _flat_eval_fn(spec, evaluate=ln.evaluate):
+    return jax.jit(lambda flat, x, y: evaluate(unflatten_update(flat, spec),
+                                               x, y))
 
 
 @functools.lru_cache(maxsize=8)
@@ -223,6 +228,12 @@ class SimConfig:
                                       # the in-program round-stats lane +
                                       # per-round JSONL events.  Static in
                                       # pipeline_key (program structure)
+    model: str = "mlp"                # learner model: any repro.learners
+                                      # strategy — mlp | transformer | moe |
+                                      # rwkv6 (+ registered plugins); folded
+                                      # into pipeline_key and substrate_key
+    model_params: tuple = ()          # ((knob, value), ...) model knobs —
+                                      # validated against the ModelSpec
 
     def __post_init__(self):
         # pre-PR-8 configs (and their snapshots) used `aggregator` for the
@@ -245,12 +256,27 @@ class SimConfig:
         if self.attack not in ATTACK_KINDS:
             raise ValueError(f"unknown attack {self.attack!r} "
                              f"(choose from {ATTACK_KINDS})")
+        # model-table validation (lazy import: repro.learners imports the
+        # sim package for the MLP wrapper, so engine must not import it at
+        # module level)
+        from repro.learners import MODEL_TABLE, normalize_model_params
+        if self.model not in MODEL_TABLE:
+            raise ValueError(f"unknown model {self.model!r} "
+                             f"(choose from {tuple(MODEL_TABLE)})")
+        self.model_params = normalize_model_params(self.model,
+                                                   self.model_params)
+        if self.model != "mlp" and not self.fast_path:
+            raise ValueError(
+                f"model {self.model!r} requires the flat fast path "
+                "(fast_path=True) — the legacy pytree round loop is "
+                "MLP-only")
 
 
 def substrate_key(cfg: SimConfig) -> tuple:
     """The config fields that determine the seed-built world state."""
     return (cfg.benchmark, cfg.mapping, cfg.n_learners, cfg.seed,
-            cfg.dynamic_availability)
+            cfg.dynamic_availability, cfg.model,
+            tuple(cfg.model_params or ()))
 
 
 @dataclasses.dataclass
@@ -277,20 +303,35 @@ class Substrate:
     params0: dict                      # initial model pytree (read-only, shared)
     flat_params0: np.ndarray           # same model, flat fp32 (D,)
     flat_spec: tuple
+    meta: object = None                # repro.learners.DataMeta of the dataset
+    model_fns: object = None           # repro.learners.ModelFns (init/loss/eval)
     _warmed: Optional[tuple] = None    # lazily-built fast-path forecaster warmup
 
     @staticmethod
     def build(cfg: SimConfig) -> "Substrate":
+        from repro.learners import DataMeta, build_model
         rng = np.random.default_rng(cfg.seed)
-        x_tr, y_tr, x_te, y_te = part.make_dataset(cfg.benchmark, rng)
-        shards = part.partition(y_tr, cfg.n_learners, cfg.mapping, rng)
+        if part.benchmark_kind(cfg.benchmark) == "tokens":
+            # token benchmarks carry their own shard structure; profiles and
+            # traces still consume this generator, in the same order the
+            # classifier branch draws them
+            data = part.make_token_dataset(cfg.benchmark, cfg.n_learners,
+                                           cfg.seed)
+            meta = DataMeta(kind="tokens", vocab=data.vocab,
+                            seq_len=int(data.x_train.shape[1]))
+        else:
+            x_tr, y_tr, x_te, y_te = part.make_dataset(cfg.benchmark, rng)
+            shards = part.partition(y_tr, cfg.n_learners, cfg.mapping, rng)
+            data = part.FederatedDataset(cfg.benchmark, x_tr, y_tr, x_te,
+                                         y_te, shards)
+            meta = DataMeta(kind="classifier",
+                            feature_dim=int(x_tr.shape[1]),
+                            n_classes=data.n_classes)
         base_profiles = dev.sample_profiles(cfg.n_learners, rng)   # HS1 base
         traces = tr.make_traces(cfg.n_learners, rng,
                                 dynamic=cfg.dynamic_availability)
-        data = part.FederatedDataset(cfg.benchmark, x_tr, y_tr, x_te, y_te,
-                                     shards)
-        params0 = ln.mlp_init(jax.random.PRNGKey(cfg.seed),
-                              x_tr.shape[1], data.n_classes)
+        model_fns = build_model(cfg.model, tuple(cfg.model_params), meta)
+        params0 = model_fns.init(jax.random.PRNGKey(cfg.seed))
         flat_spec = agg.make_flat_spec(params0)
         flat0, _ = agg.flatten_update(params0)
         return Substrate(key=substrate_key(cfg), data=data,
@@ -298,7 +339,7 @@ class Substrate:
                          trace_bank=tr.TraceBank(traces),
                          rng_state=rng.bit_generator.state,
                          params0=params0, flat_params0=np.asarray(flat0),
-                         flat_spec=flat_spec)
+                         flat_spec=flat_spec, meta=meta, model_fns=model_fns)
 
     def warmed_fbank(self) -> tuple:
         """Pre-deployment forecaster history (paper App. A step 2), computed
@@ -414,6 +455,7 @@ class Simulator:
         self.apt = AdaptiveParticipantTarget(n0=cfg.n_target) if cfg.apt else None
         self.params = substrate.params0
         self._flat_spec = substrate.flat_spec
+        self._model_fns = substrate.model_fns  # ModelFns(init, loss, evaluate)
         if cfg.fast_path:
             self.flat_params = jnp.asarray(substrate.flat_params0)
             self.flat_opt_state = (yogi_init_flat(len(substrate.flat_params0))
@@ -560,7 +602,8 @@ class Simulator:
             by = np.concatenate([plan.by,
                                  np.broadcast_to(plan.by[:1],
                                                  (m - k,) + plan.by.shape[1:])])
-            step = _cohort_step_fn(self._flat_spec, cfg.local_lr, cfg.prox_mu)
+            step = _cohort_step_fn(self._flat_spec, cfg.local_lr, cfg.prox_mu,
+                                   self._model_fns.loss)
             deltas, losses, l2s = step(self.flat_params, bx, by)
             # one device->host copy per round
             return np.asarray(deltas)[:k], np.asarray(losses)[:k], np.asarray(l2s)[:k]
@@ -815,9 +858,10 @@ class Simulator:
 
     def _evaluate(self):
         if self.cfg.fast_path:
-            return _flat_eval_fn(self._flat_spec)(self.flat_params,
-                                                  self.data.x_test,
-                                                  self.data.y_test)
+            return _flat_eval_fn(self._flat_spec,
+                                 self._model_fns.evaluate)(self.flat_params,
+                                                           self.data.x_test,
+                                                           self.data.y_test)
         return ln.evaluate(self.params, self.data.x_test, self.data.y_test)
 
     def _advance_round_state(self, r: int, t_start: float, t_end: float,

@@ -37,20 +37,25 @@ def _xent(params, x, y):
     return losses.mean(), losses
 
 
-@functools.partial(jax.jit, static_argnames=("lr", "prox_mu"))
-def local_train(params, xs, ys, lr: float, prox_mu: float = 0.0):
+@functools.partial(jax.jit, static_argnames=("lr", "prox_mu", "loss"))
+def local_train(params, xs, ys, lr: float, prox_mu: float = 0.0, *,
+                loss=_xent):
     """K local SGD steps (Alg. 2 participant update).
 
-    xs: (n_steps, batch, dim); ys: (n_steps, batch).
+    xs: (n_steps, batch, ...); ys: (n_steps, batch, ...).
     ``prox_mu > 0`` adds FedProx's proximal term mu/2 ||w - w_global||^2
-    (Li et al., MLSys'20) to each local step.
+    (Li et al., MLSys'20) to each local step.  ``loss`` is the model's
+    objective ``(params, x, y) -> (mean, per_example)`` — a static arg
+    (the default is the MLP's cross-entropy), so each model compiles its
+    own program and the default keeps the pre-model-zoo cache key.
     Returns (delta pytree, mean loss, sqrt(mean loss^2) for Oort stat-util).
     """
     p0 = params
+    loss_fn = loss
 
     def step(p, xy):
         x, y = xy
-        (loss, losses), g = jax.value_and_grad(_xent, has_aux=True)(p, x, y)
+        (loss, losses), g = jax.value_and_grad(loss_fn, has_aux=True)(p, x, y)
         if prox_mu > 0.0:
             g = jax.tree.map(lambda gw, w, w0: gw + prox_mu * (w - w0), g, p, p0)
         p = jax.tree.map(lambda w, gw: w - lr * gw, p, g)
@@ -67,22 +72,32 @@ local_train_cohort = jax.jit(
     static_argnames=("lr", "prox_mu"))
 
 
-def local_train_flat(flat_params, xs, ys, *, spec, lr, prox_mu):
+def local_train_flat(flat_params, xs, ys, *, spec, lr, prox_mu,
+                     loss=_xent, out_dim=None):
     """One learner's local round as a pure flat-vector function.
 
-    flat_params: (D,) fp32 in ``spec`` leaf order; xs: (n_steps, batch, dim);
-    returns (flat delta (D,), mean loss, Oort l2 stat).  The unflatten and
+    flat_params: (D,) fp32 in ``spec`` leaf order; xs: (n_steps, batch, ...);
+    returns (flat delta, mean loss, Oort l2 stat).  The unflatten and
     per-leaf flatten are pure reshapes, so the delta rows are bit-identical
     to ``local_train``'s pytree output — this is the unit the engine's
     ``flat_cohort_step`` vmaps over a cohort and the sweep runner vmaps over
     packed (cell, participant) rows with per-row parameters.
+
+    ``out_dim`` (block-padded pipelines): when it exceeds the spec's D the
+    delta is zero-padded to ``(out_dim,)`` so the caller's persistent
+    D-blocked buffers need no per-round repadding; a ``flat_params`` row
+    wider than D is likewise accepted (``unflatten_update`` consumes
+    exactly D leading elements, the padded tail is ignored).
     """
     from repro.core.aggregation import unflatten_update
-    delta, loss, l2 = local_train(unflatten_update(flat_params, spec),
-                                  xs, ys, lr, prox_mu)
+    delta, loss_v, l2 = local_train(unflatten_update(flat_params, spec),
+                                    xs, ys, lr, prox_mu, loss=loss)
     flat = jnp.concatenate([jnp.ravel(l).astype(jnp.float32)
                             for l in jax.tree.leaves(delta)])
-    return flat, loss, l2
+    if out_dim is not None and int(out_dim) > flat.shape[0]:
+        flat = jnp.concatenate(
+            [flat, jnp.zeros((int(out_dim) - flat.shape[0],), jnp.float32)])
+    return flat, loss_v, l2
 
 
 @jax.jit
@@ -109,5 +124,5 @@ def sample_local_batches(shard_idx: np.ndarray, x: np.ndarray, y: np.ndarray,
     round pipeline keeps only ``sample_batch_indices``' output and gathers
     the rows in-program from the device copy of the dataset."""
     take = sample_batch_indices(shard_idx, n_steps, batch, rng)
-    return (x[take].reshape(n_steps, batch, -1),
-            y[take].reshape(n_steps, batch))
+    return (x[take].reshape((n_steps, batch) + x.shape[1:]),
+            y[take].reshape((n_steps, batch) + y.shape[1:]))

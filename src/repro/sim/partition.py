@@ -24,6 +24,24 @@ BENCHMARKS = {
     "openimage": (60, 64, 9000, 1500),
 }
 
+TOKEN_BENCHMARKS = {
+    # name: (vocab, seq_len, samples_per_learner, n_test, unigram skew)
+    "tokens": (1024, 64, 48, 256, 0.0),
+    "tokens_skew": (1024, 64, 48, 256, 0.5),
+}
+
+
+def benchmark_kind(name: str) -> str:
+    """The sample layout a benchmark provides: ``"classifier"`` (x (N, dim)
+    fp32 / y (N,) int labels) or ``"tokens"`` (x (N, S) int32 sequences /
+    y (N, S) next-token labels)."""
+    if name in TOKEN_BENCHMARKS:
+        return "tokens"
+    if name in BENCHMARKS:
+        return "classifier"
+    raise ValueError(f"unknown benchmark {name!r} (choose from "
+                     f"{tuple(BENCHMARKS) + tuple(TOKEN_BENCHMARKS)})")
+
 
 @dataclasses.dataclass
 class FederatedDataset:
@@ -33,9 +51,13 @@ class FederatedDataset:
     x_test: np.ndarray
     y_test: np.ndarray
     shards: list            # shards[i] = np.ndarray of sample indices for learner i
+    kind: str = "classifier"    # sample layout (see ``benchmark_kind``)
+    vocab: int = 0              # tokens: vocabulary size
 
     @property
     def n_classes(self):
+        if self.kind == "tokens":
+            return int(self.vocab)
         return int(self.y_train.max()) + 1
 
 
@@ -53,6 +75,30 @@ def make_dataset(name: str, rng: np.random.Generator, class_sep: float = 2.2):
     x_tr, y_tr = sample(n_train)
     x_te, y_te = sample(n_test)
     return x_tr, y_tr, x_te, y_te
+
+
+def make_token_dataset(name: str, n_learners: int, seed: int) -> FederatedDataset:
+    """Federated token-shard dataset for the LM benchmarks.
+
+    Each learner owns a contiguous index block over the concatenated
+    per-learner corpora of ``repro.data.synthetic.federated_token_shards``
+    (so the data-to-learner mapping *is* the shard structure — token
+    benchmarks ignore ``SimConfig.mapping``); the held-out split is an
+    unskewed corpus drawn from an independent seed offset.  Everything is
+    derived from ``seed`` alone, keeping the substrate-cache contract:
+    cells sharing a seed share bit-identical data.
+    """
+    from repro.data.synthetic import federated_token_shards
+    vocab, seq_len, spl, n_test, skew = TOKEN_BENCHMARKS[name]
+    per = federated_token_shards(vocab, n_learners, spl, seq_len,
+                                 seed=seed, skew=skew)
+    x_tr = np.concatenate([s["tokens"] for s in per])
+    y_tr = np.concatenate([s["labels"] for s in per])
+    shards = [np.arange(i * spl, (i + 1) * spl) for i in range(n_learners)]
+    test = federated_token_shards(vocab, 1, n_test, seq_len,
+                                  seed=seed + 104729, skew=0.0)[0]
+    return FederatedDataset(name, x_tr, y_tr, test["tokens"], test["labels"],
+                            shards, kind="tokens", vocab=vocab)
 
 
 def partition(y: np.ndarray, n_learners: int, mapping: str,

@@ -113,6 +113,7 @@ from repro.core.aggregation import (aggregate_updates, unflatten_update,
 from repro.core.stale_cache import DeviceStaleCache, ShardedSlotAccounts
 from repro.core.staleness import EPS, RULE_ID
 from repro.faults.attacks import apply_attack, attack_key
+from repro.learners import model_key
 from repro.robust.aggregators import (COORD_KINDS, krum_select, robust_key,
                                       trimmed_weighted_aggregate,
                                       weighted_rows)
@@ -140,7 +141,7 @@ def pipeline_key(cfg) -> tuple:
             cfg.scaling_rule if cfg.use_agg_kernel else None,
             cfg.rounds_per_dispatch, cfg.shard_participants,
             cfg.guard, cfg.guard_clip, cfg.guard_reject_mult, cfg.quorum,
-            cfg.telemetry)
+            cfg.telemetry, model_key(cfg))
 
 
 class PipelineStats:
@@ -227,7 +228,7 @@ class PipelineStats:
 def _round_body(params, cache, opt_state, x_tr, y_tr, ints, floats, shapes,
                 *, train_unit, steps, batch, yogi, use_kernel, kernel_rule,
                 single, p_axis=None, guard=None, faulty=False, lane=False,
-                attack=None, robust=None):
+                attack=None, robust=None, norm_d=None):
     """One round's device work on one (local) params/cache block.
 
     params: (rows, D) — cell rows plus one scratch row; cache: (C + 1, D)
@@ -311,9 +312,12 @@ def _round_body(params, cache, opt_state, x_tr, y_tr, ints, floats, shapes,
     beta_g, lr_g = floats[:g_b], floats[g_b:2 * g_b]
 
     # --- train: gather batches + per-row params, one vmapped call ---
-    bx = x_tr[row_sub[:, None], batch_idx]            # (R, steps*batch, dim)
-    bx = bx.reshape(r_b, steps, batch, bx.shape[-1])
-    by = y_tr[row_sub[:, None], batch_idx].reshape(r_b, steps, batch)
+    # trailing sample dims ride along untouched: (dim,) features for the
+    # classifier benchmarks, (S,) token sequences (x AND y) for the LM ones
+    bx = x_tr[row_sub[:, None], batch_idx]            # (R, steps*batch, ...)
+    bx = bx.reshape((r_b, steps, batch) + bx.shape[2:])
+    by = y_tr[row_sub[:, None], batch_idx]
+    by = by.reshape((r_b, steps, batch) + by.shape[2:])
     if single:
         deltas, losses, l2s = jax.vmap(
             train_unit, in_axes=(None, 0, 0))(params[0], bx, by)
@@ -364,9 +368,14 @@ def _round_body(params, cache, opt_state, x_tr, y_tr, ints, floats, shapes,
         # telemetry lane, device half: row-norm stats over the *pre-screen*
         # operand, post-psum (p-replicated, no extra collective).  Finite
         # rows are selected with where() — never multiplied — so one NaN
-        # row cannot poison the finite rows' stats.
-        row_fin = jnp.isfinite(u).all(axis=-1)
-        norms = jnp.sqrt(jnp.sum(u * u, axis=-1))
+        # row cannot poison the finite rows' stats.  Under the persistent
+        # D-blocked layout (``norm_d``) the stats reduce over the true-D
+        # slice: slice-then-reduce is bit-identical to the unpadded layout,
+        # whereas reducing across appended zero columns is not (the SIMD
+        # lane partition of the reduction changes).
+        u_t = u if norm_d is None else u[..., :norm_d]
+        row_fin = jnp.isfinite(u_t).all(axis=-1)
+        norms = jnp.sqrt(jnp.sum(u_t * u_t, axis=-1))
         ok = agg_valid & row_fin
         cnt = ok.sum(axis=-1)
         nonzero = cnt > 0
@@ -389,7 +398,8 @@ def _round_body(params, cache, opt_state, x_tr, y_tr, ints, floats, shapes,
     if guard is not None:
         clip_g, mult_g, quorum_g = guard
         u, v2, n_nf, n_out, _ = agg.screen_rows(u, agg_valid, clip=clip_g,
-                                                reject_mult=mult_g)
+                                                reject_mult=mult_g,
+                                                norm_d=norm_d)
         agg_valid = v2
     robust_coord = robust is not None and robust[0] in COORD_KINDS
     if robust is not None and not robust_coord:
@@ -516,7 +526,8 @@ def _round_body(params, cache, opt_state, x_tr, y_tr, ints, floats, shapes,
 
 @functools.lru_cache(maxsize=16)
 def _chunk_program(spec, lr, prox_mu, steps, batch, yogi, use_kernel,
-                   kernel_rule, guard, faulty, lane, attack, robust, single):
+                   kernel_rule, guard, faulty, lane, attack, robust,
+                   loss, norm_d, out_dim, single):
     """K-round chunk program (unsharded): ``lax.scan`` of the round body
     with the donated params/cache/optimizer buffers as the scan carry and
     the K prescheduled rounds' index arrays as the scanned inputs.  One
@@ -530,14 +541,20 @@ def _chunk_program(spec, lr, prox_mu, steps, batch, yogi, use_kernel,
     the static ``shapes`` tuple — so one explicit ``jax.device_put`` pair
     covers a chunk, and XLA recompiles only when a padding bucket first
     appears.
+
+    ``loss`` is the model's objective (``MODEL_TABLE``; stable per
+    ``build_model``'s cache, so it is a sound lru key), ``norm_d`` /
+    ``out_dim`` the persistent D-blocked layout's true and padded row
+    widths (both ``None`` on the unpadded layout — the HEAD program).
     """
     train_unit = functools.partial(ln.local_train_flat, spec=spec, lr=lr,
-                                   prox_mu=prox_mu)
+                                   prox_mu=prox_mu, loss=loss,
+                                   out_dim=out_dim)
     body = functools.partial(_round_body, train_unit=train_unit, steps=steps,
                              batch=batch, yogi=yogi, use_kernel=use_kernel,
                              kernel_rule=kernel_rule, guard=guard,
                              faulty=faulty, lane=lane, attack=attack,
-                             robust=robust, single=single)
+                             robust=robust, single=single, norm_d=norm_d)
 
     def prog(params, cache, opt_state, x_tr, y_tr, ints_k, floats_k, shapes):
         def step(carry, xs):
@@ -556,7 +573,7 @@ def _chunk_program(spec, lr, prox_mu, steps, batch, yogi, use_kernel,
 @functools.lru_cache(maxsize=16)
 def _sharded_chunk_program(spec, lr, prox_mu, steps, batch, yogi, use_kernel,
                            kernel_rule, guard, faulty, lane, attack, robust,
-                           mesh):
+                           loss, norm_d, out_dim, mesh):
     """K-round chunk program sharded over the 2-D ``("s", "p")`` round
     mesh: ``shard_map`` with the chunk scan inside.  Each (s, p) device
     owns its s-block's ``(s_loc + 1, D)`` params rows (replicated along
@@ -570,12 +587,14 @@ def _sharded_chunk_program(spec, lr, prox_mu, steps, batch, yogi, use_kernel,
     along the row axis (flat shard ``f = j * n_p + q`` owns rows
     ``[f * r_b, (f+1) * r_b)``)."""
     train_unit = functools.partial(ln.local_train_flat, spec=spec, lr=lr,
-                                   prox_mu=prox_mu)
+                                   prox_mu=prox_mu, loss=loss,
+                                   out_dim=out_dim)
     body = functools.partial(_round_body, train_unit=train_unit, steps=steps,
                              batch=batch, yogi=yogi, use_kernel=use_kernel,
                              kernel_rule=kernel_rule, guard=guard,
                              faulty=faulty, lane=lane, attack=attack,
-                             robust=robust, single=False, p_axis=PART_AXIS)
+                             robust=robust, single=False, p_axis=PART_AXIS,
+                             norm_d=norm_d)
     opt_spec = ({"m": P("s"), "v": P("s"), "t": P("s")} if yogi else None)
 
     def prog(params3, cache3, opt_state, x_tr, y_tr, ints3, floats3, shapes):
@@ -619,11 +638,13 @@ def _row_fetch_program():
 
 
 @functools.lru_cache(maxsize=8)
-def _eval_program(spec):
+def _eval_program(spec, evaluate=ln.evaluate):
     """Batched eval over the live cells: gather their parameter rows and
-    each cell's (possibly shared) test set."""
+    each cell's (possibly shared) test set.  ``evaluate`` is the model's
+    metric fn (``MODEL_TABLE``); a block-padded parameter row is accepted
+    as-is — ``unflatten_update`` consumes exactly D leading elements."""
     def ev(flat, ti, x_u, y_u):
-        return ln.evaluate(unflatten_update(flat, spec), x_u[ti], y_u[ti])
+        return evaluate(unflatten_update(flat, spec), x_u[ti], y_u[ti])
 
     def f(params, packed, x_u, y_u):
         l_b = packed.shape[0] // 2
@@ -702,6 +723,39 @@ class RoundPipeline:
         self._lane = int(cfg0.telemetry) >= 2
         self.spec = sims[0]._flat_spec
         self.d = agg.flat_dim(self.spec)
+        # model objective/metric come off the MODEL_TABLE build (stable
+        # objects: build_model caches, and model_key(cfg) ∈ pipeline_key
+        # keeps the batch model-uniform, so sims[0]'s fns serve every cell)
+        self._model_fns = sims[0]._model_fns
+        # persistent D-blocked layout: when every round runs the staleness-
+        # agg Pallas kernel (no attack/robust rewrite bypassing it), the
+        # params/cache/opt buffers are allocated ONCE at the kernel's
+        # D_BLK-padded width instead of jnp.pad-ing the operand each round.
+        # For paper-scale D the per-round pad was cheap; for model-zoo D
+        # (1e5+) it is an O(G·N·D) copy in the hot loop.  Pad columns hold
+        # exact zeros for the life of the run (train deltas are zero-padded
+        # at the source, every server op is columnwise), and every true-D
+        # reduction (lane norms, guard screen) slices before reducing, so
+        # results are bit-identical to the per-round-pad layout.
+        saa = (cfg0.use_agg_kernel and attack_key(cfg0) is None
+               and robust_key(cfg0) is None)
+        if saa:
+            from repro.kernels.staleness_agg.staleness_agg import D_BLK
+            self.d_pad = self.d + ((-self.d) % D_BLK)
+        else:
+            self.d_pad = self.d
+        pad_w = self.d_pad - self.d
+
+        def _pad_rows(a):
+            # widen the trailing D axis with zero columns (jnp/np alike);
+            # identity on the unpadded layout and on non-D leaves (yogi "t")
+            if pad_w and np.ndim(a) and np.shape(a)[-1] == self.d:
+                width = [(0, 0)] * (np.ndim(a) - 1) + [(0, pad_w)]
+                return (np.pad(a, width) if isinstance(a, np.ndarray)
+                        else jnp.pad(a, width))
+            return a
+
+        self._pad_rows = _pad_rows
         self.yogi = cfg0.server_opt == "yogi"
         if mesh is None and cfg0.shard_participants:
             from repro.sim.participant_sharding import participant_mesh
@@ -741,16 +795,18 @@ class RoundPipeline:
             # aggregation groups read and write (never a real cell)
             self.placement = None
             self.params = jnp.concatenate(
-                [jnp.stack([sim.flat_params for sim in sims]),
-                 jnp.zeros((1, self.d), jnp.float32)])
+                [_pad_rows(jnp.stack([sim.flat_params for sim in sims])),
+                 jnp.zeros((1, self.d_pad), jnp.float32)])
             if self.yogi:
                 self.opt_state = jax.tree.map(
-                    lambda *xs: jnp.stack(xs + (jnp.zeros_like(xs[0]),)),
+                    lambda *xs: _pad_rows(
+                        jnp.stack(xs + (jnp.zeros_like(xs[0]),))),
                     *[sim.flat_opt_state for sim in sims])
             else:
                 self.opt_state = None
             self.cache = DeviceStaleCache(
-                self.d, capacity=max(c.cfg.stale_cache_capacity for c in sims),
+                self.d_pad,
+                capacity=max(c.cfg.stale_cache_capacity for c in sims),
                 grow=True)
             self.accounts = None
         else:
@@ -765,15 +821,17 @@ class RoundPipeline:
             self._rep_spec = replicated_spec(mesh)
             self._chunk_spec = chunk_spec(mesh)
             self.params = jax.device_put(
-                self._stack_rows([np.asarray(sim.flat_params)
-                                  for sim in sims], (self.d,), np.float32),
+                self._stack_rows([_pad_rows(np.asarray(sim.flat_params))
+                                  for sim in sims], (self.d_pad,), np.float32),
                 self._shard_spec)
             if self.yogi:
                 leaves = [sim.flat_opt_state for sim in sims]
                 self.opt_state = jax.tree.map(
                     lambda *xs: jax.device_put(
-                        self._stack_rows([np.asarray(x) for x in xs],
-                                         np.shape(xs[0]), np.asarray(xs[0]).dtype),
+                        self._stack_rows(
+                            [_pad_rows(np.asarray(x)) for x in xs],
+                            np.shape(_pad_rows(np.asarray(xs[0]))),
+                            np.asarray(xs[0]).dtype),
                         self._shard_spec),
                     *leaves)
             else:
@@ -785,7 +843,7 @@ class RoundPipeline:
             self.accounts = ShardedSlotAccounts(
                 nflat, capacity=max(c.cfg.stale_cache_capacity for c in sims))
             self.cache_rows = jax.device_put(
-                jnp.zeros((nflat, self.accounts.capacity + 1, self.d),
+                jnp.zeros((nflat, self.accounts.capacity + 1, self.d_pad),
                           jnp.float32), self._cache_spec)
             self._saved = {}      # evicted done cells' final rows (host)
 
@@ -808,7 +866,7 @@ class RoundPipeline:
             self.x_tr, self.y_tr, self.x_te, self.y_te = (
                 jax.device_put(a, self._rep_spec) for a in host)
         self.stats.init_h2d_bytes += (sum(a.nbytes for a in host)
-                                      + (s + self.n_shards) * self.d * 4)
+                                      + (s + self.n_shards) * self.d_pad * 4)
         # guard/fault routing is static program structure: all cells of a
         # batch share the guard config (pipeline_key) and the floats-buffer
         # layout (any faulted cell widens it for the whole batch)
@@ -821,11 +879,14 @@ class RoundPipeline:
         # structure like the guard (pipeline_key keeps batches uniform)
         self._attack = attack_key(cfg0)
         self._robust = robust_key(cfg0)
+        norm_d = self.d if pad_w else None
+        out_dim = self.d_pad if pad_w else None
         prog_args = (self.spec, cfg0.local_lr, cfg0.prox_mu, cfg0.local_steps,
                      cfg0.local_batch, self.yogi, cfg0.use_agg_kernel,
                      cfg0.scaling_rule if cfg0.use_agg_kernel else None,
                      self._guard, self._faulty, self._lane,
-                     self._attack, self._robust)
+                     self._attack, self._robust,
+                     self._model_fns.loss, norm_d, out_dim)
         if self.mesh is not None:
             self._prog = _sharded_chunk_program(*prog_args, mesh)
         else:
@@ -841,7 +902,7 @@ class RoundPipeline:
         self._exact = (self.mesh is None and self.k_rounds == 1
                        and len(sims) == 1 and not sel_spec.select_all
                        and cfg0.rounds >= 24)
-        self._eval = _eval_program(self.spec)
+        self._eval = _eval_program(self.spec, self._model_fns.evaluate)
         self.done = [False] * s
         self._pending_free = []   # freed slots quarantined for one round
 
@@ -853,6 +914,15 @@ class RoundPipeline:
         for i, row in enumerate(rows):
             out[pl.shard_of[i], pl.slot_of[i]] = row
         return out
+
+    def _unpad_leaf(self, a):
+        """Slice a D-blocked leaf back to the engine's true-D width
+        (identity on the unpadded layout and on non-D leaves like the
+        yogi step counter)."""
+        if (self.d_pad != self.d and np.ndim(a)
+                and np.shape(a)[-1] == self.d_pad):
+            return a[..., :self.d]
+        return a
 
     # ------------------------------------------------------------------
     def run(self, transfer_guard: bool = False):
@@ -1391,7 +1461,7 @@ class RoundPipeline:
         else:
             rows = np.asarray([self.placement.flat_row(i)
                                for i in cells], np.int32)
-            eval_params = self.params.reshape(-1, self.d)
+            eval_params = self.params.reshape(-1, self.d_pad)
         packed = np.concatenate([rows,
                                  self.sub_idx[np.asarray(cells)]])
         packed = (jax.device_put(packed) if self.mesh is None
@@ -1420,36 +1490,46 @@ class RoundPipeline:
         rows are gathered off the device cache and re-seated on resume
         (slot ids never affect values, only placement)."""
         sims = self.sims
+        # parameter / optimizer rows leave at the engine's true-D width
+        # (the padded tail is derivable zero); stale rows stay at the
+        # cache width — a resume rebuilds the pipeline from the same cfg,
+        # so the re-seating cache has the identical d_pad
+        unpad = lambda a: a[..., :self.d]
         if self.mesh is None:
             params_np = np.asarray(jax.device_get(self.params))
             cache_np = np.asarray(jax.device_get(self.cache.rows))
             opt_np = (jax.tree.map(lambda a: np.asarray(jax.device_get(a)),
                                    self.opt_state) if self.yogi else None)
-            row_of = lambda i: params_np[i]
-            opt_of = ((lambda i: jax.tree.map(lambda a: a[i], opt_np))
-                      if self.yogi else (lambda i: None))
+            row_of = lambda i: unpad(params_np[i])
+            opt_of = ((lambda i: jax.tree.map(
+                lambda a: self._unpad_leaf(a[i]), opt_np))
+                if self.yogi else (lambda i: None))
             slot_row = lambda slot: cache_np[slot]
         else:
-            flat = np.asarray(jax.device_get(self.params)).reshape(-1, self.d)
+            flat = unpad(np.asarray(
+                jax.device_get(self.params)).reshape(-1, self.d_pad))
             cache_np = np.asarray(
-                jax.device_get(self.cache_rows)).reshape(-1, self.d)
+                jax.device_get(self.cache_rows)).reshape(-1, self.d_pad)
             rows_loc = self.accounts.capacity + 1
             opt_np = (jax.tree.map(lambda a: np.asarray(jax.device_get(a)),
                                    self.opt_state) if self.yogi else None)
 
             def row_of(i):
                 if i in self._saved:
-                    return np.asarray(self._saved[i][0])
+                    return unpad(np.asarray(self._saved[i][0]))
                 return flat[self.placement.flat_row(i)]
 
             def opt_of(i):
                 if not self.yogi:
                     return None
                 if i in self._saved:
-                    return jax.tree.map(np.asarray, self._saved[i][1])
+                    return jax.tree.map(
+                        lambda a: self._unpad_leaf(np.asarray(a)),
+                        self._saved[i][1])
                 fr = self.placement.flat_row(i)
                 return jax.tree.map(
-                    lambda a: a.reshape((-1,) + a.shape[2:])[fr], opt_np)
+                    lambda a: self._unpad_leaf(
+                        a.reshape((-1,) + a.shape[2:])[fr]), opt_np)
 
             slot_row = lambda sl: cache_np[sl[0] * rows_loc + sl[1]]
         payload_sims = []
@@ -1495,7 +1575,6 @@ class RoundPipeline:
     def _repack(self, new_pl, live) -> None:
         from repro.sweeps.sharding import reshard_rows
         old_pl = self.placement
-        d = self.d
         self.stats.dispatches["repack"] += 1
 
         # 1. save the evicted (done) cells' final rows to host — their
@@ -1573,25 +1652,27 @@ class RoundPipeline:
         accts = []
         if self.mesh is None:
             for i, sim in enumerate(self.sims):
-                sim.flat_params = self.params[i]
+                sim.flat_params = self.params[i, :self.d]
                 if self.yogi:
-                    sim.flat_opt_state = jax.tree.map(lambda x: x[i],
-                                                      self.opt_state)
+                    sim.flat_opt_state = jax.tree.map(
+                        lambda x: self._unpad_leaf(x[i]), self.opt_state)
                 accts.append(sim._finalize())
             return accts
-        flat = self.params.reshape(-1, self.d)
+        flat = self.params.reshape(-1, self.d_pad)
         for i, sim in enumerate(self.sims):
             if i in self._saved:
                 row, opt_row = self._saved[i]
-                sim.flat_params = jnp.asarray(row)
-                if self.yogi:
-                    sim.flat_opt_state = jax.tree.map(jnp.asarray, opt_row)
-            else:
-                fr = self.placement.flat_row(i)
-                sim.flat_params = flat[fr]
+                sim.flat_params = jnp.asarray(row)[:self.d]
                 if self.yogi:
                     sim.flat_opt_state = jax.tree.map(
-                        lambda a: a.reshape((-1,) + a.shape[2:])[fr],
+                        lambda a: self._unpad_leaf(jnp.asarray(a)), opt_row)
+            else:
+                fr = self.placement.flat_row(i)
+                sim.flat_params = flat[fr, :self.d]
+                if self.yogi:
+                    sim.flat_opt_state = jax.tree.map(
+                        lambda a: self._unpad_leaf(
+                            a.reshape((-1,) + a.shape[2:])[fr]),
                         self.opt_state)
             accts.append(sim._finalize())
         return accts

@@ -83,21 +83,34 @@ def main(argv=None) -> None:
                     help="race selection strategies: replaces the demo grid's "
                          "policy axis with a selector axis (comma list from "
                          "the repro.selection zoo; see --list-selectors)")
+    ap.add_argument("--model", default=None, metavar="A,B",
+                    help="add a learner-model sweep axis (comma list from "
+                         "the repro.learners zoo; see --list-models; LM "
+                         "models need --benchmark tokens)")
+    ap.add_argument("--benchmark", default=None, metavar="B",
+                    help="override the grid's benchmark (classifier: speech/"
+                         "cifar10/openimage; LM: tokens/tokens_skew)")
     ap.add_argument("--list-selectors", action="store_true",
                     help="print the registered selector strategy table "
                          "(name, cadence, knobs) and exit")
     ap.add_argument("--list-aggregators", action="store_true",
                     help="print the registered robust-aggregator strategy "
                          "table and exit")
+    ap.add_argument("--list-models", action="store_true",
+                    help="print the registered learner-model strategy table "
+                         "(name, family, data kind, kernel, knobs) and exit")
     args = ap.parse_args(argv)
 
-    if args.list_selectors or args.list_aggregators:
+    if args.list_selectors or args.list_aggregators or args.list_models:
         if args.list_selectors:
             from repro.selection import describe_selectors
             print(describe_selectors())
         if args.list_aggregators:
             from repro.robust.aggregators import describe_aggregators
             print(describe_aggregators())
+        if args.list_models:
+            from repro.learners import describe_models
+            print(describe_models())
         return
 
     telemetry = None
@@ -147,6 +160,15 @@ def _run(args, telemetry) -> None:
     if args.attack:
         spec.axes = dict(spec.axes, attack=args.attack.split(","))
         spec.base = dict(spec.base, attack_frac=args.attack_frac)
+    if args.model:
+        spec.axes = dict(spec.axes, model=args.model.split(","))
+    if args.benchmark:
+        base = dict(spec.base, benchmark=args.benchmark)
+        # token benchmarks own their data-to-learner mapping (the shard
+        # structure); drop a classifier-grid mapping axis value silently
+        if args.benchmark in ("tokens", "tokens_skew"):
+            base.pop("mapping", None)
+        spec.base = base
     cells = spec.expand()
     if args.rounds_per_dispatch != 1:
         cells = [dataclasses.replace(c, config=dataclasses.replace(

@@ -60,8 +60,14 @@ def _selector_axis(v):
     return {"selector": _check(v, tuple(SELECTOR_TABLE), "selector")}
 
 
+def _model_axis(v):
+    from repro.learners import MODEL_TABLE
+    return {"model": _check(v, tuple(MODEL_TABLE), "model")}
+
+
 register_axis("policy", lambda v: dict(POLICIES[v]))
 register_axis("selector", _selector_axis)
+register_axis("model", _model_axis)
 register_axis("saa", lambda v: {"saa": bool(v)})
 register_axis("apt", lambda v: {"apt": bool(v)})
 register_axis("hardware", lambda v: {"hardware_scenario": _check(

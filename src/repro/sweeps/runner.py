@@ -76,11 +76,14 @@ def compat_key(cfg) -> tuple:
 
 
 @functools.lru_cache(maxsize=8)
-def _packed_train_fn(spec, lr, prox_mu):
+def _packed_train_fn(spec, lr, prox_mu, loss=ln._xent):
     """One compiled program trains every cell's cohort: rows (R,) index the
-    owning cell, whose flat parameters are gathered per row."""
+    owning cell, whose flat parameters are gathered per row.  ``loss`` is
+    the model objective off the MODEL_TABLE build (a stable object —
+    ``build_model`` caches — so it is a sound lru key; ``model_key`` lives
+    in ``compat_key``, keeping batches model-uniform)."""
     step = functools.partial(ln.local_train_flat, spec=spec, lr=lr,
-                             prox_mu=prox_mu)
+                             prox_mu=prox_mu, loss=loss)
 
     def f(flat_params, cell_rows, bx, by):
         return jax.vmap(step)(flat_params[cell_rows], bx, by)
@@ -89,21 +92,21 @@ def _packed_train_fn(spec, lr, prox_mu):
 
 
 @functools.lru_cache(maxsize=8)
-def _sweep_eval_shared_fn(spec):
+def _sweep_eval_shared_fn(spec, evaluate=ln.evaluate):
     """Batched eval, one test set shared by every cell (the common
     shared-seed case): no per-cell gather or duplication at all."""
     def ev(flat, x, y):
-        return ln.evaluate(unflatten_update(flat, spec), x, y)
+        return evaluate(unflatten_update(flat, spec), x, y)
 
     return jax.jit(jax.vmap(ev, in_axes=(0, None, None)))
 
 
 @functools.lru_cache(maxsize=8)
-def _sweep_eval_fn(spec):
+def _sweep_eval_fn(spec, evaluate=ln.evaluate):
     """Batched eval over mixed substrates; cells index into the batch's
     *unique* test sets (cells sharing a substrate share one host copy)."""
     def ev(flat, i, x_u, y_u):
-        return ln.evaluate(unflatten_update(flat, spec), x_u[i], y_u[i])
+        return evaluate(unflatten_update(flat, spec), x_u[i], y_u[i])
 
     return jax.jit(jax.vmap(ev, in_axes=(0, 0, None, None)))
 
@@ -259,9 +262,10 @@ class SweepRunner:
         s_total = len(sims)
         spec = sims[0]._flat_spec
         d = len(np.asarray(sims[0].flat_params))
-        train = _packed_train_fn(spec, cfg0.local_lr, cfg0.prox_mu)
-        eval_fn = _sweep_eval_shared_fn(spec)
-        eval_fn_mixed = _sweep_eval_fn(spec)
+        fns = sims[0]._model_fns
+        train = _packed_train_fn(spec, cfg0.local_lr, cfg0.prox_mu, fns.loss)
+        eval_fn = _sweep_eval_shared_fn(spec, fns.evaluate)
+        eval_fn_mixed = _sweep_eval_fn(spec, fns.evaluate)
         flat_params = jnp.stack([sim.flat_params for sim in sims])
         yogi = cfg0.server_opt == "yogi"
         opt_state = (jax.tree.map(lambda *xs: jnp.stack(xs),
